@@ -1,0 +1,72 @@
+"""Benchmark helpers: the paper's progress-latency methodology (§4.1).
+
+A dummy task completes at a preset wall-clock deadline; *progress
+latency* is the elapsed time between the deadline and the moment the
+engine's poll observes it (the paper's metric, in microseconds).
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+from repro.core import DONE, NOPROGRESS, ProgressEngine, Stream
+
+
+class LatencyStats:
+    def __init__(self):
+        self.samples_us: list[float] = []
+
+    def add(self, seconds: float):
+        self.samples_us.append(seconds * 1e6)
+
+    def mean(self) -> float:
+        return statistics.fmean(self.samples_us) if self.samples_us else float("nan")
+
+    def p99(self) -> float:
+        if not self.samples_us:
+            return float("nan")
+        s = sorted(self.samples_us)
+        return s[min(int(0.99 * len(s)), len(s) - 1)]
+
+
+def make_dummy_task(duration_s: float, stats: LatencyStats, counter: dict,
+                    poll_delay_s: float = 0.0):
+    """Paper Listing 1.3 dummy task + latency stat."""
+    deadline = time.perf_counter() + duration_s
+
+    def poll(thing):
+        now = time.perf_counter()
+        if now >= deadline:
+            stats.add(now - deadline)
+            counter["n"] -= 1
+            return DONE
+        if poll_delay_s > 0:
+            t0 = time.perf_counter()
+            while time.perf_counter() - t0 < poll_delay_s:
+                pass                      # busy delay (paper Fig 8)
+        return NOPROGRESS
+    return poll
+
+
+def run_pending_tasks(engine: ProgressEngine, n_tasks: int,
+                      duration_s: float = 0.002,
+                      poll_delay_s: float = 0.0,
+                      stream: Stream | None = None,
+                      repeats: int = 5) -> LatencyStats:
+    stats = LatencyStats()
+    for _ in range(repeats):
+        counter = {"n": n_tasks}
+        for _ in range(n_tasks):
+            engine.async_start(
+                make_dummy_task(duration_s, stats, counter, poll_delay_s),
+                None, stream)
+        t0 = time.perf_counter()
+        while counter["n"] > 0:
+            engine.progress(stream)
+            if time.perf_counter() - t0 > 30:
+                raise TimeoutError
+    return stats
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.3f},{derived}"

@@ -1,0 +1,56 @@
+"""Kernel-substrate benchmarks on CPU: XLA-path (chunked online-softmax /
+SSD) wall time + equivalence sanity vs naive formulations.
+
+Interpret-mode Pallas timing is meaningless (Python interpreter), so the
+perf rows time the XLA formulations the kernels mirror; the Pallas
+kernels themselves are validated for correctness in tests/.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import row
+from repro.kernels import ref
+from repro.models import layers as L
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    B, S, H, KVH, hd = 1, 1024, 4, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KVH, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KVH, hd), jnp.float32)
+
+    naive = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
+    chunked = jax.jit(lambda q, k, v: L.attention(q, k, v, causal=True, chunk=256))
+    rows.append(row("attention_naive_1k", _time(naive, q, k, v), "materializes SxS"))
+    rows.append(row("attention_chunked_1k", _time(chunked, q, k, v),
+                    "flash-equivalent dataflow"))
+
+    # SSD vs attention at long seq (sub-quadratic vs quadratic scaling)
+    from repro.models import mamba as M
+    from repro.configs import get_config
+    from tests.conftest import reduce_cfg
+    cfg = reduce_cfg(get_config("mamba2-1.3b"), d_model=64)
+    bp = M.init_params(cfg, key)["blocks"]
+    bp1 = jax.tree.map(lambda a: a[0], bp)
+    for s in (1024, 4096):
+        x = jax.random.normal(key, (1, s, 64), jnp.bfloat16)
+        f = jax.jit(lambda x: M.block_forward(bp1, cfg, x))
+        rows.append(row(f"ssd_block_seq{s}", _time(f, x), "O(S) scan"))
+    return rows

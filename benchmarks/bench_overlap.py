@@ -1,0 +1,54 @@
+"""Computation/communication-overlap demonstration (paper Fig 4/5).
+
+Host-level, measurable on this container: a JAX computation dispatched
+asynchronously overlaps with checkpoint I/O driven by the progress
+engine.  Serial = compute then save; overlapped = dispatch compute,
+drive engine progress (I/O advances) until the device result is ready.
+The saved wall time is the paper's overlap win.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import row
+from repro.core import ProgressEngine, jax_future
+from repro.train.checkpoint import AsyncCheckpointer
+
+
+def run():
+    rows = []
+    n = 1024
+    compute = jax.jit(lambda x: jnp.linalg.matrix_power(x @ x.T, 4).sum())
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, n))
+    compute(x).block_until_ready()    # warm compile
+
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(1), (512, 4096))}
+
+    with tempfile.TemporaryDirectory() as d:
+        eng = ProgressEngine()
+        ck = AsyncCheckpointer(d, eng)
+        # serial: compute, then save
+        t0 = time.perf_counter()
+        compute(x).block_until_ready()
+        req = ck.save_async(0, tree)
+        eng.wait(req, timeout=60)
+        serial = time.perf_counter() - t0
+
+        # overlapped: dispatch compute, save advances via progress
+        t0 = time.perf_counter()
+        y = compute(x)                 # async dispatch
+        req = ck.save_async(1, tree)
+        fut = jax_future(eng, y)
+        while not (fut.is_complete and req.is_complete):
+            eng.progress()
+        overlapped = time.perf_counter() - t0
+
+    rows.append(row("overlap_serial_compute_plus_ckpt", serial * 1e6, ""))
+    rows.append(row("overlap_engine_driven", overlapped * 1e6,
+                    f"saved={100 * (1 - overlapped / serial):.0f}%"))
+    return rows

@@ -1,0 +1,167 @@
+"""Paper Figs 7–12: progress-engine microbenchmarks."""
+from __future__ import annotations
+
+import threading
+import time
+
+from benchmarks._util import LatencyStats, make_dummy_task, row, run_pending_tasks
+from repro.core import (DONE, NOPROGRESS, CompletionWatcher, ProgressEngine,
+                        Request, TaskQueue)
+
+
+def fig7_latency_vs_pending():
+    """Latency overhead as #independent pending tasks grows (paper: <0.5µs
+    below 32 tasks, then linear growth)."""
+    rows = []
+    for n in (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024):
+        eng = ProgressEngine()
+        stats = run_pending_tasks(eng, n, duration_s=0.002, repeats=3)
+        rows.append(row(f"fig7_pending_{n}", stats.mean(),
+                        f"p99={stats.p99():.1f}us"))
+    return rows
+
+
+def fig8_poll_overhead():
+    """Latency vs per-poll busy delay; 10 concurrent tasks (paper Fig 8)."""
+    rows = []
+    for delay_us in (0, 1, 5, 10, 50, 100):
+        eng = ProgressEngine()
+        stats = run_pending_tasks(eng, 10, duration_s=0.002,
+                                  poll_delay_s=delay_us * 1e-6, repeats=3)
+        rows.append(row(f"fig8_polldelay_{delay_us}us", stats.mean(), ""))
+    return rows
+
+
+def fig9_thread_contention():
+    """k threads all progressing the SAME (default) stream — the
+    MPI_THREAD_MULTIPLE pathology (paper Fig 9)."""
+    rows = []
+    for k in (1, 2, 4, 8):
+        eng = ProgressEngine()
+        stats = LatencyStats()
+        counter = {"n": 10 * k}
+        for _ in range(10 * k):
+            eng.async_start(make_dummy_task(0.002, stats, counter))
+        stop = threading.Event()
+
+        def spin():
+            while not stop.is_set() and counter["n"] > 0:
+                eng.progress()
+
+        threads = [threading.Thread(target=spin) for _ in range(k)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        while counter["n"] > 0 and time.perf_counter() - t0 < 30:
+            time.sleep(0.0002)
+        stop.set()
+        for t in threads:
+            t.join()
+        rows.append(row(f"fig9_threads_shared_{k}", stats.mean(), ""))
+    return rows
+
+
+def fig10_task_class():
+    """All tasks behind ONE TaskQueue poll hook, completing in order at
+    staggered intervals (paper Listing 1.4): latency flat vs count,
+    because each progress call inspects only the queue head."""
+    rows = []
+    interval = 100e-6
+    for n in (1, 8, 64, 512, 2048):
+        eng = ProgressEngine()
+        q = TaskQueue(eng)
+        stats = LatencyStats()
+        base = time.perf_counter() + 0.001
+        done = {"n": n}
+
+        def mk(i):
+            deadline = base + i * interval
+
+            def ready():
+                return time.perf_counter() >= deadline
+
+            def on_complete():
+                stats.add(time.perf_counter() - deadline)
+                done["n"] -= 1
+            return ready, on_complete
+
+        for i in range(n):
+            r, c = mk(i)
+            q.submit(r, c)
+        t0 = time.perf_counter()
+        while done["n"] > 0:
+            eng.progress()
+            if time.perf_counter() - t0 > 30:
+                raise TimeoutError
+        # only the head is checked per sweep: latency independent of n
+        rows.append(row(f"fig10_taskclass_{n}", stats.mean(), ""))
+    return rows
+
+
+def fig11_streams():
+    """k threads, each with its OWN stream: no contention (paper Fig 11)."""
+    rows = []
+    for k in (1, 2, 4, 8):
+        eng = ProgressEngine()
+        stats = LatencyStats()
+        errors = []
+
+        def worker():
+            try:
+                s = eng.stream()
+                counter = {"n": 10}
+                for _ in range(10):
+                    eng.async_start(make_dummy_task(0.002, stats, counter),
+                                    None, s)
+                t0 = time.perf_counter()
+                while counter["n"] > 0:
+                    eng.progress(s)
+                    if time.perf_counter() - t0 > 30:
+                        raise TimeoutError
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker) for _ in range(k)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        rows.append(row(f"fig11_streams_{k}", stats.mean(), ""))
+    return rows
+
+
+def fig12_request_query():
+    """Overhead of the completion-event query loop vs #pending requests
+    (paper Fig 12: negligible below ~256)."""
+    rows = []
+    for n in (1, 16, 64, 256, 1024):
+        eng = ProgressEngine()
+        w = CompletionWatcher(eng)
+        reqs = [Request() for _ in range(n)]
+        fired = []
+        for r in reqs:
+            w.watch(r, lambda rr: fired.append(1))
+        # measure pure sweep cost with nothing complete
+        t0 = time.perf_counter()
+        iters = 200
+        for _ in range(iters):
+            eng.progress()
+        sweep_us = (time.perf_counter() - t0) / iters * 1e6
+        for r in reqs:
+            r.complete()
+        eng.progress()
+        assert len(fired) == n
+        rows.append(row(f"fig12_query_{n}", sweep_us, "per-progress sweep"))
+    return rows
+
+
+def run():
+    rows = []
+    rows += fig7_latency_vs_pending()
+    rows += fig8_poll_overhead()
+    rows += fig9_thread_contention()
+    rows += fig10_task_class()
+    rows += fig11_streams()
+    rows += fig12_request_query()
+    return rows

@@ -1,0 +1,43 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Sections:
+  figs 7-12  progress-engine microbenchmarks (paper §4.2-§4.5)
+  fig 13     user-level allreduce vs native (paper §4.7; 8-device child)
+  overlap    computation/communication overlap (paper §2.3 thesis)
+  kernels    substrate formulation timings
+Roofline tables (the TPU-target performance report) are produced by the
+dry-run: ``python -m repro.launch.dryrun`` + EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import bench_progress, bench_user_allreduce, bench_overlap, \
+        bench_kernels
+
+    print("name,us_per_call,derived")
+    sections = [
+        ("progress (figs 7-12)", bench_progress.run),
+        ("user allreduce (fig 13)", bench_user_allreduce.run),
+        ("overlap", bench_overlap.run),
+        ("kernels", bench_kernels.run),
+    ]
+    failed = 0
+    for name, fn in sections:
+        print(f"# --- {name} ---")
+        try:
+            for r in fn():
+                print(r, flush=True)
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"# SECTION FAILED: {name}", flush=True)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

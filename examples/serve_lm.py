@@ -1,0 +1,61 @@
+"""Event-driven continuous-batching server demo (paper §2.7 applied).
+
+Requests arrive while the engine runs; admission, prefill, fused decode
+and completion events are all async tasks on ONE progress engine — no
+per-request threads, no blocking waits.
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 6 --slots 3
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import ProgressEngine
+from repro.models import registry
+from repro.serve.engine import GenRequest, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config("qwen2-0.5b").with_overrides(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, remat_policy="none")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ProgressEngine()
+    srv = ServeEngine(cfg, params, eng, batch_slots=args.slots, max_seq=64)
+
+    rng = np.random.RandomState(0)
+    reqs = []
+    for i in range(args.requests):
+        prompt = rng.randint(1, 250, size=rng.randint(2, 6)).astype(np.int32)
+        r = GenRequest(f"req{i}", prompt, max_new_tokens=args.max_new)
+        srv.submit(r)
+        reqs.append(r)
+        # interleave arrivals with progress (requests land mid-flight)
+        for _ in range(20):
+            eng.progress()
+
+    srv.run_until_idle(timeout=300)
+    print(f"{'request':8s} {'prompt':>7s} {'out tokens':32s} "
+          f"{'ttft(ms)':>9s} {'total(ms)':>9s}")
+    for r in reqs:
+        ttft = (r.first_token_at - r.submitted_at) * 1e3
+        total = (r.finished_at - r.submitted_at) * 1e3
+        print(f"{r.request_id:8s} {len(r.prompt):7d} "
+              f"{str(r.out_tokens):32s} {ttft:9.1f} {total:9.1f}")
+    print(f"decode steps (fused over slots): {srv.steps} "
+          f"for {sum(len(r.out_tokens) for r in reqs)} generated tokens "
+          f"-> continuous batching factor "
+          f"{sum(len(r.out_tokens) for r in reqs) / max(srv.steps, 1):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

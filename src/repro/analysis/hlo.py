@@ -1,0 +1,305 @@
+"""Post-optimization HLO text analyzer.
+
+``compiled.cost_analysis()`` visits a ``while`` body ONCE (verified on
+this JAX/XLA build), so scanned-layer models under-report FLOPs/bytes by
+a factor of the layer count.  This parser walks the compiled module text,
+computes per-computation costs, and multiplies ``while`` bodies by their
+``backend_config known_trip_count`` — giving corrected:
+
+* ``flops``            — dot (2·M·N·K) + elementwise + reduce
+* ``bytes``            — HBM-traffic proxy: operand+result bytes of
+  top-level (unfused) ops; fusion bodies are *not* double counted
+* ``collective_bytes`` — per collective type: operand bytes of every
+  all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute (async ``-start`` counted once), with trip-count
+  multipliers applied
+
+All values are PER DEVICE (post-SPMD HLO is the per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "tanh", "negate", "abs", "log", "rsqrt", "sqrt", "select",
+    "compare", "and", "or", "xor", "not", "floor", "ceil", "sign", "cosine",
+    "sine", "atan2", "remainder", "exponential-minus-one", "log-plus-one",
+    "logistic", "clamp", "convert",
+}
+
+
+def _parse_shapes(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    """Parse 'f32[4,16]{1,0}' or '(s32[], f32[4,16])' into [(dtype, dims)]."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _nelems(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    opcode: str
+    result: list               # [(dtype, shape)]
+    operands: list[str]
+    line: str
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    coll_bytes: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    dynamic_while: bool = False
+
+    def scaled(self, k: float) -> "CompCost":
+        c = CompCost(self.flops * k, self.bytes * k, self.transcendentals * k)
+        c.coll_bytes = defaultdict(float, {t: v * k for t, v in self.coll_bytes.items()})
+        c.dynamic_while = self.dynamic_while
+        return c
+
+    def add(self, other: "CompCost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.transcendentals += other.transcendentals
+        for t, v in other.coll_bytes.items():
+            self.coll_bytes[t] += v
+        self.dynamic_while |= other.dynamic_while
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur_name, cur_lines = None, []
+    entry_name = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$", stripped)
+        if m and not stripped.startswith("//"):
+            cur_name = m.group(2)
+            cur_lines = []
+            comps[cur_name] = cur_lines
+            if m.group(1):
+                entry_name = cur_name
+            continue
+        if stripped.startswith("}"):
+            cur_name = None
+            continue
+        if cur_name is not None and stripped:
+            cur_lines.append(stripped)
+    comps["__entry__"] = comps.get(entry_name, [])
+    if entry_name:
+        comps["__entry_name__"] = [entry_name]  # type: ignore
+    return comps
+
+
+def _opcode_of(rhs: str) -> str:
+    # rhs like: 'f32[4,16]{1,0} dot(%a, %b), lhs_contracting_dims=...'
+    m = re.match(r"^(?:\([^)]*\)|[\w\[\]{},\d/ *]+?)\s+([\w\-]+)\(", rhs)
+    if m:
+        return m.group(1)
+    return ""
+
+
+def _parse_ops(lines: list[str]) -> list[OpInfo]:
+    ops = []
+    for line in lines:
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        opcode = _opcode_of(rhs)
+        if not opcode:
+            continue
+        # result type = text before the opcode token
+        idx = rhs.find(f" {opcode}(")
+        type_str = rhs[:idx] if idx > 0 else rhs
+        result = _parse_shapes(type_str)
+        # operands: %refs inside the first (...) after opcode
+        paren = rhs[rhs.find(opcode + "(") + len(opcode):]
+        depth, end = 0, 0
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        arglist = paren[1:end] if end else ""
+        operands = _OPERAND_RE.findall(arglist)
+        ops.append(OpInfo(name, opcode, result, operands, line))
+    return ops
+
+
+def _dot_flops(op: OpInfo, symtab) -> float:
+    out_elems = _nelems(op.result)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    if not m or not op.operands:
+        return 2.0 * out_elems  # unknown: degenerate
+    lhs = symtab.get(op.operands[0])
+    if not lhs:
+        return 2.0 * out_elems
+    lhs_shape = lhs[0][1]
+    k = 1
+    for d in m.group(1).split(","):
+        if d and int(d) < len(lhs_shape):
+            k *= lhs_shape[int(d)]
+    return 2.0 * out_elems * k
+
+
+def analyze(text: str) -> dict:
+    comps = _split_computations(text)
+    entry_name = comps.get("__entry_name__", [None])[0]
+    cache: dict[str, CompCost] = {}
+
+    def comp_cost(name: str, stack=()) -> CompCost:
+        if name in cache:
+            return cache[name]
+        if name in stack or name not in comps:
+            return CompCost()
+        lines = comps[name]
+        ops = _parse_ops(lines)
+        symtab = {op.name: op.result for op in ops}
+        cost = CompCost()
+        for op in ops:
+            oc = op.opcode
+            if oc == "while":
+                body_m = _CALLED_RE.search(op.line)
+                cond_m = _COND_RE.search(op.line)
+                trip_m = _TRIP_RE.search(op.line)
+                trips = int(trip_m.group(1)) if trip_m else 1
+                if not trip_m:
+                    cost.dynamic_while = True
+                if body_m:
+                    cost.add(comp_cost(body_m.group(1), stack + (name,)).scaled(trips))
+                if cond_m:
+                    cost.add(comp_cost(cond_m.group(1), stack + (name,)).scaled(trips))
+                cost.bytes += _nbytes(op.result)
+                continue
+            if oc in ("fusion", "call"):
+                cm = _CALLED_RE.search(op.line)
+                if cm:
+                    sub = comp_cost(cm.group(1), stack + (name,))
+                    # FLOPs recurse; bytes = fusion boundary traffic only
+                    cost.flops += sub.flops
+                    cost.transcendentals += sub.transcendentals
+                    for t, v in sub.coll_bytes.items():
+                        cost.coll_bytes[t] += v
+                op_bytes = _nbytes(op.result) + sum(
+                    _nbytes(symtab.get(o, [])) for o in op.operands)
+                cost.bytes += op_bytes
+                continue
+            if oc == "conditional":
+                branches = re.findall(r"(?:true_computation|false_computation|branch_computations)=\{?%?([\w.\-,% ]+)\}?", op.line)
+                subcosts = []
+                for b in branches:
+                    for nm in re.findall(r"[\w.\-]+", b):
+                        subcosts.append(comp_cost(nm, stack + (name,)))
+                if subcosts:
+                    worst = max(subcosts, key=lambda c: c.flops)
+                    cost.add(worst)
+                continue
+            is_coll = None
+            for c in COLLECTIVES:
+                if oc == c or oc == c + "-start":
+                    is_coll = c
+                    break
+                if oc == c + "-done":
+                    is_coll = "skip"
+                    break
+            if is_coll == "skip":
+                continue
+            if is_coll:
+                operand_bytes = sum(_nbytes(symtab.get(o, [])) for o in op.operands)
+                if operand_bytes == 0:
+                    operand_bytes = _nbytes(op.result)
+                cost.coll_bytes[is_coll] += operand_bytes
+                cost.bytes += operand_bytes + _nbytes(op.result)
+                continue
+            if oc in ("parameter", "constant", "tuple", "get-tuple-element",
+                      "bitcast", "after-all", "partition-id", "replica-id",
+                      "iota"):
+                continue
+            if oc == "dot":
+                cost.flops += _dot_flops(op, symtab)
+                cost.bytes += _nbytes(op.result) + sum(
+                    _nbytes(symtab.get(o, [])) for o in op.operands)
+                continue
+            if oc == "convolution":
+                # 2 * out_elems * kernel_elems / out_channels (approx)
+                out_elems = _nelems(op.result)
+                k_elems = _nelems(symtab.get(op.operands[1], [])) if len(op.operands) > 1 else 1
+                out_ch = op.result[0][1][-1] if op.result and op.result[0][1] else 1
+                cost.flops += 2.0 * out_elems * max(k_elems // max(out_ch, 1), 1)
+                cost.bytes += _nbytes(op.result) + sum(
+                    _nbytes(symtab.get(o, [])) for o in op.operands)
+                continue
+            # default: elementwise-ish / data movement
+            out_elems = _nelems(op.result)
+            if oc in _ELEMENTWISE:
+                cost.flops += out_elems
+                if oc in ("exponential", "tanh", "log", "logistic", "power",
+                          "rsqrt", "sqrt", "cosine", "sine"):
+                    cost.transcendentals += out_elems
+            elif oc in ("reduce", "reduce-window"):
+                in_elems = sum(_nelems(symtab.get(o, [])) for o in op.operands[:1])
+                cost.flops += in_elems
+            cost.bytes += _nbytes(op.result) + sum(
+                _nbytes(symtab.get(o, [])) for o in op.operands)
+        cache[name] = cost
+        return cost
+
+    total = comp_cost(entry_name) if entry_name else CompCost()
+    return {
+        "flops": total.flops,
+        "bytes": total.bytes,
+        "transcendentals": total.transcendentals,
+        "collective_bytes": dict(total.coll_bytes),
+        "collective_bytes_total": float(sum(total.coll_bytes.values())),
+        "dynamic_while": total.dynamic_while,
+    }

@@ -1,0 +1,89 @@
+"""Render dry-run JSONL results as the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def load(path: str) -> list[dict]:
+    with open(path) as f:
+        return [json.loads(l) for l in f if l.strip()]
+
+
+def fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    if b >= 1e12:
+        return f"{b / 1e12:.2f}TB"
+    if b >= 1e9:
+        return f"{b / 1e9:.2f}GB"
+    if b >= 1e6:
+        return f"{b / 1e6:.1f}MB"
+    return f"{b / 1e3:.0f}KB"
+
+
+def fmt_s(x) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.0f}µs"
+
+
+def roofline_table(rows: list[dict], mesh: str) -> str:
+    out = ["| arch | shape | dominant | compute | memory | collective | "
+           "frac | useful | mem/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok" or r["mesh"] != mesh:
+            continue
+        rl = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | **{rl['dominant']}** "
+            f"| {fmt_s(rl['compute_s'])} | {fmt_s(rl['memory_s'])} "
+            f"| {fmt_s(rl['collective_s'])} | {rl['roofline_fraction']:.3f} "
+            f"| {rl['useful_ratio']:.3f} "
+            f"| {fmt_bytes(r['memory']['bytes_in_use_per_device'])} |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows: list[dict]) -> str:
+    out = ["| arch | shape | mesh | status | compile | FLOPs/dev | "
+           "coll bytes/dev (AG/AR/RS/A2A/CP) | mem/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"SKIP ({r['reason'][:40]}…) | | | | |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"ERROR | | | | |")
+            continue
+        rl = r["roofline"]
+        cb = rl["coll_by_type"]
+        coll = "/".join(fmt_bytes(cb.get(k, 0)) for k in
+                        ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r['compile_s']}s | {rl['flops_per_device']:.3g} "
+            f"| {coll} | {fmt_bytes(r['memory']['bytes_in_use_per_device'])} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_baseline.jsonl")
+    which = sys.argv[2] if len(sys.argv) > 2 else "roofline"
+    if which == "roofline":
+        print("### Single-pod (16×16 = 256 chips)\n")
+        print(roofline_table(rows, "16x16"))
+        print("\n### Multi-pod (2×16×16 = 512 chips)\n")
+        print(roofline_table(rows, "2x16x16"))
+    else:
+        print(dryrun_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes / collective_bytes come from
+:mod:`repro.analysis.hlo` (per-device values; we scale to global by chip
+count so the formulas above apply verbatim).  Hardware constants: TPU
+v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis import hlo as hlo_mod
+from repro.launch.mesh import TPU_V5E
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device HLO quantities
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_by_type: dict
+    # terms (seconds)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    # usefulness
+    model_flops: float
+    hlo_flops_global: float
+    useful_ratio: float
+    # memory fit
+    bytes_in_use_per_device: float | None = None
+    dynamic_while: bool = False
+    # CPU-HLO parsed bytes are fusion-pessimistic (XLA:CPU fuses less than
+    # XLA:TPU, so elementwise temporaries that would stay in VMEM/registers
+    # on TPU appear as HBM traffic).  memory_s above uses the analytical
+    # traffic model; this field keeps the parsed upper bound.
+    memory_s_hlo_upper: float = 0.0
+    bytes_analytical: float = 0.0
+
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """Fraction of the roofline bound that is useful compute."""
+        useful_compute_s = (self.model_flops /
+                            (self.chips * TPU_V5E["peak_flops_bf16"]))
+        return useful_compute_s / max(self.bound_s(), 1e-30)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        d["bound_s"] = self.bound_s()
+        d["roofline_fraction"] = self.roofline_fraction()
+        return d
+
+
+def analytical_bytes(cfg, shape, chips: int, mesh_shape: dict,
+                     weight_bytes: float = 2.0) -> float:
+    """Per-device HBM traffic model for one step (TPU-fused assumptions).
+
+    Counts: parameter streams (fwd read + bwd read + grad write + optimizer
+    read-modify-write of two f32 moments + f32 master params), layer-
+    boundary activations (write fwd, read bwd, plus one remat re-read),
+    flash-attention q/k/v/o traffic, logits, and KV-cache traffic for
+    decode.  Elementwise temporaries are assumed fused (VMEM-resident).
+    """
+    from repro.models import registry
+    B, S = shape.global_batch, shape.seq_len
+    D = cfg.d_model
+    n_params = registry.param_count(cfg)
+    dp = 1
+    for ax in ("pod", "data"):
+        dp *= mesh_shape.get(ax, 1)
+    tp = mesh_shape.get("model", 1)
+    params_local = n_params / chips  # FSDP+TP shards params over all chips
+    b_loc = max(B / dp, 1)
+    act_layers = cfg.num_layers + cfg.num_encoder_layers
+
+    if shape.kind == "train":
+        # params: bf16 fwd+bwd reads (2x2B) + grad f32 w (4) + master f32
+        # r/w (8) + two moments f32 r/w (16) = 32 B/param
+        t = params_local * 32.0
+        # layer-boundary activations: fwd write + bwd read + remat re-read
+        t += act_layers * b_loc * S * D * 2 * 3
+        # flash attention q/k/v/o streams (fwd + bwd ~2x)
+        if cfg.num_heads:
+            hd = cfg.resolved_head_dim()
+            att = (cfg.num_layers if cfg.family != "hybrid"
+                   else cfg.num_layers // max(cfg.shared_attn_every, 1))
+            att += cfg.num_encoder_layers
+            heads_w = (cfg.num_heads + 2 * cfg.num_kv_heads) * hd
+            t += 3 * att * b_loc * S * heads_w * 2
+        # logits + loss (f32) fwd+bwd
+        t += 3 * b_loc * S * (cfg.vocab_size / tp) * 4
+        # MoE dispatched tokens
+        if cfg.moe is not None:
+            t += 3 * cfg.num_layers * b_loc * S * cfg.moe.top_k * D * 2
+        return t
+    if shape.kind == "prefill":
+        t = params_local * 2.0   # bf16 weight read
+        t += act_layers * b_loc * S * D * 2 * 1
+        if cfg.num_heads:
+            hd = cfg.resolved_head_dim()
+            heads_w = (cfg.num_heads + 2 * cfg.num_kv_heads) * hd
+            t += act_layers * b_loc * S * heads_w * 2
+        t += b_loc * S * (cfg.vocab_size / tp) * 4
+        if cfg.moe is not None:
+            t += cfg.num_layers * b_loc * S * cfg.moe.top_k * D * 2
+        return t
+    # decode: weights once (bf16=2B, int8=1B) + cache read/write
+    t = params_local * weight_bytes
+    if cfg.num_heads:
+        hd = cfg.resolved_head_dim()
+        att = (cfg.num_layers if cfg.family != "hybrid"
+               else cfg.num_layers // max(cfg.shared_attn_every, 1))
+        att += cfg.num_encoder_layers
+        kv_b = 1 if getattr(cfg, "kv_cache_dtype", "bf16") == "int8" else 2
+        cache = att * B * S * cfg.num_kv_heads * hd * kv_b * 2  # k+v read
+        t += cache / chips
+    if cfg.ssm is not None:
+        from repro.models import mamba as M
+        d_inner, nh, hp, ds = M.dims(cfg)
+        t += cfg.num_layers * B * nh * hp * ds * 4 * 2 / chips
+    t += max(B / dp, 1) * (cfg.vocab_size / tp) * 4
+    return t
+
+
+def from_compiled(compiled_text: str, *, arch: str, shape: str, mesh_name: str,
+                  chips: int, model_flops: float,
+                  bytes_in_use: float | None = None,
+                  cfg=None, shape_spec=None, mesh_shape: dict | None = None,
+                  weight_bytes: float = 2.0,
+                  hw: dict = TPU_V5E) -> Roofline:
+    h = hlo_mod.analyze(compiled_text)
+    flops_dev = h["flops"]
+    bytes_dev = h["bytes"]
+    coll_dev = h["collective_bytes_total"]
+    flops_global = flops_dev * chips
+    compute_s = flops_global / (chips * hw["peak_flops_bf16"])
+    memory_s_upper = bytes_dev * chips / (chips * hw["hbm_bytes_per_s"])
+    if cfg is not None and shape_spec is not None:
+        bytes_an = analytical_bytes(cfg, shape_spec, chips, mesh_shape or {},
+                                    weight_bytes=weight_bytes)
+    else:
+        bytes_an = bytes_dev
+    memory_s = bytes_an / hw["hbm_bytes_per_s"]
+    collective_s = coll_dev * chips / (chips * hw["ici_bytes_per_s_per_link"])
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+        coll_bytes_per_device=coll_dev, coll_by_type=h["collective_bytes"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops,
+        hlo_flops_global=flops_global,
+        useful_ratio=model_flops / max(flops_global, 1e-30),
+        bytes_in_use_per_device=bytes_in_use,
+        dynamic_while=h["dynamic_while"],
+        memory_s_hlo_upper=memory_s_upper,
+        bytes_analytical=bytes_an,
+    )

@@ -1,0 +1,93 @@
+"""Gradient compression with error feedback (distributed-optimization
+trick for the 1000+-node regime: the cross-pod (DCI) links are an order
+of magnitude slower than ICI, so the pod-axis gradient reduction is
+int8-quantized with per-bucket scales; the quantization error is fed back
+into the next step (EF-SGD), preserving convergence).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.collectives import schedules as S
+
+
+def quantize_int8(x: jax.Array, block: int = 2048):
+    """Blockwise symmetric int8 quantization. Returns (q, scales)."""
+    n = x.shape[-1]
+    pad = (-n) % block
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+    xb = xp.reshape(xp.shape[:-1] + (xp.shape[-1] // block, block))
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, orig_len: int) -> jax.Array:
+    xb = q.astype(jnp.float32) * scale
+    x = xb.reshape(xb.shape[:-2] + (-1,))
+    return x[..., :orig_len]
+
+
+def compressed_allreduce(x: jax.Array, axis: str, block: int = 2048,
+                         algorithm: str = "ring") -> jax.Array:
+    """int8 allreduce: quantize → user-schedule reduce (in f32 partial
+    sums of dequantized chunks to avoid int overflow) → result.
+
+    Traffic ≈ 1/4 of f32 + scales overhead (block 2048 → +0.2%).
+    Returns the allreduced approximation of the f32 sum.
+    """
+    n = x.shape[-1]
+    q, scale = quantize_int8(x, block)
+    # ship int8 + scales; reduce by dequantize-add on each hop.  In the
+    # SPMD formulation we express this as: dequantize locally and ring-
+    # reduce in f32 but with the *wire* tensors being (q, scale) — the
+    # compiled collective moves int8.  Implemented as reduce of deq with
+    # custom ring over the quantized pair:
+    P = S._axis_size(axis)
+    if P == 1:
+        return dequantize_int8(q, scale, n)
+    perm = [(i, (i + 1) % P) for i in range(P)]
+    acc = dequantize_int8(q, scale, n)
+    cur_q, cur_s = q, scale
+    for _ in range(P - 1):
+        cur_q = jax.lax.ppermute(cur_q, axis, perm)   # int8 on the wire
+        cur_s = jax.lax.ppermute(cur_s, axis, perm)
+        acc = acc + dequantize_int8(cur_q, cur_s, n)
+    return acc
+
+
+class ErrorFeedback:
+    """EF-SGD state helpers: feed the compression residual back next step.
+
+    Usage (inside the train step, functional):
+        comp, new_err = ef.compress(grads, err)
+    """
+
+    def __init__(self, axis: str, block: int = 2048):
+        self.axis = axis
+        self.block = block
+
+    def init(self, grads):
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def reduce_with_feedback(self, grads, err):
+        """Returns (reduced_grads, new_err). grads+err is quantized; the
+        per-leaf residual (what int8 lost) becomes the next err."""
+        def one(g, e):
+            target = g.astype(jnp.float32) + e
+            flat = target.reshape(-1)
+            q, s = quantize_int8(flat, self.block)
+            sent = dequantize_int8(q, s, flat.size).reshape(g.shape)
+            new_e = target - sent
+            red = compressed_allreduce(flat, self.axis, self.block)
+            return red.reshape(g.shape), new_e
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(err)
+        out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+                jax.tree.unflatten(treedef, [o[1] for o in out]))

@@ -1,0 +1,167 @@
+"""Computation/communication overlap (paper §2.3–§2.4) on TPU.
+
+The paper's point: a multi-wait-block operation only overlaps if
+*progress* runs between its stages.  In an SPMD program the scheduler is
+the XLA compiler — overlap is obtained **structurally**, by writing the
+program so communication of piece i-1 is dataflow-independent of the
+compute of piece i:
+
+* ``microbatched_grad_step`` — gradient accumulation where the bucketed
+  allreduce of microbatch i-1's grads has no dependency on microbatch
+  i's backward pass, so XLA's latency-hiding scheduler can run the
+  collective behind the compute (DDP-style bucket overlap).
+* ``collective_matmul_ag`` — all-gather→matmul rewritten as a rolled
+  ppermute loop: every step multiplies the chunk it already has while
+  ppermute ships the next one (Wang et al.'s collective-matmul; the
+  device-side analogue of "progress runs while you compute").
+* ``collective_matmul_rs`` — matmul→reduce-scatter, same idea backwards.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.collectives import schedules as S
+
+
+# ---------------------------------------------------------------------------
+# Bucketed, overlapped gradient reduction
+# ---------------------------------------------------------------------------
+
+def bucket_tree(tree, bucket_bytes: int = 1 << 25):
+    """Partition tree leaves into buckets of ~bucket_bytes (DDP-style).
+
+    Returns list of lists of leaf indices (ordered as tree_leaves).
+    """
+    leaves = jax.tree.leaves(tree)
+    buckets, cur, cur_bytes = [], [], 0
+    for i, leaf in enumerate(leaves):
+        nb = leaf.size * leaf.dtype.itemsize if hasattr(leaf, "size") else 0
+        cur.append(i)
+        cur_bytes += nb
+        if cur_bytes >= bucket_bytes:
+            buckets.append(cur)
+            cur, cur_bytes = [], 0
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def allreduce_tree(grads, axis: str, algorithm: str = "psum",
+                   bucket_bytes: int = 1 << 25):
+    """Reduce a gradient pytree across `axis` inside shard_map.
+
+    algorithm "psum" uses the native op; others use the user-level
+    schedules from :mod:`schedules` — the Fig-13 comparison at scale.
+    Buckets exist to give the scheduler independent collectives it can
+    overlap with backward compute.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    if algorithm == "psum":
+        red = [jax.lax.psum(g, axis) for g in leaves]
+        return jax.tree.unflatten(treedef, red)
+    fn = S.ALGORITHMS[algorithm]
+    buckets = bucket_tree(grads, bucket_bytes)
+    red = [None] * len(leaves)
+    for bucket in buckets:
+        flat = jnp.concatenate([leaves[i].reshape(-1) for i in bucket])
+        flat = fn(flat, axis)
+        off = 0
+        for i in bucket:
+            n = leaves[i].size
+            red[i] = flat[off:off + n].reshape(leaves[i].shape).astype(leaves[i].dtype)
+            off += n
+    return jax.tree.unflatten(treedef, red)
+
+
+def microbatched_grad_fn(loss_fn: Callable, num_microbatches: int,
+                         axis: str | None = None,
+                         algorithm: str = "psum",
+                         bucket_bytes: int = 1 << 25):
+    """Build grad_fn(params, batch) -> (loss, grads) that splits the batch
+    into microbatches, accumulates grads with lax.scan, and reduces across
+    `axis` (if inside shard_map).  The scan makes microbatch i's backward
+    independent of microbatch i-1's reduction — overlap-friendly."""
+
+    def grad_fn(params, batch):
+        def split(x):
+            B = x.shape[0]
+            assert B % num_microbatches == 0, (B, num_microbatches)
+            return x.reshape((num_microbatches, B // num_microbatches) + x.shape[1:])
+
+        mbatches = jax.tree.map(split, batch)
+        vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+        def body(acc, mb):
+            (loss, aux), g = vg(params, mb)
+            acc_loss, acc_g = acc
+            acc_g = jax.tree.map(jnp.add, acc_g, g)
+            return (acc_loss + loss, acc_g), None
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zero_g), mbatches)
+        inv = 1.0 / num_microbatches
+        loss = loss * inv
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        if axis is not None:
+            grads = allreduce_tree(grads, axis, algorithm, bucket_bytes)
+            loss = jax.lax.pmean(loss, axis)
+        return loss, grads
+
+    return grad_fn
+
+
+# ---------------------------------------------------------------------------
+# Collective matmul (all-gather / reduce-scatter fused into the GEMM loop)
+# ---------------------------------------------------------------------------
+
+def collective_matmul_ag(x: jax.Array, w: jax.Array, axis: str) -> jax.Array:
+    """y = all_gather(x, axis) @ w — without materializing the gather.
+
+    x: [m_local, K]; w: [K, n_local].  Each of the P steps multiplies the
+    resident chunk while ppermute ships the next — compute hides the
+    collective (the paper's overlap goal, expressed structurally).
+    Returns [P*m_local, n_local].
+    """
+    n = S._axis_size(axis)
+    idx = S._axis_index(axis)
+    if n == 1:
+        return x @ w
+    m = x.shape[0]
+    out = jnp.zeros((n, m, w.shape[-1]), x.dtype)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    cur, pos = x, idx
+    for step in range(n):
+        part = cur @ w                               # compute resident chunk
+        oh = jax.nn.one_hot(pos, n, dtype=part.dtype)
+        out = out + oh[:, None, None] * part[None]
+        if step != n - 1:
+            cur = jax.lax.ppermute(cur, axis, perm)  # ship next chunk
+            pos = (pos - 1) % n
+    return out.reshape(n * m, w.shape[-1])
+
+
+def collective_matmul_rs(x: jax.Array, w: jax.Array, axis: str) -> jax.Array:
+    """y = reduce_scatter(x @ all-partitioned w) — matmul chunks feed the
+    ring as they finish.  x: [M, k_local]; w: [k_local, N] with the
+    contraction sharded; output rows scattered: [M/P rows... ] —
+    formulated here as: compute x @ w (partial sums), ring-reduce-scatter
+    over rows so rank r keeps rows r·(M/P):(r+1)·(M/P) fully reduced."""
+    n = S._axis_size(axis)
+    if n == 1:
+        return x @ w
+    partial_y = x @ w                                 # [M, N] partial sums
+    M = partial_y.shape[0]
+    assert M % n == 0
+    # reduce-scatter over leading dim: reuse last-dim helper via transpose
+    yt = jnp.moveaxis(partial_y, 0, -1)               # [N, M]
+    red = S.ring_reduce_scatter(yt, axis)             # [N, M/P]
+    return jnp.moveaxis(red, -1, 0)                   # [M/P, N]
+
+
+def ag_matmul_reference(x, w, axis):
+    return jax.lax.all_gather(x, axis, tiled=True) @ w

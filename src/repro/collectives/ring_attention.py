@@ -1,0 +1,218 @@
+"""Ring attention — context parallelism via the user-level ppermute
+schedule (the paper's §4.7 technique applied to the attention hot spot).
+
+When an architecture's head count does not divide the tensor axis
+(qwen2-0.5b: 14, smollm: 15, granite: 24 vs a 16-way axis), Megatron-
+style head TP degenerates to fully replicated attention.  Ring attention
+shards the *sequence* instead: each device holds S/P of q/k/v; kv blocks
+circulate around the ring (one ppermute per step) while every device
+accumulates online-softmax partials for its local q block.  Exact same
+math as full attention; compute shards P ways for ANY head count.
+
+This is the device-side twin of the paper's user-level allreduce: an
+explicit schedule of point-to-point permutes replacing an opaque
+collective — with the paper's computation/communication overlap built in
+structurally (step i's GEMMs are dataflow-independent of step i+1's
+ppermute, so the XLA scheduler overlaps them).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def _ring_body(q, k, v, axis: str, *, causal: bool, logit_cap: float = 0.0):
+    """Inside shard_map. q,k,v local: [B, S_loc, H, hd] (S global-sharded).
+    Returns local attention output [B, S_loc, H, hd]."""
+    n = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    B, S_loc, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    qf = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    q_pos = idx * S_loc + jnp.arange(S_loc)                 # [S_loc]
+
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    m = jnp.full((B, H, S_loc), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, H, S_loc), jnp.float32)
+    acc = jnp.zeros((B, S_loc, H, hd), jnp.float32)
+    k_cur, v_cur = k, v
+    for step in range(n):
+        src = (idx - step) % n                              # kv block origin
+        k_pos = src * S_loc + jnp.arange(S_loc)             # [S_loc]
+        k_r = jnp.repeat(k_cur, G, axis=2)                  # [B,S_loc,H,hd]
+        v_r = jnp.repeat(v_cur, G, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, k_r,
+                       preferred_element_type=jnp.float32)
+        if logit_cap:
+            s = jnp.tanh(s / logit_cap) * logit_cap
+        if causal:
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+        m_c = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_c)
+        m_safe = jnp.maximum(m_new, NEG_INF / 2)
+        p = jnp.exp(s - m_safe[..., None])
+        corr = jnp.exp(jnp.minimum(m - m_new, 0.0))
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v_r.dtype), v_r,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr.transpose(0, 2, 1)[..., None] + pv
+        m = m_new
+        if step != n - 1:
+            k_cur = jax.lax.ppermute(k_cur, axis, perm)
+            v_cur = jax.lax.ppermute(v_cur, axis, perm)
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp ring: explicit backward schedule (flash bwd over the ring)
+# ---------------------------------------------------------------------------
+#
+# The naive AD of the fwd ring replays the whole permute chain and saves
+# per-step score tensors; the explicit schedule below instead saves only
+# (q, k, v, o, m, l) and runs ONE backward ring where dk/dv accumulators
+# ride along with the circulating k/v blocks — the paper's point that a
+# user-level schedule with full context beats the opaque default.
+
+def _ring_fwd_stats(q, k, v, axis, causal, logit_cap):
+    """Like _ring_body but also returns softmax stats (m, l)."""
+    n = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    B, S_loc, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    qf = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    q_pos = idx * S_loc + jnp.arange(S_loc)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    m = jnp.full((B, H, S_loc), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, H, S_loc), jnp.float32)
+    acc = jnp.zeros((B, S_loc, H, hd), jnp.float32)
+    k_cur, v_cur = k, v
+    for step in range(n):
+        src = (idx - step) % n
+        k_pos = src * S_loc + jnp.arange(S_loc)
+        k_r = jnp.repeat(k_cur, G, axis=2)
+        v_r = jnp.repeat(v_cur, G, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, k_r,
+                       preferred_element_type=jnp.float32)
+        if logit_cap:
+            s = jnp.tanh(s / logit_cap) * logit_cap
+        if causal:
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.maximum(m_new, NEG_INF / 2)
+        p = jnp.exp(s - m_safe[..., None])
+        corr = jnp.exp(jnp.minimum(m - m_new, 0.0))
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v_r.dtype), v_r,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr.transpose(0, 2, 1)[..., None] + pv
+        m = m_new
+        if step != n - 1:
+            k_cur = jax.lax.ppermute(k_cur, axis, perm)
+            v_cur = jax.lax.ppermute(v_cur, axis, perm)
+    out = (acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]).astype(q.dtype)
+    return out, m, l
+
+
+def make_ring_attention_vjp(axis: str, causal: bool, logit_cap: float):
+    """Build the custom_vjp ring fn for fixed (axis, causal, cap).
+
+    NOTE: logit_cap > 0 (grok) falls back to AD because tanh softcap
+    changes the backward algebra; cap==0 is the common case.
+    """
+
+    @jax.custom_vjp
+    def ring(q, k, v):
+        out, _, _ = _ring_fwd_stats(q, k, v, axis, causal, logit_cap)
+        return out
+
+    def fwd(q, k, v):
+        out, m, l = _ring_fwd_stats(q, k, v, axis, causal, logit_cap)
+        return out, (q, k, v, out, m, l)
+
+    def bwd(res, do):
+        q, k, v, o, m, l = res
+        n = jax.lax.axis_size(axis)
+        idx = jax.lax.axis_index(axis)
+        B, S_loc, H, hd = q.shape
+        KVH = k.shape[2]
+        G = H // KVH
+        scale = 1.0 / math.sqrt(hd)
+        qf = q.astype(jnp.float32) * scale
+        dof = do.astype(jnp.float32)
+        # D = rowsum(do ⊙ o)  [B,H,Sq]
+        Drow = jnp.einsum("bqhd,bqhd->bhq", dof, o.astype(jnp.float32))
+        l_safe = jnp.maximum(l, 1e-30)
+        q_pos = idx * S_loc + jnp.arange(S_loc)
+        perm = [(i, (i + 1) % n) for i in range(n)]
+
+        dq = jnp.zeros((B, S_loc, H, hd), jnp.float32)
+        dk_ring = jnp.zeros((B, S_loc, KVH, hd), jnp.float32)
+        dv_ring = jnp.zeros((B, S_loc, KVH, hd), jnp.float32)
+        k_cur, v_cur = k, v
+        for step in range(n):
+            src = (idx - step) % n
+            k_pos = src * S_loc + jnp.arange(S_loc)
+            k_r = jnp.repeat(k_cur, G, axis=2).astype(jnp.float32)
+            v_r = jnp.repeat(v_cur, G, axis=2).astype(jnp.float32)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qf, k_r)
+            if causal:
+                mask = q_pos[:, None] >= k_pos[None, :]
+                s = jnp.where(mask[None, None], s, NEG_INF)
+            p = jnp.exp(s - jnp.maximum(m, NEG_INF / 2)[..., None]) \
+                / l_safe[..., None]                       # [B,H,Sq,Sk]
+            dv_blk = jnp.einsum("bhqk,bqhd->bkhd", p, dof)  # per full head
+            dp = jnp.einsum("bqhd,bkhd->bhqk", dof, v_r)
+            ds = p * (dp - Drow[..., None])               # [B,H,Sq,Sk]
+            dq = dq + jnp.einsum("bhqk,bkhd->bqhd", ds, k_r) * scale
+            dk_blk = jnp.einsum("bhqk,bqhd->bkhd", ds, qf)  # scale folded in qf
+            # fold GQA: sum full-head grads into kv heads
+            dv_blk = dv_blk.reshape(B, S_loc, KVH, G, hd).sum(axis=3)
+            dk_blk = dk_blk.reshape(B, S_loc, KVH, G, hd).sum(axis=3)
+            dk_ring = dk_ring + dk_blk
+            dv_ring = dv_ring + dv_blk
+            # rotate kv and their grad accumulators together
+            k_cur = jax.lax.ppermute(k_cur, axis, perm)
+            v_cur = jax.lax.ppermute(v_cur, axis, perm)
+            dk_ring = jax.lax.ppermute(dk_ring, axis, perm)
+            dv_ring = jax.lax.ppermute(dv_ring, axis, perm)
+        # after n permutes each grad block is back home
+        return (dq.astype(q.dtype), dk_ring.astype(k.dtype),
+                dv_ring.astype(v.dtype))
+
+    ring.defvjp(fwd, bwd)
+    return ring
+
+
+def ring_attention(q, k, v, *, causal: bool = True, axis: str = "model",
+                   logit_cap: float = 0.0, batch_axes: tuple = ("pod", "data")):
+    """shard_map wrapper. q,k,v: [B,S,H,hd] with S sharded over `axis` and
+    B over `batch_axes`; heads replicated.  Falls back to plain full
+    attention when no mesh context / axis size 1."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or axis not in mesh.shape \
+            or mesh.shape[axis] == 1 or q.shape[1] % mesh.shape[axis] != 0:
+        from repro.models.layers import attention
+        return attention(q, k, v, causal=causal, logit_cap=logit_cap)
+    b_axes = tuple(a for a in batch_axes if a in mesh.shape) or None
+    spec = P(b_axes, axis, None, None)
+    if logit_cap:
+        body = partial(_ring_body, axis=axis, causal=causal,
+                       logit_cap=logit_cap)
+    else:
+        body = make_ring_attention_vjp(axis, causal, 0.0)
+    return jax.shard_map(
+        lambda q_, k_, v_: body(q_, k_, v_),
+        mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec)(q, k, v)

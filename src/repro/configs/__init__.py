@@ -1,0 +1,34 @@
+"""Architecture configs (one module per assigned architecture) + registry."""
+from repro.configs.base import (
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    register,
+    get_config,
+    list_configs,
+)
+from repro.configs import shapes  # noqa: F401
+
+# Import every architecture module so registration side effects run.
+from repro.configs import (  # noqa: F401
+    qwen2_0_5b,
+    qwen2_5_3b,
+    smollm_360m,
+    llama3_405b,
+    granite_moe_3b_a800m,
+    grok1_314b,
+    zamba2_1_2b,
+    whisper_tiny,
+    pixtral_12b,
+    mamba2_1_3b,
+)
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "register",
+    "get_config",
+    "list_configs",
+    "shapes",
+]

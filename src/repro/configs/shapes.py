@@ -1,0 +1,88 @@
+"""Assigned input shapes + ShapeDtypeStruct ``input_specs`` builders.
+
+Shapes (LM transformer family — seq_len × global_batch):
+
+* ``train_4k``     seq_len=4 096,   global_batch=256   (training)
+* ``prefill_32k``  seq_len=32 768,  global_batch=32    (inference-prefill)
+* ``decode_32k``   seq_len=32 768,  global_batch=128   (inference-decode:
+  one new token against a KV cache of seq_len)
+* ``long_500k``    seq_len=524 288, global_batch=1     (long-context decode;
+  SSM/hybrid archs only — pure full-attention archs skip, see DESIGN.md)
+
+``decode_*`` / ``long_*`` lower ``serve_step``; the others lower
+``train_step`` (``prefill_32k`` lowers ``prefill_step``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_shape(name: str) -> ShapeSpec:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether (arch × shape) is an assigned cell; reason when not."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "long_500k requires sub-quadratic attention (SSM/hybrid only)"
+    return True, ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    No device allocation: these are fed to ``jax.jit(...).lower()``.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        S_text = S
+        batch: dict[str, jax.ShapeDtypeStruct] = {}
+        if cfg.frontend_stub == "vision":
+            # one image (precomputed patch embeddings) per sequence; total
+            # sequence length stays at the assigned S
+            from repro.models.transformer import VISION_PATCHES
+            S_text = S - VISION_PATCHES
+            batch["vision_embeds"] = sds((B, VISION_PATCHES, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = sds((B, S_text), jnp.int32)
+        if cfg.is_encoder_decoder:
+            batch["encoder_embeds"] = sds(
+                (B, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+        if shape.kind == "train":
+            batch["labels"] = sds((B, S_text), jnp.int32)
+        return batch
+    if shape.kind == "decode":
+        # one new token against a cache of S (cache specs are built by the
+        # model module itself; inputs are just the token + position)
+        batch = {
+            "tokens": sds((B, 1), jnp.int32),
+            "pos": sds((B,), jnp.int32),
+        }
+        return batch
+    raise ValueError(shape.kind)

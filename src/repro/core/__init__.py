@@ -1,0 +1,31 @@
+"""The paper's progress extensions, as a Python/JAX runtime layer."""
+from repro.core.engine import (
+    DONE,
+    NOPROGRESS,
+    PENDING,
+    AsyncThing,
+    ProgressEngine,
+    Stream,
+    Subsystem,
+    global_engine,
+    reset_global_engine,
+)
+from repro.core.request import (
+    GeneralizedRequest,
+    PollRequest,
+    Request,
+    request_of,
+)
+from repro.core.task_class import TaskGraph, TaskQueue
+from repro.core.events import CompletionWatcher, EventQueue
+from repro.core.futures import chain, io_future, jax_future
+
+__all__ = [
+    "DONE", "NOPROGRESS", "PENDING",
+    "AsyncThing", "ProgressEngine", "Stream", "Subsystem",
+    "global_engine", "reset_global_engine",
+    "GeneralizedRequest", "PollRequest", "Request", "request_of",
+    "TaskGraph", "TaskQueue",
+    "CompletionWatcher", "EventQueue",
+    "chain", "io_future", "jax_future",
+]

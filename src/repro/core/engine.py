@@ -1,0 +1,283 @@
+"""The collated, interoperable progress engine (paper §2.6, §3).
+
+Paper API                      →  here
+---------------------------------------------------------------
+MPIX_Stream_create             →  Stream() / engine.stream()
+MPIX_Stream_progress(stream)   →  engine.progress(stream)
+MPIX_Async_start(fn, st, strm) →  engine.async_start(fn, st, stream)
+MPIX_Async_spawn               →  AsyncThing.spawn(...)
+MPIX_Async_get_state           →  AsyncThing.state
+MPIX_ASYNC_DONE / NOPROGRESS   →  DONE / NOPROGRESS (PENDING alias)
+subsystem hooks (Listing 1.1)  →  engine.register_subsystem(...)
+
+Semantics faithfully kept:
+
+* A Stream is a *serial execution context*: tasks attached to one stream
+  are polled by at most one thread at a time (per-stream lock), and two
+  different streams NEVER contend on a shared lock — the fix for the
+  MPI_THREAD_MULTIPLE global-lock pathology the paper measures (§4.4).
+* ``progress`` collates: subsystem hooks run in registration (priority)
+  order and, like MPICH's Listing 1.1, later (expensive) subsystems are
+  skipped once progress was made (short-circuit), controllable per call.
+* ``spawn`` from inside a poll_fn defers enqueueing until after the poll
+  sweep — no recursion, no queue mutation under iteration (§3.3).
+* Poll functions must be lightweight; completion events can be emitted
+  via ``repro.core.events`` instead of doing heavy work inline (§4.2).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from typing import Any, Callable, Iterable, Optional
+
+# poll_fn return codes (paper: MPIX_ASYNC_DONE / MPIX_ASYNC_NOPROGRESS)
+DONE = "done"
+NOPROGRESS = "noprogress"
+PENDING = NOPROGRESS  # alias: the paper text uses PENDING in §3.3
+
+
+class AsyncThing:
+    """Opaque handle passed to poll functions (MPIX_Async_thing).
+
+    Combines the user state (``MPIX_Async_get_state``) with the
+    implementation-side context, and provides ``spawn`` (MPIX_Async_spawn):
+    children are buffered and enqueued only after the current poll sweep,
+    avoiding recursion and re-entrant queue mutation.
+    """
+
+    __slots__ = ("state", "poll_fn", "stream", "_spawned", "engine")
+
+    def __init__(self, engine: "ProgressEngine", poll_fn, state, stream: "Stream"):
+        self.engine = engine
+        self.poll_fn = poll_fn
+        self.state = state
+        self.stream = stream
+        self._spawned: list[AsyncThing] = []
+
+    def spawn(self, poll_fn, state, stream: Optional["Stream"] = None) -> "AsyncThing":
+        child = AsyncThing(self.engine, poll_fn, state,
+                           stream if stream is not None else self.stream)
+        self._spawned.append(child)
+        return child
+
+
+class Stream:
+    """MPIX_Stream: a serial context with its own task list and lock."""
+
+    _ids = itertools.count()
+
+    def __init__(self, name: str = "", engine: "ProgressEngine" = None):
+        self.id = next(Stream._ids)
+        self.name = name or f"stream{self.id}"
+        self.engine = engine
+        self._lock = threading.Lock()
+        self._tasks: list[AsyncThing] = []
+        self._incoming: list[AsyncThing] = []
+        self._incoming_lock = threading.Lock()
+        self.polls = 0           # statistics
+        self.completions = 0
+
+    def _enqueue(self, thing: AsyncThing) -> None:
+        # cross-thread additions land in _incoming; the polling thread
+        # absorbs them — keeps the hot poll loop free of contention.
+        with self._incoming_lock:
+            self._incoming.append(thing)
+
+    @property
+    def pending(self) -> int:
+        with self._incoming_lock:
+            inc = len(self._incoming)
+        return len(self._tasks) + inc
+
+    def _poll_once(self) -> int:
+        """One collated sweep over this stream's tasks. Returns #completed."""
+        if not self._lock.acquire(blocking=False):
+            # another thread is progressing this serial context; in the
+            # paper's model this cannot happen (streams are serial), but
+            # we make it safe rather than corrupt the task list.
+            self._lock.acquire()
+        try:
+            with self._incoming_lock:
+                if self._incoming:
+                    self._tasks.extend(self._incoming)
+                    self._incoming.clear()
+            completed = 0
+            spawned: list[AsyncThing] = []
+            keep: list[AsyncThing] = []
+            for thing in self._tasks:
+                self.polls += 1
+                rc = thing.poll_fn(thing)
+                if thing._spawned:
+                    spawned.extend(thing._spawned)
+                    thing._spawned = []
+                if rc == DONE:
+                    completed += 1
+                    self.completions += 1
+                else:
+                    keep.append(thing)
+            self._tasks = keep
+            # deferred enqueue of spawned children (MPIX_Async_spawn)
+            for child in spawned:
+                if child.stream is self:
+                    self._tasks.append(child)
+                else:
+                    child.stream._enqueue(child)
+            return completed
+        finally:
+            self._lock.release()
+
+
+class Subsystem:
+    """A progress hook à la MPICH Listing 1.1 (datatype engine /
+    collectives / shmem / netmod).  ``poll`` returns True if progress was
+    made.  ``cheap`` subsystems are always polled; expensive ones are
+    skipped when an earlier subsystem already made progress."""
+
+    def __init__(self, name: str, poll: Callable[[], bool], cheap: bool = True,
+                 priority: int = 0):
+        self.name = name
+        self.poll = poll
+        self.cheap = cheap
+        self.priority = priority
+
+    def __repr__(self):
+        return f"Subsystem({self.name!r}, cheap={self.cheap})"
+
+
+class ProgressEngine:
+    """One engine per process (the paper's thesis: ONE progress engine
+    collating every async subsystem, instead of one thread per library)."""
+
+    def __init__(self):
+        self.default_stream = Stream("default", self)   # MPIX_STREAM_NULL
+        self._streams: list[Stream] = [self.default_stream]
+        self._subsystems: list[Subsystem] = []
+        self._lock = threading.Lock()
+
+    # -- streams ---------------------------------------------------------
+    def stream(self, name: str = "") -> Stream:
+        s = Stream(name, self)
+        with self._lock:
+            self._streams.append(s)
+        return s
+
+    def free_stream(self, stream: Stream) -> None:
+        if stream.pending:
+            raise RuntimeError(f"{stream.name} has pending tasks")
+        with self._lock:
+            self._streams.remove(stream)
+
+    # -- MPIX_Async ------------------------------------------------------
+    def async_start(self, poll_fn: Callable[[AsyncThing], str],
+                    extra_state: Any = None,
+                    stream: Optional[Stream] = None) -> AsyncThing:
+        s = stream if stream is not None else self.default_stream
+        thing = AsyncThing(self, poll_fn, extra_state, s)
+        s._enqueue(thing)
+        return thing
+
+    # -- subsystems (Listing 1.1) ------------------------------------------
+    def register_subsystem(self, name: str, poll: Callable[[], bool],
+                           cheap: bool = True, priority: int = 0) -> Subsystem:
+        sub = Subsystem(name, poll, cheap, priority)
+        with self._lock:
+            self._subsystems.append(sub)
+            self._subsystems.sort(key=lambda x: x.priority)
+        return sub
+
+    def unregister_subsystem(self, sub: Subsystem) -> None:
+        with self._lock:
+            self._subsystems.remove(sub)
+
+    # -- progress ----------------------------------------------------------
+    def progress(self, stream: Optional[Stream] = None, *,
+                 skip_expensive_on_progress: bool = True) -> int:
+        """MPIX_Stream_progress.
+
+        Polls (a) the async tasks of ``stream`` (or the default stream)
+        and (b) the registered subsystem hooks in priority order with the
+        MPICH short-circuit: once progress is made, remaining *expensive*
+        subsystems are skipped this round.
+        """
+        s = stream if stream is not None else self.default_stream
+        made = s._poll_once()
+        for sub in self._subsystems:
+            if made and skip_expensive_on_progress and not sub.cheap:
+                continue
+            try:
+                if sub.poll():
+                    made += 1
+            except Exception:
+                # a subsystem failure must not take down global progress
+                raise
+        return made
+
+    def progress_all(self) -> int:
+        """Progress every stream (used by shutdown/finalize paths)."""
+        made = 0
+        with self._lock:
+            streams = list(self._streams)
+        for s in streams:
+            made += s._poll_once()
+        for sub in self._subsystems:
+            if sub.poll():
+                made += 1
+        return made
+
+    # -- waiting -----------------------------------------------------------
+    def wait(self, request, stream: Optional[Stream] = None,
+             timeout: float | None = None) -> Any:
+        """MPI_Wait: drive progress until ``request.is_complete``."""
+        t0 = time.monotonic()
+        while not request.is_complete:
+            self.progress(stream)
+            if timeout is not None and time.monotonic() - t0 > timeout:
+                raise TimeoutError(f"wait timed out after {timeout}s")
+        return request.value()
+
+    def wait_all(self, requests: Iterable, stream: Optional[Stream] = None,
+                 timeout: float | None = None) -> list:
+        reqs = list(requests)
+        t0 = time.monotonic()
+        while not all(r.is_complete for r in reqs):
+            self.progress(stream)
+            if timeout is not None and time.monotonic() - t0 > timeout:
+                raise TimeoutError(f"wait_all timed out after {timeout}s")
+        return [r.value() for r in reqs]
+
+    def drain(self, stream: Optional[Stream] = None,
+              timeout: float | None = None) -> None:
+        """MPI_Finalize behaviour (Listing 1.2): progress until no pending
+        tasks remain on the stream (or all streams if None)."""
+        t0 = time.monotonic()
+        if stream is not None:
+            while stream.pending:
+                self.progress(stream)
+                if timeout is not None and time.monotonic() - t0 > timeout:
+                    raise TimeoutError("drain timed out")
+            return
+        while any(s.pending for s in self._streams):
+            self.progress_all()
+            if timeout is not None and time.monotonic() - t0 > timeout:
+                raise TimeoutError("drain timed out")
+
+
+# Process-global engine (most applications want exactly one).
+_global_engine: ProgressEngine | None = None
+_global_lock = threading.Lock()
+
+
+def global_engine() -> ProgressEngine:
+    global _global_engine
+    if _global_engine is None:
+        with _global_lock:
+            if _global_engine is None:
+                _global_engine = ProgressEngine()
+    return _global_engine
+
+
+def reset_global_engine() -> None:
+    global _global_engine
+    with _global_lock:
+        _global_engine = None

@@ -1,0 +1,117 @@
+"""Bridging JAX async dispatch + host I/O into the progress engine.
+
+JAX is the "NIC" here: ``jit(f)(x)`` returns immediately and the TPU/CPU
+runtime executes asynchronously; ``Array.is_ready()`` is the completion-
+queue poll.  ``jax_future`` turns a dispatched computation into a
+``Request``; ``io_future`` wraps a thread-pool task (storage/network I/O)
+— both are then progressed by the ONE collated engine rather than by
+per-subsystem wait loops (the paper's interoperable-progress thesis).
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.core.engine import DONE, NOPROGRESS, ProgressEngine, Stream
+from repro.core.request import Request
+
+
+def _arrays_ready(arrays) -> bool:
+    return all(a.is_ready() for a in jax.tree.leaves(arrays)
+               if hasattr(a, "is_ready"))
+
+
+def jax_future(engine: ProgressEngine, arrays: Any,
+               stream: Optional[Stream] = None,
+               on_complete: Callable[[Any], None] | None = None) -> Request:
+    """Request completing when every array in the pytree is device-ready.
+
+    Non-blocking: uses ``Array.is_ready()`` (never ``block_until_ready``)
+    so the engine can interleave other subsystems while the device runs.
+    """
+    req = Request(tag="jax")
+
+    def poll(thing) -> str:
+        if _arrays_ready(arrays):
+            if on_complete is not None:
+                on_complete(arrays)
+            req.complete(arrays)
+            return DONE
+        return NOPROGRESS
+
+    engine.async_start(poll, None, stream)
+    return req
+
+
+# One small pool for genuinely-blocking host I/O (file writes, RPCs).
+# The progress engine polls futures; the pool threads never touch JAX.
+_io_pool: concurrent.futures.ThreadPoolExecutor | None = None
+_io_lock = threading.Lock()
+
+
+def io_pool() -> concurrent.futures.ThreadPoolExecutor:
+    global _io_pool
+    if _io_pool is None:
+        with _io_lock:
+            if _io_pool is None:
+                _io_pool = concurrent.futures.ThreadPoolExecutor(
+                    max_workers=4, thread_name_prefix="repro-io")
+    return _io_pool
+
+
+def io_future(engine: ProgressEngine, fn: Callable[[], Any],
+              stream: Optional[Stream] = None,
+              on_complete: Callable[[Any], None] | None = None) -> Request:
+    """Run ``fn`` on the I/O pool; completion surfaces via the engine."""
+    req = Request(tag="io")
+    fut = io_pool().submit(fn)
+
+    def poll(thing) -> str:
+        if fut.done():
+            try:
+                value = fut.result()
+            except BaseException as e:  # noqa: BLE001
+                req.fail(e)
+                return DONE
+            if on_complete is not None:
+                on_complete(value)
+            req.complete(value)
+            return DONE
+        return NOPROGRESS
+
+    engine.async_start(poll, None, stream)
+    return req
+
+
+def chain(engine: ProgressEngine, stages: list[Callable[[Any], Any]],
+          stream: Optional[Stream] = None, initial: Any = None) -> Request:
+    """Multi-wait-block task (paper Fig 1c / Fig 3c): each stage is
+    launched when the previous completes, entirely inside poll_fn —
+    the 'small block of code after each wait block' the paper identifies
+    as the essence of progress (§2.4)."""
+    req = Request(tag="chain")
+    state = {"i": 0, "fut": None, "value": initial}
+
+    def poll(thing) -> str:
+        if state["fut"] is None:
+            if state["i"] >= len(stages):
+                req.complete(state["value"])
+                return DONE
+            stage = stages[state["i"]]
+            state["fut"] = io_pool().submit(stage, state["value"])
+            return NOPROGRESS
+        if state["fut"].done():
+            try:
+                state["value"] = state["fut"].result()
+            except BaseException as e:  # noqa: BLE001
+                req.fail(e)
+                return DONE
+            state["fut"] = None
+            state["i"] += 1
+        return NOPROGRESS
+
+    engine.async_start(poll, None, stream)
+    return req

@@ -1,0 +1,107 @@
+"""Requests and generalized requests.
+
+``Request.is_complete`` is the paper's ``MPIX_Request_is_complete``: a
+single atomic-flag read with NO side effects — it never invokes progress,
+so tasks can poll their dependencies without contending with the progress
+engine (paper §3.4).
+
+``GeneralizedRequest`` reproduces MPI generalized requests (§4.6): a
+waitable handle whose completion is signalled from inside a poll
+function via ``complete()`` (the ``MPI_Grequest_complete`` analogue).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Optional
+
+
+class Request:
+    """Completion handle. The flag is a plain attribute — CPython attribute
+    loads are atomic, mirroring the paper's 'an atomic read instruction'."""
+
+    __slots__ = ("_complete", "_value", "_exc", "tag")
+
+    def __init__(self, tag: str = ""):
+        self._complete = False
+        self._value: Any = None
+        self._exc: Optional[BaseException] = None
+        self.tag = tag
+
+    @property
+    def is_complete(self) -> bool:
+        """MPIX_Request_is_complete: side-effect free, never progresses."""
+        return self._complete
+
+    def complete(self, value: Any = None) -> None:
+        self._value = value
+        self._complete = True      # publish after value (GIL ordering)
+
+    def fail(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._complete = True
+
+    def value(self) -> Any:
+        if not self._complete:
+            raise RuntimeError("request not complete; use engine.wait()")
+        if self._exc is not None:
+            raise self._exc
+        return self._value
+
+
+class GeneralizedRequest(Request):
+    """MPI_Grequest_start analogue: user callbacks + external completion.
+
+    query_fn/free_fn/cancel_fn mirror the MPI interface; like MPI (and as
+    the paper critiques), the generalized request has NO progress of its
+    own — pair it with ``engine.async_start`` which provides the missing
+    progression mechanism (paper §4.6).
+    """
+
+    __slots__ = ("query_fn", "free_fn", "cancel_fn", "extra_state", "_cancelled")
+
+    def __init__(self,
+                 query_fn: Callable[[Any], Any] | None = None,
+                 free_fn: Callable[[Any], None] | None = None,
+                 cancel_fn: Callable[[Any, bool], None] | None = None,
+                 extra_state: Any = None):
+        super().__init__(tag="grequest")
+        self.query_fn = query_fn
+        self.free_fn = free_fn
+        self.cancel_fn = cancel_fn
+        self.extra_state = extra_state
+        self._cancelled = False
+
+    def complete(self, value: Any = None) -> None:  # MPI_Grequest_complete
+        if self.query_fn is not None:
+            value = self.query_fn(self.extra_state)
+        super().complete(value)
+
+    def cancel(self) -> None:
+        if self.cancel_fn is not None:
+            self.cancel_fn(self.extra_state, self._complete)
+        self._cancelled = True
+
+    def free(self) -> None:
+        if self.free_fn is not None:
+            self.free_fn(self.extra_state)
+
+
+def request_of(fn: Callable[[], bool], tag: str = "") -> "PollRequest":
+    return PollRequest(fn, tag)
+
+
+class PollRequest(Request):
+    """Request whose completion is determined by a user predicate."""
+
+    __slots__ = ("_predicate",)
+
+    def __init__(self, predicate: Callable[[], bool], tag: str = ""):
+        super().__init__(tag)
+        self._predicate = predicate
+
+    @property
+    def is_complete(self) -> bool:
+        if not self._complete and self._predicate():
+            self.complete()
+        return self._complete

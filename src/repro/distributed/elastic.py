@@ -1,0 +1,54 @@
+"""Elastic scaling: rebuild the mesh after membership changes and restore
+the latest checkpoint resharded onto it.
+
+Checkpoints store full (unsharded) arrays, so restoring onto a smaller
+or larger mesh is a pure placement decision: recompute the sharding
+rules against the new mesh and ``device_put`` accordingly.  Combined
+with ``AsyncCheckpointer``'s atomic commits, a pod loss costs at most
+the work since the last committed step.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+
+from repro.launch.mesh import make_mesh
+from repro.sharding import merged_rules, axis_rules, spec_tree
+from jax.sharding import NamedSharding
+
+
+def largest_pof2(n: int) -> int:
+    return 1 << (n.bit_length() - 1)
+
+
+def plan_mesh(n_devices: int, *, prefer_model: int = 16) -> tuple[tuple, tuple]:
+    """Pick a (data, model) mesh for an arbitrary surviving device count.
+
+    Keeps the model axis at `prefer_model` when divisible (TP degree is a
+    property of the model, not of the incident), otherwise the largest
+    power-of-two that fits."""
+    n = largest_pof2(n_devices)
+    model = prefer_model
+    while model > 1 and n % model:
+        model //= 2
+    return (n // model, model), ("data", "model")
+
+
+def remesh(n_devices: Optional[int] = None, prefer_model: int = 16):
+    n = n_devices if n_devices is not None else len(jax.devices())
+    shape, axes = plan_mesh(n, prefer_model=prefer_model)
+    return make_mesh(shape, axes)
+
+
+def reshard_restore(checkpointer, step: int, like_tree, axes_tree, new_mesh,
+                    rules_overrides=None):
+    """Restore checkpoint `step` with shardings recomputed for new_mesh."""
+    rules = merged_rules(rules_overrides)
+    with axis_rules(rules):
+        specs = spec_tree(axes_tree, like_tree, new_mesh)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(new_mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    return checkpointer.restore(step, like_tree, shardings)

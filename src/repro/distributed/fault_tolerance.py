@@ -1,0 +1,106 @@
+"""Fault-tolerance monitors — clients of the progress engine.
+
+At thousand-node scale the failure model is: slow chips (stragglers),
+hung steps (deadlocked collective after a link flap), and dead hosts.
+The monitors here are host-side subsystems polled by the SAME collated
+progress loop as checkpointing and data (the paper's thesis: no private
+watchdog threads):
+
+* ``HeartbeatMonitor`` — every participant beats per step; a peer whose
+  beat is older than ``timeout`` is flagged, triggering
+  checkpoint-restart (driven by the trainer).
+* ``StragglerDetector`` — EWMA of step durations; steps slower than
+  ``threshold ×`` the EWMA are counted per source so schedulers can
+  evict persistent stragglers.
+* ``StepWatchdog`` — wall-clock bound on a single step; firing means the
+  collective is presumed hung and restart-from-checkpoint is requested.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+from repro.core.engine import ProgressEngine, Stream
+
+
+class HeartbeatMonitor:
+    def __init__(self, engine: ProgressEngine, peers: list[str],
+                 timeout: float = 60.0, on_failure: Callable[[str], None] = None,
+                 clock=time.monotonic):
+        self.peers = {p: clock() for p in peers}
+        self.timeout = timeout
+        self.on_failure = on_failure or (lambda p: None)
+        self.failed: set[str] = set()
+        self.clock = clock
+        self._sub = engine.register_subsystem(
+            "heartbeat", self._poll, cheap=True, priority=2)
+
+    def beat(self, peer: str) -> None:
+        self.peers[peer] = self.clock()
+        self.failed.discard(peer)
+
+    def _poll(self) -> bool:
+        now = self.clock()
+        fired = False
+        for peer, last in self.peers.items():
+            if peer not in self.failed and now - last > self.timeout:
+                self.failed.add(peer)
+                self.on_failure(peer)
+                fired = True
+        return fired
+
+    @property
+    def alive(self) -> list[str]:
+        return [p for p in self.peers if p not in self.failed]
+
+
+class StragglerDetector:
+    def __init__(self, threshold: float = 1.5, alpha: float = 0.1):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.ewma: float | None = None
+        self.flagged: dict[str, int] = {}
+        self.history: list[tuple[str, float, bool]] = []
+
+    def record(self, source: str, duration: float) -> bool:
+        """Returns True if this step was a straggler."""
+        is_straggler = (self.ewma is not None
+                        and duration > self.threshold * self.ewma)
+        if is_straggler:
+            self.flagged[source] = self.flagged.get(source, 0) + 1
+        # EWMA excludes outliers so one straggler doesn't poison the mean
+        if not is_straggler:
+            self.ewma = (duration if self.ewma is None
+                         else (1 - self.alpha) * self.ewma + self.alpha * duration)
+        self.history.append((source, duration, is_straggler))
+        return is_straggler
+
+    def persistent_stragglers(self, min_count: int = 3) -> list[str]:
+        return [s for s, n in self.flagged.items() if n >= min_count]
+
+
+class StepWatchdog:
+    def __init__(self, engine: ProgressEngine, limit: float = 300.0,
+                 on_hang: Callable[[], None] = None, clock=time.monotonic):
+        self.limit = limit
+        self.on_hang = on_hang or (lambda: None)
+        self.clock = clock
+        self._armed_at: float | None = None
+        self.fired = 0
+        self._sub = engine.register_subsystem(
+            "watchdog", self._poll, cheap=True, priority=3)
+
+    def arm(self) -> None:
+        self._armed_at = self.clock()
+
+    def disarm(self) -> None:
+        self._armed_at = None
+
+    def _poll(self) -> bool:
+        if self._armed_at is not None and \
+                self.clock() - self._armed_at > self.limit:
+            self._armed_at = None
+            self.fired += 1
+            self.on_hang()
+            return True
+        return False

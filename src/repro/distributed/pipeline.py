@@ -1,0 +1,88 @@
+"""GPipe-style pipeline parallelism as an explicit ppermute schedule.
+
+The assignment's multi-pod mesh gives a natural PP mapping: stages on
+the `pod` axis (cross-pod DCI links carry only the [mb, S, D] activation
+handoff once per microbatch-tick, instead of gradient traffic every
+step).  The schedule is the paper's pattern once more: a static state
+machine of point-to-point transfers expressed in the dataflow.
+
+Semantics: ``num_stages`` devices along ``axis`` each own a contiguous
+block of layers (stacked params sharded on dim 0).  Microbatches enter
+stage 0 one tick apart; activations hop stage→stage via ppermute; after
+``M + S - 1`` ticks all M microbatches exited stage S-1 (the classic
+GPipe bubble of (S-1)/(M+S-1)).  Forward AND backward differentiate
+through the tick scan, so gradient pipelining falls out of JAX AD.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def gpipe(stage_fn: Callable, mesh, axis: str, num_stages: int,
+          params_spec=P(0), x_spec=P()):
+    """Build a pipelined apply: (stage_params_stacked, x_microbatches) -> y.
+
+    * ``stage_fn(stage_params, x) -> y``: one stage's computation
+      (same shape in/out — the residual-stream case).
+    * ``stage_params_stacked``: pytree with leading dim ``num_stages``
+      (sharded over ``axis``).
+    * ``x_microbatches``: [M, mb, ...] (replicated over ``axis``).
+
+    Returns y_microbatches: [M, mb, ...].
+    """
+    S = num_stages
+
+    def pipelined(stage_params, xs):
+        M = xs.shape[0]
+        ticks = M + S - 1
+
+        def body(my_params, xs):
+            # inside shard_map: my_params has leading dim 1 (this stage's
+            # slice); xs is the full [M, mb, ...] (replicated)
+            mine = jax.tree.map(lambda a: a[0], my_params)
+            sid = jax.lax.axis_index(axis)
+            perm = [(i, (i + 1) % S) for i in range(S)]
+            mb_shape = xs.shape[1:]
+            # pcast: carries become device-varying inside the tick scan
+            carry_in = jax.lax.pcast(jnp.zeros(mb_shape, xs.dtype),
+                                     (axis,), to="varying")
+            out = jax.lax.pcast(jnp.zeros_like(xs), (axis,), to="varying")
+
+            def tick(state, t):
+                carry_in, out = state
+                # stage 0 injects microbatch t (if valid); others consume
+                inject = jnp.where(t < M, t, 0)
+                x0 = xs[inject]
+                x_in = jnp.where(sid == 0, x0, carry_in)
+                y = stage_fn(mine, x_in)
+                # last stage owns microbatch (t - (S-1)) at this tick
+                mb_idx = t - (S - 1)
+                valid = jnp.logical_and(sid == S - 1, mb_idx >= 0)
+                oh = (jax.nn.one_hot(jnp.where(mb_idx >= 0, mb_idx, 0), M,
+                                     dtype=y.dtype)
+                      * valid.astype(y.dtype))
+                out = out + oh.reshape((M,) + (1,) * y.ndim) * y[None]
+                carry_next = jax.lax.ppermute(y, axis, perm)
+                return (carry_next, out), None
+
+            (carry_in, out), _ = jax.lax.scan(
+                tick, (carry_in, out), jnp.arange(ticks))
+            # only stage S-1 holds real outputs; psum broadcasts them
+            # (every other stage contributes zeros)
+            return jax.lax.psum(out, axis)
+
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P(axis), stage_params), P()),
+            out_specs=P())(stage_params, xs)
+
+    return pipelined
+
+
+def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
+    return (num_stages - 1) / (num_microbatches + num_stages - 1)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,KVH,hd] -> [B,Sq,H,hd] (f32 math)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    kr = jnp.repeat(k, G, axis=2)
+    vr = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   kr.astype(jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q: [B,H,hd]; caches: [B,S,KVH,hd]; lengths: [B] -> [B,H,hd]."""
+    B, H, hd = q.shape
+    _, S, KVH, _ = k_cache.shape
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    kr = jnp.repeat(k_cache, G, axis=2)
+    vr = jnp.repeat(v_cache, G, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32) * scale,
+                   kr.astype(jnp.float32))
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhk,bkhd->bhd", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunk_ref(x, b, c, dt, a_log):
+    """One-chunk SSD oracle (intra-chunk + emitted chunk state).
+
+    x: [B,Q,nh,hp]; b,c: [B,Q,ds]; dt: [B,Q,nh] (post-softplus);
+    a_log: [nh].  Returns (y_intra [B,Q,nh,hp], state [B,nh,hp,ds],
+    decay_total [B,nh]).
+    """
+    B, Q, nh, hp = x.shape
+    ds = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dA = dt.astype(jnp.float32) * a                     # [B,Q,nh]
+    cum = jnp.cumsum(dA, axis=1)
+    seg = cum[:, :, None, :] - cum[:, None, :, :]       # [B,Q,Q,nh]
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+    Lmat = jnp.exp(jnp.clip(seg, -60.0, 0.0)) * tri[None, :, :, None]
+    cb = jnp.einsum("bis,bjs->bij", c.astype(jnp.float32), b.astype(jnp.float32))
+    w = cb[..., None] * Lmat
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    y = jnp.einsum("bijh,bjhp->bihp", w, xdt)
+    decay_out = jnp.exp(jnp.clip(cum[:, -1:, :] - cum, -60.0, 0.0))
+    state = jnp.einsum("bjhp,bjh,bjs->bhps", xdt, decay_out, b.astype(jnp.float32))
+    decay_total = jnp.exp(jnp.clip(cum[:, -1, :], -60.0, 0.0))
+    return y.astype(x.dtype), state, decay_total

@@ -1,0 +1,101 @@
+"""Mamba2 SSD intra-chunk Pallas kernel (TPU target).
+
+The SSD "dual form" makes the intra-chunk computation a pair of GEMMs
+plus a masked decay product — ideal MXU work.  This kernel computes, per
+(batch, chunk, head-block):
+
+    y_intra = ((C·Bᵀ) ⊙ L) · (dt⊙x)      (quadratic-within-chunk term)
+    state   = (decay_out ⊙ dt⊙x)ᵀ · B     (chunk's emitted state)
+
+The inter-chunk recurrence (linear scan over chunks) stays outside in
+jnp — it is O(S/Q) sequential steps on [nh, hp, ds] tensors and fuses
+fine in XLA; the quadratic work is what needs VMEM tiling.
+
+Grid: (B, n_chunks, head_blocks); one chunk's [Q, ·] tensors are VMEM
+blocks (Q = 128–256 aligns the GEMMs to the MXU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, alog_ref, y_ref, st_ref, dec_ref,
+                *, block_h: int, q: int):
+    # blocks: x [1,Q,bh,hp]; b/c [1,Q,ds]; dt [1,Q,bh]; alog [bh]
+    x = x_ref[0].astype(jnp.float32)          # [Q, bh, hp]
+    bm = b_ref[0].astype(jnp.float32)         # [Q, ds]
+    cm = c_ref[0].astype(jnp.float32)         # [Q, ds]
+    dt = dt_ref[0].astype(jnp.float32)        # [Q, bh]
+    a = -jnp.exp(alog_ref[...].astype(jnp.float32))   # [bh]
+
+    dA = dt * a[None, :]                      # [Q, bh]
+    cum = jnp.cumsum(dA, axis=0)              # [Q, bh]
+    seg = cum[:, None, :] - cum[None, :, :]   # [Q, Q, bh]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tri = (iota_i >= iota_j).astype(jnp.float32)
+    Lmat = jnp.exp(jnp.clip(seg, -60.0, 0.0)) * tri[:, :, None]
+
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q, Q]
+    w = cb[:, :, None] * Lmat                 # [Q, Q, bh]
+    xdt = x * dt[:, :, None]                  # [Q, bh, hp]
+
+    # y[i,h,p] = sum_j w[i,j,h] xdt[j,h,p] — batched over h via dot_general
+    y = jax.lax.dot_general(
+        w.transpose(2, 0, 1), xdt.transpose(1, 0, 2),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)   # [bh, Q, hp]
+    y_ref[0] = y.transpose(1, 0, 2).astype(y_ref.dtype)
+
+    decay_out = jnp.exp(jnp.clip(cum[-1:, :] - cum, -60.0, 0.0))  # [Q, bh]
+    xd = xdt * decay_out[:, :, None]          # [Q, bh, hp]
+    st = jax.lax.dot_general(
+        xd.transpose(1, 2, 0), bm,
+        (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)   # [bh, hp, ds]
+    st_ref[0] = st
+    dec_ref[0] = jnp.exp(jnp.clip(cum[-1, :], -60.0, 0.0))
+
+
+def ssd_chunk(x, b, c, dt, a_log, *, block_h: int = 8, interpret: bool = False):
+    """Intra-chunk SSD for stacked chunks.
+
+    x: [B,Q,nh,hp]; b,c: [B,Q,ds]; dt: [B,Q,nh]; a_log: [nh].
+    Returns (y_intra [B,Q,nh,hp], states [B,nh,hp,ds], decay_total [B,nh]).
+    """
+    B, Q, nh, hp = x.shape
+    ds = b.shape[-1]
+    block_h = min(block_h, nh)
+    assert nh % block_h == 0
+    grid = (B, nh // block_h)
+
+    kernel = functools.partial(_ssd_kernel, block_h=block_h, q=Q)
+    y, st, dec = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, block_h, hp), lambda bi, hi: (bi, 0, hi, 0)),
+            pl.BlockSpec((1, Q, ds), lambda bi, hi: (bi, 0, 0)),
+            pl.BlockSpec((1, Q, ds), lambda bi, hi: (bi, 0, 0)),
+            pl.BlockSpec((1, Q, block_h), lambda bi, hi: (bi, 0, hi)),
+            pl.BlockSpec((block_h,), lambda bi, hi: (hi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, block_h, hp), lambda bi, hi: (bi, 0, hi, 0)),
+            pl.BlockSpec((1, block_h, hp, ds), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, block_h), lambda bi, hi: (bi, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Q, nh, hp), x.dtype),
+            jax.ShapeDtypeStruct((B, nh, hp, ds), jnp.float32),
+            jax.ShapeDtypeStruct((B, nh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, b, c, dt, a_log)
+    return y, st, dec

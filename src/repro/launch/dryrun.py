@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+#
+# The container has ONE real CPU device; the production meshes need 512
+# placeholder devices, so the XLA_FLAGS override above runs before ANY
+# other import (jax locks the device count on first init).
+# ruff: noqa: E402
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis import roofline as roofline_mod
+from repro.configs import get_config, list_configs
+from repro.configs.shapes import SHAPES, get_shape, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.models import registry
+
+
+def _parse_value(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("true", "True"):
+        return True
+    if v in ("false", "False"):
+        return False
+    return v
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save_hlo_dir: str | None = None,
+             cfg_overrides: dict | None = None,
+             cell_kwargs: dict | None = None) -> dict:
+    cfg = get_config(arch, **(cfg_overrides or {}))
+    shape = get_shape(shape_name)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = mesh.devices.size
+    t0 = time.time()
+    cell = build_cell(cfg, shape, mesh, **(cell_kwargs or {}))
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    if save_hlo_dir:
+        os.makedirs(save_hlo_dir, exist_ok=True)
+        with open(os.path.join(save_hlo_dir,
+                               f"{arch}_{shape_name}_{mesh_name}.hlo"), "w") as f:
+            f.write(text)
+
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf = registry.model_flops(
+        cfg, tokens, training=(shape.kind == "train"),
+        seq_len=shape.seq_len if shape.kind != "decode" else 0,
+        decode_cache_len=shape.seq_len if shape.kind == "decode" else 0)
+    bytes_in_use = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                    + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    wb = 1.0 if (cell_kwargs or {}).get("int8_weights") else 2.0
+    rl = roofline_mod.from_compiled(
+        text, arch=arch, shape=shape_name, mesh_name=mesh_name, chips=chips,
+        model_flops=mf, bytes_in_use=bytes_in_use,
+        cfg=cfg, shape_spec=shape, mesh_shape=dict(mesh.shape),
+        weight_bytes=wb)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "bytes_in_use_per_device": bytes_in_use,
+        },
+        "xla_cost_analysis_flops_while_once": ca.get("flops"),
+        "roofline": rl.to_dict(),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--save-hlo", default=None, help="dir to dump compiled HLO text")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells already recorded in --out")
+    ap.add_argument("--set", action="append", default=[], metavar="K=V",
+                    help="ModelConfig override, e.g. remat_policy=dots")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--cast-bf16", action="store_true",
+                    help="cast params to bf16 before use (halves FSDP gathers)")
+    ap.add_argument("--decode-ws", action="store_true",
+                    help="weight-stationary decode sharding")
+    ap.add_argument("--int8-weights", action="store_true",
+                    help="serve with per-channel int8 weights (halves the "
+                         "per-token HBM weight stream)")
+    ap.add_argument("--tag", default="", help="annotation stored in records")
+    ap.add_argument("--rules", default="",
+                    help="rule overrides 'act_seq=model;mlp=;heads=' "
+                         "(axes +-separated, empty = replicate)")
+    args = ap.parse_args()
+
+    cfg_overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        cfg_overrides[k] = _parse_value(v)
+    rules_overrides = {}
+    for item in filter(None, args.rules.split(";")):
+        k, v = item.split("=", 1)
+        if v:
+            rules_overrides[k] = (tuple(v.split("+")), ())
+        else:
+            rules_overrides[k] = ((),)
+    cell_kwargs = dict(microbatches=args.microbatches,
+                       cast_params_bf16=args.cast_bf16,
+                       decode_weight_stationary=args.decode_ws,
+                       int8_weights=args.int8_weights,
+                       rules_overrides=rules_overrides)
+
+    archs = list_configs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    n_ok = n_fail = n_skip = 0
+    with open(args.out, "a") as out:
+        for arch in archs:
+            for shape_name in shapes:
+                for multi_pod in meshes:
+                    mesh_name = "2x16x16" if multi_pod else "16x16"
+                    if (arch, shape_name, mesh_name) in done:
+                        continue
+                    tag = f"{arch} × {shape_name} × {mesh_name}"
+                    try:
+                        rec = run_cell(arch, shape_name, multi_pod,
+                                       args.save_hlo, cfg_overrides, cell_kwargs)
+                    except Exception as e:  # noqa: BLE001
+                        rec = {"arch": arch, "shape": shape_name,
+                               "mesh": mesh_name, "status": "error",
+                               "error": f"{type(e).__name__}: {e}",
+                               "trace": traceback.format_exc()[-2000:]}
+                    if args.tag:
+                        rec["tag"] = args.tag
+                    if cfg_overrides or args.microbatches > 1 or args.cast_bf16 \
+                            or args.decode_ws:
+                        rec["variant"] = {"overrides": cfg_overrides,
+                                          **cell_kwargs}
+                    out.write(json.dumps(rec) + "\n")
+                    out.flush()
+                    if rec["status"] == "ok":
+                        n_ok += 1
+                        r = rec["roofline"]
+                        print(f"[OK]   {tag}: compile={rec['compile_s']}s "
+                              f"dominant={r['dominant']} "
+                              f"frac={r['roofline_fraction']:.3f} "
+                              f"mem/dev={rec['memory']['bytes_in_use_per_device']/1e9:.2f}GB",
+                              flush=True)
+                    elif rec["status"] == "skipped":
+                        n_skip += 1
+                        print(f"[SKIP] {tag}: {rec['reason']}", flush=True)
+                    else:
+                        n_fail += 1
+                        print(f"[FAIL] {tag}: {rec['error']}", flush=True)
+    print(f"done: {n_ok} ok, {n_fail} failed, {n_skip} skipped", flush=True)
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

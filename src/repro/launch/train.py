@@ -1,0 +1,129 @@
+"""Production training launcher.
+
+On a real TPU fleet every host runs this same script (JAX SPMD runtime);
+on this CPU container use --devices to force host devices for a scaled
+rehearsal, e.g.:
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --devices 8 --mesh 4x2 --scale tiny --steps 20
+
+All async subsystems (data prefetch, checkpointing, monitors) run on the
+one collated progress engine (see DESIGN.md).
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (CPU rehearsal)")
+    ap.add_argument("--mesh", default="", help="e.g. 4x2 -> (data=4, model=2)")
+    ap.add_argument("--scale", default="tiny", choices=["tiny", "small", "full"])
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--cast-bf16", action="store_true")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.configs.shapes import ShapeSpec
+    from repro.core import ProgressEngine
+    from repro.data.pipeline import PrefetchPipeline, SyntheticLM
+    from repro.launch.mesh import make_mesh
+    from repro.launch.steps import build_cell
+    from repro.models import registry
+    from repro.train import optimizer as opt_mod
+    from repro.train.train_loop import Trainer, TrainLoopConfig
+    from examples.train_lm import SCALES  # reuse the reduction table
+
+    n_dev = len(jax.devices())
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+    else:
+        shape = (n_dev, 1)
+    mesh = make_mesh(shape, ("data", "model"))
+    print(f"devices={n_dev} mesh={dict(mesh.shape)}")
+
+    cfg = get_config(args.arch)
+    overrides = dict(SCALES[args.scale])
+    if overrides:
+        if cfg.moe:
+            overrides["moe"] = cfg.moe.__class__(
+                num_experts=4, top_k=2, expert_d_ff=overrides["d_ff"] // 2,
+                group_size=64)
+        if cfg.ssm:
+            overrides["ssm"] = cfg.ssm.__class__(d_state=16, expand=2,
+                                                 head_dim=16, chunk_size=16)
+        if cfg.shared_attn_every:
+            overrides.update(num_layers=5, shared_attn_every=2,
+                             shared_attn_lora_rank=8)
+        if cfg.is_encoder_decoder:
+            overrides.update(num_encoder_layers=2, encoder_frames=16,
+                             max_position_embeddings=256)
+        cfg = cfg.with_overrides(**overrides)
+
+    shape_spec = ShapeSpec("train", seq_len=args.seq,
+                           global_batch=args.global_batch, kind="train")
+    cell = build_cell(cfg, shape_spec, mesh,
+                      opt_cfg=opt_mod.AdamWConfig(
+                          lr=3e-3, warmup_steps=5,
+                          total_steps=max(args.steps, 10)),
+                      microbatches=args.microbatches,
+                      cast_params_bf16=args.cast_bf16)
+    jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings)
+
+    with jax.set_mesh(mesh):
+        params = registry.init_params(cfg, jax.random.PRNGKey(0))
+        opt_state = opt_mod.init(params)
+        # place onto the cell's shardings (FSDP/TP distribution)
+        params = jax.device_put(params, cell.in_shardings[0])
+        opt_state = jax.device_put(opt_state, cell.in_shardings[1])
+        b_shardings = cell.in_shardings[2]
+        eng = ProgressEngine()
+        src = SyntheticLM(cfg.vocab_size, args.seq, args.global_batch, seed=5)
+
+        def to_batch(b):
+            batch = {k: jnp.asarray(v) for k, v in b.items()}
+            if cfg.is_encoder_decoder:
+                batch["encoder_embeds"] = jnp.ones(
+                    (args.global_batch, cfg.encoder_frames, cfg.d_model),
+                    jnp.bfloat16)
+            return batch
+
+        pipe = PrefetchPipeline(map(to_batch, iter(src)), eng, depth=3)
+
+        def step_fn(params, opt_state, batch):
+            batch = {k: jax.device_put(v, b_shardings[k]) for k, v in batch.items()}
+            return jitted(params, opt_state, batch)
+
+        trainer = Trainer(
+            step_fn, params, opt_state, pipe,
+            TrainLoopConfig(total_steps=args.steps, checkpoint_every=10,
+                            checkpoint_dir=os.path.join(args.ckpt_dir, args.arch),
+                            log_every=5),
+            engine=eng,
+            hooks=[lambda s, m: print(
+                f"step {s:4d} loss={m['loss']:.4f} "
+                f"{m['step_time_s'] * 1e3:.0f}ms", flush=True)])
+        log = trainer.run()
+        pipe.close()
+    print(f"final loss {log[-1]['loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

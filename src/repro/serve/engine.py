@@ -1,0 +1,154 @@
+"""Event-driven continuous-batching server on the progress engine.
+
+Serving is the dynamic side of the paper's story: requests arrive at
+arbitrary times (the "unexpected message queue" of MPI has no SPMD
+analogue — this layer is it).  Everything is an async task on one
+engine:
+
+* request admission  — a subsystem hook draining the arrival queue into
+  free KV slots (prefill enqueued);
+* prefill            — device task polled via ``Array.is_ready``;
+* decode loop        — one fused decode step for ALL active slots per
+  iteration (continuous batching), again polled, never blocked on;
+* completion         — per-request events fired through
+  ``CompletionWatcher`` (paper §4.5).
+
+``serve_forever``-style progress is just ``engine.progress()`` in a
+loop — or embedded into a trainer's overlap window for online serving.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DONE, NOPROGRESS, ProgressEngine, Request
+from repro.models import registry
+from repro.serve.kvcache import SlotCache
+
+
+@dataclasses.dataclass
+class GenRequest:
+    request_id: str
+    prompt: np.ndarray               # [prompt_len] int32
+    max_new_tokens: int = 16
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done_req: Request = dataclasses.field(default_factory=Request)
+    slot_index: int = -1
+    next_input: int = 0            # next token to feed the fused decode
+    submitted_at: float = dataclasses.field(default_factory=time.monotonic)
+    first_token_at: float | None = None
+    finished_at: float | None = None
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, engine: ProgressEngine,
+                 batch_slots: int = 8, max_seq: int = 512,
+                 greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.engine = engine
+        self.slots = SlotCache(cfg, batch_slots, max_seq)
+        self.batch_slots = batch_slots
+        self.max_seq = max_seq
+        self._arrivals: collections.deque[GenRequest] = collections.deque()
+        self._active: dict[int, GenRequest] = {}
+        self._lock = threading.Lock()
+        self._decode_inflight = None
+        self._jit_decode = jax.jit(
+            lambda p, c, t, q: registry.decode_step(p, cfg, c, t, q))
+        self.engine.register_subsystem("serve-admit", self._admit, cheap=True,
+                                       priority=4)
+        self.engine.async_start(self._decode_poll, None)
+        self.steps = 0
+
+    # -- client API -------------------------------------------------------
+    def submit(self, request: GenRequest) -> Request:
+        with self._lock:
+            self._arrivals.append(request)
+        return request.done_req
+
+    # -- admission subsystem -----------------------------------------------
+    def _admit(self) -> bool:
+        made = False
+        with self._lock:
+            while self._arrivals and self.slots.free_slots():
+                req = self._arrivals.popleft()
+                slot = self.slots.assign(req.request_id)
+                req.slot_index = slot.index
+                # sequential prefill: feed prompt tokens through decode
+                # steps (token-by-token prefill keeps one compiled shape;
+                # a chunked prefill path is the serving hillclimb)
+                self._prefill(req, slot)
+                self._active[slot.index] = req
+                made = True
+        return made
+
+    def _prefill(self, req: GenRequest, slot) -> None:
+        # writes the prompt into the slot's cache; last logits start decode
+        cache = self.slots.cache
+        for tok in req.prompt[:-1]:
+            tokens = self._token_batch(slot.index, int(tok))
+            pos = self.slots.positions()
+            _, cache = self._jit_decode(self.params, cache, tokens, pos)
+            slot.pos += 1
+        self.slots.cache = cache
+        req.out_tokens = []
+        req.next_input = int(req.prompt[-1])
+
+    def _token_batch(self, slot_index: int, token: int):
+        toks = np.zeros((self.batch_slots, 1), np.int32)
+        toks[slot_index, 0] = token
+        return jnp.asarray(toks)
+
+    # -- fused decode loop ---------------------------------------------------
+    def _decode_poll(self, thing) -> str:
+        if self._decode_inflight is None:
+            if not self._active:
+                return NOPROGRESS          # idle; keep polling
+            toks = np.zeros((self.batch_slots, 1), np.int32)
+            for idx, req in self._active.items():
+                toks[idx, 0] = req.next_input
+            pos = self.slots.positions()
+            logits, cache = self._jit_decode(
+                self.params, self.slots.cache, jnp.asarray(toks), pos)
+            self._decode_inflight = (logits, cache)
+            return NOPROGRESS
+        logits, cache = self._decode_inflight
+        if not logits.is_ready():
+            return NOPROGRESS              # device still busy — no block
+        self._decode_inflight = None
+        self.slots.cache = cache
+        self.steps += 1
+        next_ids = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        finished = []
+        for idx, req in list(self._active.items()):
+            tok = int(next_ids[idx])
+            if req.first_token_at is None:
+                req.first_token_at = time.monotonic()
+            req.out_tokens.append(tok)
+            req.next_input = tok
+            self.slots.slots[idx].pos += 1
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or self.slots.slots[idx].pos >= self.max_seq - 1):
+                finished.append(idx)
+        for idx in finished:
+            req = self._active.pop(idx)
+            req.finished_at = time.monotonic()
+            self.slots.release(self.slots.slots[idx])
+            req.done_req.complete(req.out_tokens)
+        return NOPROGRESS                  # perpetual task
+
+    # -- convenience ---------------------------------------------------------
+    def run_until_idle(self, timeout: float = 120.0) -> None:
+        t0 = time.monotonic()
+        while self._active or self._arrivals:
+            self.engine.progress()
+            if time.monotonic() - t0 > timeout:
+                raise TimeoutError("serve engine did not drain")

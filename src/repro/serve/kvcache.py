@@ -1,0 +1,57 @@
+"""Paged slot-based KV cache for continuous batching.
+
+Fixed pool of B slots, each a row of the model cache (batch dim).  The
+serving engine assigns arriving requests to free slots; decode steps run
+over all active slots with per-slot positions (ragged lengths handled by
+the masked decode attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+
+
+@dataclasses.dataclass
+class Slot:
+    index: int
+    request_id: Optional[str] = None
+    pos: int = 0              # next write position == #valid tokens
+    done: bool = True
+
+
+class SlotCache:
+    def __init__(self, cfg, batch_slots: int, max_seq: int):
+        self.cfg = cfg
+        self.max_seq = max_seq
+        self.cache = registry.init_cache(cfg, batch_slots, max_seq)
+        self.slots = [Slot(i) for i in range(batch_slots)]
+
+    def free_slots(self) -> list[Slot]:
+        return [s for s in self.slots if s.done]
+
+    def assign(self, request_id: str) -> Optional[Slot]:
+        free = self.free_slots()
+        if not free:
+            return None
+        slot = free[0]
+        slot.request_id = request_id
+        slot.pos = 0
+        slot.done = False
+        return slot
+
+    def release(self, slot: Slot) -> None:
+        slot.request_id = None
+        slot.done = True
+        slot.pos = 0
+
+    def positions(self) -> jnp.ndarray:
+        return jnp.asarray([s.pos for s in self.slots], jnp.int32)
+
+    def active_mask(self) -> np.ndarray:
+        return np.array([not s.done for s in self.slots])

@@ -1,0 +1,136 @@
+"""Loss functions, including the vocab-chunked cross entropy.
+
+The naive LM loss materializes f32 logits [B, S, V] (for qwen2's 152k
+vocab at B·S = 64k tokens/device that is 39 GB).  The chunked form scans
+over vocab blocks computing a running (max, sum-exp, gold-logit) triple —
+the online-softmax trick applied to the unembedding — so peak memory is
+[B, S, V_chunk].  Backward recomputes per chunk (custom VJP), trading
+~1 extra unembed matmul for the 1/n_chunks activation footprint.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def plain_xent(logits, labels):
+    """logits [B,S,V] f32; labels [B,S] -> mean nll."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def chunked_vocab_xent(x, table, labels, chunk: int = 8192,
+                       transpose_table: bool = False):
+    """mean nll of softmax(x @ table) without materializing full logits.
+
+    x: [B,S,D] (final hidden states, any float dtype);
+    table: [V,D] (tied embeddings) or [D,V] if transpose_table;
+    labels: [B,S] int32.
+    """
+    nll, _, _ = _chunk_forward(x, table, labels, chunk, transpose_table)
+    return nll
+
+
+def _vchunks(table, chunk, transpose_table):
+    V = table.shape[-1] if transpose_table else table.shape[0]
+    chunk = min(chunk, V)
+    n = (V + chunk - 1) // chunk
+    return V, chunk, n
+
+
+def _pad_table(table, chunk, n, V, transpose_table):
+    """Pad the vocab dim to n·chunk so dynamic_slice never clamps."""
+    pad = n * chunk - V
+    if pad == 0:
+        return table
+    cfgpad = [(0, 0), (0, pad)] if transpose_table else [(0, pad), (0, 0)]
+    return jnp.pad(table, cfgpad)
+
+
+def _logits_chunk(x, table, start, chunk, transpose_table):
+    if transpose_table:
+        t = jax.lax.dynamic_slice_in_dim(table, start, chunk, axis=1)
+        return jnp.einsum("bsd,dv->bsv", x, t.astype(x.dtype)).astype(jnp.float32)
+    t = jax.lax.dynamic_slice_in_dim(table, start, chunk, axis=0)
+    return jnp.einsum("bsd,vd->bsv", x, t.astype(x.dtype)).astype(jnp.float32)
+
+
+def _chunk_forward(x, table, labels, chunk, transpose_table):
+    V, chunk, n = _vchunks(table, chunk, transpose_table)
+    table = _pad_table(table, chunk, n, V, transpose_table)
+    B, S, _ = x.shape
+
+    def body(carry, i):
+        m, s, gold = carry
+        start = i * chunk
+        lg = _logits_chunk(x, table, start, chunk, transpose_table)
+        # mask out-of-range rows of the (possibly padded) final chunk
+        vids = start + jnp.arange(chunk)
+        lg = jnp.where(vids[None, None, :] < V, lg, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(lg, axis=-1))
+        s = s * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(lg - m_new[..., None]), axis=-1)
+        in_chunk = jnp.logical_and(labels >= start, labels < start + chunk)
+        idx = jnp.clip(labels - start, 0, chunk - 1)
+        g = jnp.take_along_axis(lg, idx[..., None], axis=-1)[..., 0]
+        gold = jnp.where(in_chunk, g, gold)
+        return (m_new, s, gold), None
+
+    m0 = jnp.full((B, S), -jnp.inf, jnp.float32)
+    s0 = jnp.zeros((B, S), jnp.float32)
+    g0 = jnp.zeros((B, S), jnp.float32)
+    (m, s, gold), _ = jax.lax.scan(body, (m0, s0, g0), jnp.arange(n))
+    lse = m + jnp.log(s)
+    nll = jnp.mean(lse - gold)
+    return nll, lse, (m, s)
+
+
+def _fwd(x, table, labels, chunk, transpose_table):
+    nll, lse, _ = _chunk_forward(x, table, labels, chunk, transpose_table)
+    return nll, (x, table, labels, lse)
+
+
+def _bwd(chunk, transpose_table, res, dnll):
+    x, table, labels, lse = res
+    V, chunk_, n = _vchunks(table, chunk, transpose_table)
+    orig_shape = table.shape
+    table = _pad_table(table, chunk_, n, V, transpose_table)
+    B, S, _ = x.shape
+    scale = dnll / (B * S)
+
+    def body(carry, i):
+        dx, dt = carry
+        start = i * chunk_
+        lg = _logits_chunk(x, table, start, chunk_, transpose_table)
+        vids = start + jnp.arange(chunk_)
+        p = jnp.exp(lg - lse[..., None])
+        p = jnp.where(vids[None, None, :] < V, p, 0.0)
+        onehot = (labels[..., None] == vids[None, None, :]).astype(jnp.float32)
+        dlg = (p - onehot) * scale                      # [B,S,chunk]
+        if transpose_table:
+            t = jax.lax.dynamic_slice_in_dim(table, start, chunk_, axis=1)
+            dx = dx + jnp.einsum("bsv,dv->bsd", dlg, t.astype(jnp.float32))
+            dt_blk = jnp.einsum("bsd,bsv->dv", x.astype(jnp.float32), dlg)
+            dt = jax.lax.dynamic_update_slice_in_dim(
+                dt, dt_blk.astype(dt.dtype), start, axis=1)
+        else:
+            t = jax.lax.dynamic_slice_in_dim(table, start, chunk_, axis=0)
+            dx = dx + jnp.einsum("bsv,vd->bsd", dlg, t.astype(jnp.float32))
+            dt_blk = jnp.einsum("bsv,bsd->vd", dlg, x.astype(jnp.float32))
+            dt = jax.lax.dynamic_update_slice_in_dim(
+                dt, dt_blk.astype(dt.dtype), start, axis=0)
+        return (dx, dt), None
+
+    dx0 = jnp.zeros(x.shape, jnp.float32)
+    dt0 = jnp.zeros(table.shape, jnp.float32)
+    (dx, dt), _ = jax.lax.scan(body, (dx0, dt0), jnp.arange(n))
+    dt = (dt[:, :orig_shape[1]] if transpose_table
+          else dt[:orig_shape[0]])                   # drop padding rows
+    return dx.astype(x.dtype), dt.astype(table.dtype), None
+
+
+chunked_vocab_xent.defvjp(_fwd, _bwd)

@@ -1,0 +1,118 @@
+"""Training loop — every async subsystem hangs off ONE progress engine.
+
+The loop body is the paper's Figure 4(b) pattern, deliberately:
+
+    dispatch step N+1 (nonblocking: jit returns immediately)
+    ── while the device runs ──
+    engine.progress():  data prefetch fills, checkpoint stages advance,
+                        heartbeats/watchdog checked, metrics flush
+    block on step N's loss only when needed (jax_future completion)
+
+``jax_future`` + ``Request.is_complete`` replace blocking
+``block_until_ready`` calls, so the host never idles inside a wait loop
+while there is progress to be made — the computation/communication
+overlap story, at the host level.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core import ProgressEngine, global_engine, jax_future
+from repro.core.request import Request
+from repro.distributed.fault_tolerance import StepWatchdog, StragglerDetector
+from repro.train import optimizer as opt_mod
+from repro.train.checkpoint import AsyncCheckpointer
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    watchdog_limit_s: float = 600.0
+    resume: bool = True
+
+
+class Trainer:
+    def __init__(self, step_fn: Callable, params, opt_state,
+                 pipeline, cfg: TrainLoopConfig,
+                 engine: Optional[ProgressEngine] = None,
+                 hooks: list[Callable[[int, dict], None]] | None = None):
+        self.step_fn = step_fn
+        self.params = params
+        self.opt_state = opt_state
+        self.pipeline = pipeline
+        self.cfg = cfg
+        self.engine = engine or global_engine()
+        self.hooks = hooks or []
+        self.ckpt = AsyncCheckpointer(cfg.checkpoint_dir, self.engine)
+        self.straggler = StragglerDetector()
+        self.watchdog = StepWatchdog(self.engine, cfg.watchdog_limit_s,
+                                     on_hang=self._on_hang)
+        self.start_step = 0
+        self.metrics_log: list[dict] = []
+        self._pending_ckpt: Request | None = None
+        self._hung = False
+
+    # ------------------------------------------------------------------
+    def _on_hang(self):
+        self._hung = True
+
+    def maybe_resume(self):
+        if not self.cfg.resume:
+            return
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            state = self.ckpt.restore(latest, {"params": self.params,
+                                               "opt_state": self.opt_state})
+            self.params = state["params"]
+            self.opt_state = state["opt_state"]
+            self.start_step = latest + 1
+
+    # ------------------------------------------------------------------
+    def run(self) -> list[dict]:
+        self.maybe_resume()
+        loss_req: Request | None = None
+        metrics = None
+        for step in range(self.start_step, self.cfg.total_steps):
+            batch = self.pipeline.next_batch()     # warm path: no block
+            t0 = time.monotonic()
+            self.watchdog.arm()
+            # nonblocking dispatch — jit returns before the device finishes
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            loss_req = jax_future(self.engine, metrics)
+
+            # overlap window: drive collated progress until device done
+            while not loss_req.is_complete:
+                self.engine.progress()
+            self.watchdog.disarm()
+            dur = time.monotonic() - t0
+            self.straggler.record("self", dur)
+
+            if (step + 1) % self.cfg.checkpoint_every == 0 \
+                    or step == self.cfg.total_steps - 1:
+                # async save: stages progress inside future loop iterations
+                self._pending_ckpt = self.ckpt.save_async(
+                    step, {"params": self.params, "opt_state": self.opt_state})
+
+            if step % self.cfg.log_every == 0 or step == self.cfg.total_steps - 1:
+                m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                m["step"] = step
+                m["step_time_s"] = dur
+                self.metrics_log.append(m)
+                for hook in self.hooks:
+                    hook(step, m)
+            if self._hung:
+                raise RuntimeError("watchdog: step exceeded wall-clock limit")
+        # finalize: drain pending checkpoint I/O (paper Listing 1.2 note:
+        # finalize spins progress until all async tasks complete)
+        if self._pending_ckpt is not None:
+            self.engine.wait(self._pending_ckpt, timeout=600)
+        return self.metrics_log

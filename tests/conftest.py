@@ -1,0 +1,32 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests see 1 device;
+multi-device tests spawn subprocesses (see _multidevice.py)."""
+import jax
+import pytest
+
+from repro.configs import get_config
+
+
+def reduce_cfg(cfg, **extra):
+    """Family-preserving reduced config for CPU smoke tests."""
+    kw = dict(num_layers=2, d_model=64, d_ff=128, vocab_size=256,
+              remat_policy="none")
+    if cfg.num_heads:
+        kw.update(num_heads=4, num_kv_heads=2, head_dim=16)
+    if cfg.moe:
+        kw["moe"] = cfg.moe.__class__(num_experts=4, top_k=2, expert_d_ff=64,
+                                      group_size=64)
+    if cfg.ssm:
+        kw["ssm"] = cfg.ssm.__class__(d_state=16, expand=2, head_dim=16,
+                                      chunk_size=8)
+    if cfg.shared_attn_every:
+        kw.update(num_layers=5, shared_attn_every=2, shared_attn_lora_rank=4)
+    if cfg.is_encoder_decoder:
+        kw.update(num_encoder_layers=2, encoder_frames=12,
+                  max_position_embeddings=128)
+    kw.update(extra)
+    return cfg.with_overrides(**kw)
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,125 @@
+"""Analysis/report layer: formatting, table generation, roofline math."""
+import json
+
+import pytest
+
+from repro.analysis import hlo
+from repro.analysis.report import dryrun_table, fmt_bytes, fmt_s, roofline_table
+from repro.analysis.roofline import Roofline, analytical_bytes
+from repro.configs import get_config
+from repro.configs.shapes import get_shape
+
+
+class TestFormatting:
+    @pytest.mark.parametrize("b,expect", [
+        (1.5e12, "1.50TB"), (2.5e9, "2.50GB"), (3.2e6, "3.2MB"),
+        (900, "1KB"), (None, "-")])
+    def test_fmt_bytes(self, b, expect):
+        assert fmt_bytes(b) == expect
+
+    @pytest.mark.parametrize("s,expect", [
+        (2.5, "2.50s"), (0.0032, "3.20ms"), (5e-6, "5µs")])
+    def test_fmt_s(self, s, expect):
+        assert fmt_s(s) == expect
+
+
+def _fake_record(arch="a", shape="train_4k", mesh="16x16", status="ok"):
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "status": status,
+        "compile_s": 1.0,
+        "memory": {"bytes_in_use_per_device": 1e9},
+        "roofline": {
+            "dominant": "compute", "compute_s": 0.5, "memory_s": 0.1,
+            "collective_s": 0.2, "roofline_fraction": 0.5,
+            "useful_ratio": 0.6, "flops_per_device": 1e12,
+            "coll_by_type": {"all-reduce": 1e9},
+        },
+    }
+
+
+class TestTables:
+    def test_roofline_table_renders(self):
+        out = roofline_table([_fake_record()], "16x16")
+        assert "| a | train_4k | **compute**" in out
+
+    def test_dryrun_table_handles_skips_and_errors(self):
+        rows = [_fake_record(),
+                {"arch": "b", "shape": "long_500k", "mesh": "16x16",
+                 "status": "skipped", "reason": "full attention quad"},
+                {"arch": "c", "shape": "train_4k", "mesh": "16x16",
+                 "status": "error", "error": "boom"}]
+        out = dryrun_table(rows)
+        assert "SKIP" in out and "ERROR" in out
+
+
+class TestRooflineMath:
+    def test_bound_and_fraction(self):
+        r = Roofline(arch="x", shape="train_4k", mesh="16x16", chips=256,
+                     flops_per_device=1e12, bytes_per_device=1e9,
+                     coll_bytes_per_device=1e9, coll_by_type={},
+                     compute_s=0.5, memory_s=0.1, collective_s=0.2,
+                     dominant="compute", model_flops=0.5 * 256 * 197e12 * 0.5,
+                     hlo_flops_global=1e15, useful_ratio=0.5)
+        assert r.bound_s() == 0.5
+        assert abs(r.roofline_fraction() - 0.5) < 1e-9
+
+    def test_analytical_bytes_decode_scales_with_weight_bytes(self):
+        cfg = get_config("llama3-405b")
+        shape = get_shape("decode_32k")
+        mesh_shape = {"data": 16, "model": 16}
+        b2 = analytical_bytes(cfg, shape, 256, mesh_shape, weight_bytes=2.0)
+        b1 = analytical_bytes(cfg, shape, 256, mesh_shape, weight_bytes=1.0)
+        n_local = 405.8e9 / 256
+        assert abs((b2 - b1) - n_local) / n_local < 0.05
+
+    def test_analytical_bytes_train_dominated_by_optimizer_stream(self):
+        cfg = get_config("llama3-405b")
+        shape = get_shape("train_4k")
+        b = analytical_bytes(cfg, shape, 256, {"data": 16, "model": 16})
+        assert b > 405e9 / 256 * 32 * 0.9   # ≥ the parameter/optimizer term
+
+
+class TestHLOAnalyzerEdges:
+    def test_empty_module(self):
+        res = hlo.analyze("HloModule empty\n")
+        assert res["flops"] == 0
+
+    def test_unknown_trip_count_flagged(self):
+        txt = """HloModule m
+
+%body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  ROOT %t = (s32[], f32[4]) tuple(%p)
+}
+
+%cond (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %a = f32[4] parameter(0)
+  %c = s32[] constant(0)
+  %tup = (s32[], f32[4]) tuple(%c, %a)
+  %w = (s32[], f32[4]) while(%tup), condition=%cond, body=%body
+  ROOT %out = f32[4] get-tuple-element(%w), index=1
+}
+"""
+        res = hlo.analyze(txt)
+        assert res["dynamic_while"] is True
+
+    def test_collective_types_separated(self):
+        txt = """HloModule m
+
+ENTRY %main (a: f32[128]) -> f32[128] {
+  %a = f32[128] parameter(0)
+  %ag = f32[256] all-gather(%a), dimensions={0}
+  %ar = f32[128] all-reduce(%a), to_apply=%add
+  ROOT %cp = f32[128] collective-permute(%a), source_target_pairs={{0,1}}
+}
+"""
+        res = hlo.analyze(txt)
+        cb = res["collective_bytes"]
+        assert cb["all-gather"] == 512
+        assert cb["all-reduce"] == 512
+        assert cb["collective-permute"] == 512

@@ -1,0 +1,61 @@
+"""End-to-end DP training with int8 error-feedback gradient compression
+across the data axis (the cross-pod trick), vs exact reduction."""
+from tests._multidevice import run_with_devices
+
+
+def test_compressed_dp_training_converges_like_exact():
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.collectives.compression import (
+            compressed_allreduce, dequantize_int8, quantize_int8)
+
+        # toy regression: w [D]; data sharded over 4 devices
+        mesh = jax.make_mesh((4,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        D, N = 64, 256
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        w_true = jax.random.normal(ks[0], (D,))
+        X = jax.random.normal(ks[1], (N, D))
+        y = X @ w_true + 0.01 * jax.random.normal(ks[2], (N,))
+
+        def local_grad(w, Xl, yl):
+            r = Xl @ w - yl
+            return Xl.T @ r / Xl.shape[0]
+
+        def make_step(compressed):
+            def step(w, err, Xs, ys):
+                def inner(w, err, Xl, yl):
+                    # err: [1, D] — per-device error-feedback state
+                    g = local_grad(w, Xl, yl)
+                    if compressed:
+                        target = g + err[0]
+                        q, s = quantize_int8(target, 64)
+                        sent = dequantize_int8(q, s, D)
+                        new_err = (target - sent)[None]
+                        g_red = compressed_allreduce(target, "data", 64) / 4.0
+                    else:
+                        new_err = err
+                        g_red = jax.lax.pmean(g, "data")
+                    return w - 0.1 * g_red, new_err
+                # check_vma=False: the ring allreduce's output IS
+                # replicated, but the varying-axes checker cannot prove
+                # replication through ppermute chains
+                return jax.shard_map(
+                    inner, mesh=mesh,
+                    in_specs=(P(), P("data"), P("data"), P("data")),
+                    out_specs=(P(), P("data")), check_vma=False)(w, err, Xs, ys)
+            return jax.jit(step)
+
+        for compressed in (False, True):
+            w = jnp.zeros((D,))
+            err = jnp.zeros((4, D))
+            step = make_step(compressed)
+            for _ in range(400):
+                w, err = step(w, err, X, y)
+            final = float(jnp.mean((X @ w - y) ** 2))
+            print(("COMPRESSED" if compressed else "EXACT"), final)
+            assert final < 0.005, (compressed, final)
+        print("COMPRESSED_TRAIN_OK")
+    """, n_devices=4)
+    assert "COMPRESSED_TRAIN_OK" in out

@@ -1,0 +1,146 @@
+"""Data pipeline prefetch + fault-tolerance monitor tests."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import ProgressEngine
+from repro.data.pipeline import PrefetchPipeline, SyntheticLM
+from repro.distributed.elastic import plan_mesh
+from repro.distributed.fault_tolerance import (
+    HeartbeatMonitor, StepWatchdog, StragglerDetector)
+
+
+class TestSyntheticLM:
+    def test_shapes_and_determinism(self):
+        src1 = SyntheticLM(vocab_size=100, seq_len=16, batch_size=4, seed=1)
+        src2 = SyntheticLM(vocab_size=100, seq_len=16, batch_size=4, seed=1)
+        b1, b2 = src1.sample(), src2.sample()
+        assert b1["tokens"].shape == (4, 16)
+        assert b1["labels"].shape == (4, 16)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_labels_shifted(self):
+        src = SyntheticLM(vocab_size=100, seq_len=16, batch_size=2, seed=0)
+        b = src.sample()
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_shards_differ(self):
+        a = SyntheticLM(100, 16, 4, seed=1, shard=0, num_shards=2).sample()
+        b = SyntheticLM(100, 16, 4, seed=1, shard=1, num_shards=2).sample()
+        assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+class TestPrefetch:
+    def test_buffer_fills_via_progress(self):
+        eng = ProgressEngine()
+        pipe = PrefetchPipeline(SyntheticLM(50, 8, 2), eng, depth=3)
+        t0 = time.monotonic()
+        while pipe.fills < 3 and time.monotonic() - t0 < 10:
+            eng.progress()
+        assert pipe.fills >= 3
+        b = pipe.next_batch()
+        assert b["tokens"].shape == (2, 8)
+        pipe.close()
+
+    def test_warm_buffer_no_stall(self):
+        eng = ProgressEngine()
+        pipe = PrefetchPipeline(SyntheticLM(50, 8, 2), eng, depth=2)
+        t0 = time.monotonic()
+        while pipe.fills < 2 and time.monotonic() - t0 < 10:
+            eng.progress()
+        stalls_before = pipe.stalls
+        pipe.next_batch()
+        assert pipe.stalls == stalls_before     # warm hit
+        pipe.close()
+
+
+class TestHeartbeat:
+    def test_failure_detection(self):
+        eng = ProgressEngine()
+        clock = {"t": 0.0}
+        failed = []
+        hb = HeartbeatMonitor(eng, ["pod0", "pod1"], timeout=10.0,
+                              on_failure=failed.append,
+                              clock=lambda: clock["t"])
+        clock["t"] = 5.0
+        hb.beat("pod0")
+        eng.progress()
+        assert failed == []
+        clock["t"] = 12.0                   # pod1's last beat at t=0
+        eng.progress()
+        assert failed == ["pod1"]
+        assert hb.alive == ["pod0"]
+
+    def test_recovery_after_beat(self):
+        eng = ProgressEngine()
+        clock = {"t": 0.0}
+        hb = HeartbeatMonitor(eng, ["p"], timeout=5.0,
+                              clock=lambda: clock["t"])
+        clock["t"] = 6.0
+        eng.progress()
+        assert "p" in hb.failed
+        hb.beat("p")
+        assert "p" not in hb.failed
+
+
+class TestStraggler:
+    def test_flags_slow_steps(self):
+        d = StragglerDetector(threshold=1.5)
+        for _ in range(10):
+            assert not d.record("chip0", 1.0)
+        assert d.record("chip7", 2.0)       # 2x the EWMA
+        assert not d.record("chip0", 1.05)
+        assert d.flagged == {"chip7": 1}
+
+    def test_persistent_stragglers(self):
+        d = StragglerDetector(threshold=1.5)
+        for _ in range(5):
+            d.record("ok", 1.0)
+        for _ in range(3):
+            d.record("bad", 3.0)
+        assert d.persistent_stragglers(min_count=3) == ["bad"]
+
+    def test_ewma_not_poisoned_by_outliers(self):
+        d = StragglerDetector(threshold=1.5)
+        for _ in range(5):
+            d.record("a", 1.0)
+        d.record("a", 100.0)                # huge outlier
+        assert d.ewma < 1.5                 # mean unaffected
+
+
+class TestWatchdog:
+    def test_fires_on_hang(self):
+        eng = ProgressEngine()
+        clock = {"t": 0.0}
+        hangs = []
+        wd = StepWatchdog(eng, limit=30.0, on_hang=lambda: hangs.append(1),
+                          clock=lambda: clock["t"])
+        wd.arm()
+        clock["t"] = 10.0
+        eng.progress()
+        assert hangs == []
+        clock["t"] = 31.0
+        eng.progress()
+        assert hangs == [1]
+
+    def test_disarm(self):
+        eng = ProgressEngine()
+        clock = {"t": 0.0}
+        wd = StepWatchdog(eng, limit=5.0, clock=lambda: clock["t"])
+        wd.arm()
+        wd.disarm()
+        clock["t"] = 100.0
+        eng.progress()
+        assert wd.fired == 0
+
+
+class TestElasticPlanning:
+    @pytest.mark.parametrize("n,expected", [
+        (512, (32, 16)), (256, (16, 16)), (255, (8, 16)),  # lost a chip
+        (192, (8, 16)), (48, (2, 16)), (8, (1, 8)), (3, (1, 2)),
+    ])
+    def test_plan_mesh(self, n, expected):
+        shape, axes = plan_mesh(n, prefer_model=16)
+        assert shape == expected
+        assert axes == ("data", "model")

@@ -1,0 +1,330 @@
+"""Progress-engine behaviour tests (paper §3, §4.1–§4.4)."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    DONE, NOPROGRESS, ProgressEngine, Request, GeneralizedRequest,
+    TaskQueue, TaskGraph, CompletionWatcher, EventQueue,
+)
+
+
+def make_timer_task(duration, counter):
+    """Paper Listing 1.2/1.3: dummy task completing after a preset time."""
+    deadline = time.monotonic() + duration
+
+    def poll(thing):
+        if time.monotonic() >= deadline:
+            counter["n"] -= 1
+            return DONE
+        return NOPROGRESS
+    return poll
+
+
+class TestBasicProgress:
+    def test_tasks_complete_via_progress(self):
+        eng = ProgressEngine()
+        counter = {"n": 10}
+        for _ in range(10):
+            eng.async_start(make_timer_task(0.01, counter))
+        t0 = time.monotonic()
+        while counter["n"] > 0:             # Listing 1.3 wait loop
+            eng.progress()
+            assert time.monotonic() - t0 < 5.0
+        assert counter["n"] == 0
+        assert eng.default_stream.pending == 0
+
+    def test_drain_finalize_semantics(self):
+        """MPI_Finalize spins progress until all async tasks complete."""
+        eng = ProgressEngine()
+        counter = {"n": 5}
+        for _ in range(5):
+            eng.async_start(make_timer_task(0.005, counter))
+        eng.drain(timeout=5.0)
+        assert counter["n"] == 0
+
+    def test_immediate_done_task(self):
+        eng = ProgressEngine()
+        hits = []
+        eng.async_start(lambda t: (hits.append(1), DONE)[1])
+        eng.progress()
+        assert hits == [1]
+        assert eng.default_stream.pending == 0
+
+    def test_progress_returns_completion_count(self):
+        eng = ProgressEngine()
+        for _ in range(3):
+            eng.async_start(lambda t: DONE)
+        assert eng.progress() == 3
+
+
+class TestAsyncThing:
+    def test_get_state(self):
+        eng = ProgressEngine()
+        seen = []
+
+        def poll(thing):
+            seen.append(thing.state)
+            return DONE
+
+        eng.async_start(poll, {"x": 42})
+        eng.progress()
+        assert seen == [{"x": 42}]
+
+    def test_spawn_deferred_no_recursion(self):
+        """MPIX_Async_spawn: children run AFTER the current sweep."""
+        eng = ProgressEngine()
+        order = []
+
+        def child(thing):
+            order.append("child")
+            return DONE
+
+        def parent(thing):
+            order.append("parent")
+            thing.spawn(child, None)
+            return DONE
+
+        eng.async_start(parent, None)
+        eng.progress()                      # sweep 1: parent only
+        assert order == ["parent"]
+        eng.progress()                      # sweep 2: spawned child
+        assert order == ["parent", "child"]
+
+    def test_spawn_to_other_stream(self):
+        eng = ProgressEngine()
+        s2 = eng.stream("s2")
+        done = []
+
+        def child(thing):
+            done.append(True)
+            return DONE
+
+        def parent(thing):
+            thing.spawn(child, None, stream=s2)
+            return DONE
+
+        eng.async_start(parent, None)
+        eng.progress()
+        assert not done                     # child is on s2
+        eng.progress(s2)
+        assert done == [True]
+
+
+class TestStreams:
+    def test_streams_isolated(self):
+        """Progress on one stream must not advance another (§3.2)."""
+        eng = ProgressEngine()
+        s1, s2 = eng.stream(), eng.stream()
+        hits = {"s1": 0, "s2": 0}
+        eng.async_start(lambda t: (hits.__setitem__("s1", 1), DONE)[1], None, s1)
+        eng.async_start(lambda t: (hits.__setitem__("s2", 1), DONE)[1], None, s2)
+        eng.progress(s1)
+        assert hits == {"s1": 1, "s2": 0}
+        eng.progress(s2)
+        assert hits == {"s1": 1, "s2": 1}
+
+    def test_default_stream_is_separate(self):
+        eng = ProgressEngine()
+        s = eng.stream()
+        eng.async_start(lambda t: DONE, None, s)
+        eng.progress()                      # default stream: nothing
+        assert s.pending == 1
+        eng.progress(s)
+        assert s.pending == 0
+
+    def test_concurrent_streams_threads(self):
+        """Listing 1.5: one stream per thread, no cross contention."""
+        eng = ProgressEngine()
+        n_threads, n_tasks = 4, 25
+        errors = []
+
+        def worker(tid):
+            try:
+                stream = eng.stream(f"t{tid}")
+                counter = {"n": n_tasks}
+                for _ in range(n_tasks):
+                    eng.async_start(make_timer_task(0.001, counter), None, stream)
+                t0 = time.monotonic()
+                while counter["n"] > 0:
+                    eng.progress(stream)
+                    assert time.monotonic() - t0 < 10
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+
+    def test_free_stream_with_pending_raises(self):
+        eng = ProgressEngine()
+        s = eng.stream()
+        eng.async_start(lambda t: NOPROGRESS, None, s)
+        with pytest.raises(RuntimeError):
+            eng.free_stream(s)
+
+
+class TestSubsystems:
+    def test_collated_order_and_short_circuit(self):
+        """Listing 1.1: expensive subsystems skipped once progress made."""
+        eng = ProgressEngine()
+        calls = []
+        eng.register_subsystem("datatype", lambda: (calls.append("dt"), True)[1],
+                               cheap=True, priority=0)
+        eng.register_subsystem("netmod", lambda: (calls.append("net"), False)[1],
+                               cheap=False, priority=10)
+        eng.progress()
+        assert calls == ["dt"]             # netmod skipped: progress was made
+        calls.clear()
+        eng.progress(skip_expensive_on_progress=False)
+        assert calls == ["dt", "net"]
+
+    def test_cheap_subsystems_always_polled(self):
+        eng = ProgressEngine()
+        calls = []
+        eng.register_subsystem("a", lambda: (calls.append("a"), True)[1],
+                               cheap=True, priority=0)
+        eng.register_subsystem("b", lambda: (calls.append("b"), False)[1],
+                               cheap=True, priority=1)
+        eng.progress()
+        assert calls == ["a", "b"]
+
+    def test_unregister(self):
+        eng = ProgressEngine()
+        calls = []
+        sub = eng.register_subsystem("x", lambda: (calls.append(1), False)[1])
+        eng.progress()
+        eng.unregister_subsystem(sub)
+        eng.progress()
+        assert len(calls) == 1
+
+
+class TestRequests:
+    def test_is_complete_no_side_effects(self):
+        """MPIX_Request_is_complete never invokes progress (§3.4)."""
+        eng = ProgressEngine()
+        polled = []
+        req = Request()
+
+        def poll(thing):
+            polled.append(1)
+            req.complete(123)
+            return DONE
+
+        eng.async_start(poll, None)
+        assert req.is_complete is False
+        assert polled == []                 # the query did NOT progress
+        eng.progress()
+        assert req.is_complete is True
+        assert req.value() == 123
+
+    def test_wait_drives_progress(self):
+        eng = ProgressEngine()
+        req = Request()
+        deadline = time.monotonic() + 0.01
+
+        def poll(thing):
+            if time.monotonic() >= deadline:
+                req.complete("v")
+                return DONE
+            return NOPROGRESS
+
+        eng.async_start(poll, None)
+        assert eng.wait(req, timeout=5.0) == "v"
+
+    def test_generalized_request(self):
+        """Listing 1.7: greq completed from inside a poll_fn; MPI_Wait."""
+        eng = ProgressEngine()
+        freed = []
+        greq = GeneralizedRequest(
+            query_fn=lambda st: "status-ok",
+            free_fn=lambda st: freed.append(st),
+            extra_state="es")
+        deadline = time.monotonic() + 0.01
+
+        def poll(thing):
+            if time.monotonic() >= deadline:
+                greq.complete()             # MPI_Grequest_complete
+                return DONE
+            return NOPROGRESS
+
+        eng.async_start(poll, None)
+        assert eng.wait(greq, timeout=5.0) == "status-ok"
+        greq.free()
+        assert freed == ["es"]
+
+
+class TestTaskClasses:
+    def test_task_queue_in_order(self):
+        """Listing 1.4: queue class polls only its head."""
+        eng = ProgressEngine()
+        q = TaskQueue(eng)
+        ready = {"k": 0}
+        reqs = [q.submit(lambda i=i: ready["k"] > i) for i in range(5)]
+        eng.progress()
+        assert all(not r.is_complete for r in reqs)
+        ready["k"] = 3
+        eng.progress()
+        assert [r.is_complete for r in reqs] == [True, True, True, False, False]
+        ready["k"] = 5
+        eng.progress()
+        assert all(r.is_complete for r in reqs)
+        assert q.pending == 0
+
+    def test_task_graph_dependencies(self):
+        eng = ProgressEngine()
+        g = TaskGraph(eng)
+        started = []
+        r1 = g.add(lambda: True, start_fn=lambda: started.append("a"))
+        r2 = g.add(lambda: True, deps=[r1], start_fn=lambda: started.append("b"))
+        eng.progress()
+        assert r1.is_complete
+        eng.progress()
+        assert r2.is_complete
+        assert started == ["a", "b"]
+
+    def test_task_graph_blocked_tasks_not_polled(self):
+        eng = ProgressEngine()
+        g = TaskGraph(eng)
+        polls = []
+        gate = Request()
+        g.add(lambda: (polls.append(1), True)[1], deps=[gate])
+        eng.progress()
+        assert polls == []                  # dependency incomplete: skipped
+        gate.complete()
+        eng.progress()
+        assert polls == [1]
+
+
+class TestEvents:
+    def test_completion_watcher(self):
+        """Listing 1.6: callbacks on request completion via query loop."""
+        eng = ProgressEngine()
+        w = CompletionWatcher(eng)
+        fired = []
+        reqs = [Request() for _ in range(3)]
+        for r in reqs:
+            w.watch(r, lambda rr: fired.append(rr.tag or id(rr)))
+        eng.progress()
+        assert fired == []
+        reqs[1].complete()
+        eng.progress()
+        assert len(fired) == 1
+        for r in reqs:
+            r.complete()
+        eng.progress()
+        assert len(fired) == 3
+
+    def test_event_queue_defers_heavy_work(self):
+        eng = ProgressEngine()
+        evq = EventQueue()
+        eng.async_start(lambda t: (evq.emit("ev"), DONE)[1])
+        eng.progress()
+        assert len(evq) == 1
+        assert evq.drain() == ["ev"]
+        assert len(evq) == 0

@@ -1,0 +1,158 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret
+mode executes the kernel bodies in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention as fa_kernel
+from repro.kernels.decode_attention import flash_decode as fd_kernel
+from repro.kernels.rmsnorm import rmsnorm_bwd, rmsnorm_fwd
+from repro.kernels.ssd_scan import ssd_chunk as ssd_kernel
+
+KEY = jax.random.PRNGKey(42)
+
+
+def tols(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,Sq,Sk,H,KVH,hd", [
+        (1, 128, 128, 2, 2, 64),
+        (2, 256, 256, 4, 2, 64),
+        (1, 256, 512, 6, 3, 64),     # GQA, Sk > Sq
+        (2, 128, 128, 8, 2, 128),
+        (1, 384, 384, 3, 1, 64),     # MQA, odd head count
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_ref(self, B, Sq, Sk, H, KVH, hd, causal, dtype):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+        k = jax.random.normal(ks[1], (B, Sk, KVH, hd), dtype)
+        v = jax.random.normal(ks[2], (B, Sk, KVH, hd), dtype)
+        out = fa_kernel(q, k, v, causal=causal, interpret=True)
+        expected = ref.flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expected, np.float32),
+            **tols(dtype))
+
+    def test_block_shape_independence(self):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 512, 4, 64))
+        k = jax.random.normal(ks[1], (1, 512, 2, 64))
+        v = jax.random.normal(ks[2], (1, 512, 2, 64))
+        outs = [fa_kernel(q, k, v, causal=True, block_q=bq, block_k=bk,
+                          interpret=True)
+                for bq, bk in [(128, 128), (256, 128), (128, 256), (512, 512)]]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                       atol=1e-5, rtol=1e-5)
+
+    def test_grad_path(self):
+        """custom_vjp backward (reference remat) is differentiable."""
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 128, 2, 64))
+        k = jax.random.normal(ks[1], (1, 128, 2, 64))
+        v = jax.random.normal(ks[2], (1, 128, 2, 64))
+
+        def loss(q, k, v):
+            return jnp.sum(ops.flash_attention(q, k, v, True, True) ** 2)
+
+        g = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+        def loss_ref(q, k, v):
+            return jnp.sum(ref.flash_attention_ref(q, k, v, causal=True) ** 2)
+
+        g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g, g_ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4, rtol=1e-4)
+
+
+class TestFlashDecode:
+    @pytest.mark.parametrize("B,S,H,KVH,hd", [
+        (1, 512, 4, 2, 64),
+        (2, 1024, 8, 8, 64),
+        (3, 512, 14, 2, 64),     # qwen2-0.5b head layout
+        (2, 2048, 8, 1, 128),    # MQA long cache
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_ref(self, B, S, H, KVH, hd, dtype):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, H, hd), dtype)
+        kc = jax.random.normal(ks[1], (B, S, KVH, hd), dtype)
+        vc = jax.random.normal(ks[2], (B, S, KVH, hd), dtype)
+        lengths = jnp.asarray(
+            np.random.RandomState(0).randint(1, S, size=(B,)), jnp.int32)
+        out = fd_kernel(q, kc, vc, lengths, block_k=256, interpret=True)
+        expected = ref.decode_attention_ref(q, kc, vc, lengths)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expected, np.float32),
+            **tols(dtype))
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("N,D", [(256, 512), (1024, 960), (512, 896)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_fwd(self, N, D, dtype):
+        ks = jax.random.split(KEY, 2)
+        x = jax.random.normal(ks[0], (N, D), dtype)
+        s = jax.random.normal(ks[1], (D,), jnp.float32) + 1.0
+        out = rmsnorm_fwd(x, s, interpret=True)
+        expected = ref.rmsnorm_ref(x, s)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expected, np.float32),
+            **tols(dtype))
+
+    def test_bwd_matches_autodiff(self):
+        ks = jax.random.split(KEY, 3)
+        x = jax.random.normal(ks[0], (512, 256))
+        s = jax.random.normal(ks[1], (256,)) + 1.0
+        g = jax.random.normal(ks[2], (512, 256))
+        dx, ds = rmsnorm_bwd(x, s, g, interpret=True)
+        ds = jnp.sum(ds, axis=0)
+        ref_dx, ref_ds = jax.vjp(lambda x_, s_: ref.rmsnorm_ref(x_, s_), x, s)[1](g)
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(ref_dx),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(ds), np.asarray(ref_ds),
+                                   atol=1e-3, rtol=1e-3)
+
+    def test_custom_vjp_op(self):
+        x = jax.random.normal(KEY, (256, 128))
+        s = jnp.ones((128,))
+        f = lambda x_, s_: jnp.sum(ops.rmsnorm(x_, s_, 1e-6, True) ** 2)
+        fr = lambda x_, s_: jnp.sum(ref.rmsnorm_ref(x_, s_) ** 2)
+        gx, gs = jax.grad(f, argnums=(0, 1))(x, s)
+        rx, rs = jax.grad(fr, argnums=(0, 1))(x, s)
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(gs), np.asarray(rs), atol=1e-3)
+
+
+class TestSSDChunk:
+    @pytest.mark.parametrize("B,Q,nh,hp,ds", [
+        (1, 64, 8, 32, 32),
+        (2, 128, 16, 64, 64),
+        (1, 256, 8, 64, 128),    # mamba2-1.3b-like chunk
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_ref(self, B, Q, nh, hp, ds, dtype):
+        ks = jax.random.split(KEY, 5)
+        x = jax.random.normal(ks[0], (B, Q, nh, hp), dtype)
+        b = jax.random.normal(ks[1], (B, Q, ds), dtype)
+        c = jax.random.normal(ks[2], (B, Q, ds), dtype)
+        dt = jax.nn.softplus(jax.random.normal(ks[3], (B, Q, nh))) * 0.1
+        a_log = jax.random.uniform(ks[4], (nh,), minval=0.0, maxval=2.0)
+        y, st, dec = ssd_kernel(x, b, c, dt.astype(dtype), a_log,
+                                block_h=max(nh // 2, 1), interpret=True)
+        y_r, st_r, dec_r = ref.ssd_chunk_ref(x, b, c, dt.astype(dtype), a_log)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(y_r, np.float32), **tols(dtype))
+        np.testing.assert_allclose(np.asarray(st), np.asarray(st_r),
+                                   atol=3e-2 if dtype == jnp.bfloat16 else 3e-5,
+                                   rtol=3e-2 if dtype == jnp.bfloat16 else 3e-5)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(dec_r),
+                                   atol=1e-5, rtol=1e-5)

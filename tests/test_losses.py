@@ -1,0 +1,81 @@
+"""Chunked-vocab cross entropy vs the plain formulation (values + grads)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import registry
+from repro.train.losses import chunked_vocab_xent, plain_xent
+from tests.conftest import reduce_cfg
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("V,chunk", [(256, 64), (250, 64), (100, 128), (512, 512)])
+@pytest.mark.parametrize("transpose", [False, True])
+def test_matches_plain(V, chunk, transpose):
+    ks = jax.random.split(KEY, 3)
+    B, S, D = 2, 8, 16
+    x = jax.random.normal(ks[0], (B, S, D))
+    table = jax.random.normal(ks[1], (D, V) if transpose else (V, D)) * 0.1
+    labels = jax.random.randint(ks[2], (B, S), 0, V)
+    logits = (jnp.einsum("bsd,dv->bsv", x, table) if transpose
+              else jnp.einsum("bsd,vd->bsv", x, table)).astype(jnp.float32)
+    ref = plain_xent(logits, labels)
+    out = chunked_vocab_xent(x, table, labels, chunk, transpose)
+    np.testing.assert_allclose(float(out), float(ref), atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("transpose", [False, True])
+def test_gradients_match_plain(transpose):
+    ks = jax.random.split(KEY, 3)
+    B, S, D, V = 2, 8, 16, 200
+    x = jax.random.normal(ks[0], (B, S, D))
+    table = jax.random.normal(ks[1], (D, V) if transpose else (V, D)) * 0.1
+    labels = jax.random.randint(ks[2], (B, S), 0, V)
+
+    def loss_chunked(x, t):
+        return chunked_vocab_xent(x, t, labels, 64, transpose)
+
+    def loss_plain(x, t):
+        lg = (jnp.einsum("bsd,dv->bsv", x, t) if transpose
+              else jnp.einsum("bsd,vd->bsv", x, t)).astype(jnp.float32)
+        return plain_xent(lg, labels)
+
+    gx, gt = jax.grad(loss_chunked, argnums=(0, 1))(x, table)
+    rx, rt = jax.grad(loss_plain, argnums=(0, 1))(x, table)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), atol=1e-5,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(gt), np.asarray(rt), atol=1e-5,
+                               rtol=1e-4)
+
+
+def test_model_loss_impl_equivalence(rng):
+    """transformer.loss_fn(plain) == loss_fn(chunked_vocab) incl. grads."""
+    cfg_p = reduce_cfg(get_config("qwen2-0.5b"))
+    cfg_c = cfg_p.with_overrides(loss_impl="chunked_vocab", loss_vocab_chunk=64)
+    params = registry.init_params(cfg_p, rng)
+    batch = {"tokens": jnp.arange(32, dtype=jnp.int32).reshape(2, 16) % 256,
+             "labels": jnp.ones((2, 16), jnp.int32)}
+    (lp, _), gp = jax.value_and_grad(
+        lambda p: registry.loss_fn(p, cfg_p, batch), has_aux=True)(params)
+    (lc, _), gc = jax.value_and_grad(
+        lambda p: registry.loss_fn(p, cfg_c, batch), has_aux=True)(params)
+    np.testing.assert_allclose(float(lp), float(lc), atol=1e-4, rtol=1e-4)
+    # grads agree to bf16 rounding (the two paths round differently)
+    errs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))), gp, gc)
+    assert max(jax.tree.leaves(errs)) < 2e-2, errs
+
+
+def test_untied_model_loss_impl_equivalence(rng):
+    cfg_p = reduce_cfg(get_config("pixtral-12b"))
+    cfg_c = cfg_p.with_overrides(loss_impl="chunked_vocab", loss_vocab_chunk=64)
+    params = registry.init_params(cfg_p, rng)
+    batch = {"tokens": jnp.arange(32, dtype=jnp.int32).reshape(2, 16) % 256,
+             "labels": jnp.ones((2, 16), jnp.int32)}
+    lp, _ = registry.loss_fn(params, cfg_p, batch)
+    lc, _ = registry.loss_fn(params, cfg_c, batch)
+    np.testing.assert_allclose(float(lp), float(lc), atol=1e-4, rtol=1e-4)

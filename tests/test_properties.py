@@ -1,0 +1,191 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import hlo as hlo_mod
+from repro.collectives.compression import dequantize_int8, quantize_int8
+from repro.core import DONE, NOPROGRESS, ProgressEngine
+from repro.kernels import ref
+from repro.sharding import DEFAULT_RULES, resolve_spec
+from jax.sharding import PartitionSpec as P
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Progress engine invariants
+# ---------------------------------------------------------------------------
+
+@SETTINGS
+@given(st.lists(st.integers(min_value=0, max_value=5), min_size=1, max_size=30))
+def test_engine_all_tasks_complete_exactly_once(poll_counts):
+    """Every task completes exactly once regardless of poll cadence."""
+    eng = ProgressEngine()
+    completions = []
+
+    for i, n in enumerate(poll_counts):
+        state = {"left": n, "id": i}
+
+        def poll(thing, state=state):
+            if state["left"] <= 0:
+                completions.append(state["id"])
+                return DONE
+            state["left"] -= 1
+            return NOPROGRESS
+
+        eng.async_start(poll, state)
+    for _ in range(max(poll_counts) + 2):
+        eng.progress()
+    assert sorted(completions) == list(range(len(poll_counts)))
+    assert eng.default_stream.pending == 0
+
+
+@SETTINGS
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=20))
+def test_engine_spawn_depth(depth, width):
+    """Spawned chains of any depth eventually drain."""
+    eng = ProgressEngine()
+    seen = []
+
+    def make(level):
+        def poll(thing):
+            seen.append(level)
+            if level < depth:
+                thing.spawn(make(level + 1), None)
+            return DONE
+        return poll
+
+    for _ in range(width):
+        eng.async_start(make(1), None)
+    eng.drain(timeout=10)
+    assert len(seen) == depth * width
+
+
+# ---------------------------------------------------------------------------
+# Online softmax == softmax (the flash invariant)
+# ---------------------------------------------------------------------------
+
+@SETTINGS
+@given(st.integers(min_value=1, max_value=4),      # chunks
+       st.integers(min_value=8, max_value=32),     # chunk size
+       st.integers(min_value=1, max_value=4))      # rows
+def test_online_softmax_equals_softmax(n_chunks, chunk, rows):
+    rng = np.random.RandomState(n_chunks * 100 + chunk)
+    s = rng.randn(rows, n_chunks * chunk).astype(np.float32) * 5
+    # online pass
+    m = np.full((rows, 1), -1e30, np.float32)
+    l = np.zeros((rows, 1), np.float32)
+    acc = np.zeros((rows, 1), np.float32)
+    v = rng.randn(rows, n_chunks * chunk, 1).astype(np.float32)
+    for i in range(n_chunks):
+        blk = s[:, i * chunk:(i + 1) * chunk]
+        vb = v[:, i * chunk:(i + 1) * chunk, 0]
+        m_new = np.maximum(m, blk.max(-1, keepdims=True))
+        p = np.exp(blk - m_new)
+        corr = np.exp(m - m_new)
+        l = l * corr + p.sum(-1, keepdims=True)
+        acc = acc * corr + (p * vb).sum(-1, keepdims=True)
+        m = m_new
+    online = acc / l
+    # reference
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    expected = (p * v[..., 0]).sum(-1, keepdims=True)
+    np.testing.assert_allclose(online, expected, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Quantization invariants
+# ---------------------------------------------------------------------------
+
+@SETTINGS
+@given(st.integers(min_value=1, max_value=2048),
+       st.floats(min_value=0.01, max_value=100.0))
+def test_quantize_roundtrip_bounded(n, scale):
+    rng = np.random.RandomState(n)
+    x = jnp.asarray(rng.randn(n).astype(np.float32) * scale)
+    q, s = quantize_int8(x, block=128)
+    xr = dequantize_int8(q, s, n)
+    # error per element bounded by half a bin (= scale value of its block)
+    per_block_bin = np.repeat(np.asarray(s).reshape(-1), 128)[:n]
+    assert np.all(np.abs(np.asarray(xr - x)) <= per_block_bin * 0.5 + 1e-6)
+
+
+@SETTINGS
+@given(st.integers(min_value=2, max_value=512))
+def test_quantize_idempotent(n):
+    """Quantizing already-quantized data is lossless."""
+    rng = np.random.RandomState(n)
+    x = jnp.asarray(rng.randn(n).astype(np.float32))
+    q, s = quantize_int8(x, block=64)
+    xr = dequantize_int8(q, s, n)
+    q2, s2 = quantize_int8(xr, block=64)
+    xr2 = dequantize_int8(q2, s2, n)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(xr2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rule invariants
+# ---------------------------------------------------------------------------
+
+_mesh = None
+
+
+def _get_mesh():
+    global _mesh
+    if _mesh is None:
+        _mesh = jax.make_mesh((1, 1), ("data", "model"),
+                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _mesh
+
+
+@SETTINGS
+@given(st.lists(st.sampled_from(sorted(DEFAULT_RULES)), min_size=1, max_size=4),
+       st.lists(st.integers(min_value=1, max_value=4096), min_size=1, max_size=4))
+def test_resolve_spec_never_assigns_duplicate_axes(axes, dims):
+    n = min(len(axes), len(dims))
+    spec = resolve_spec(tuple(axes[:n]), tuple(dims[:n]), _get_mesh())
+    used = [a for part in spec if part for a in
+            (part if isinstance(part, tuple) else (part,))]
+    assert len(used) == len(set(used))
+
+
+@SETTINGS
+@given(st.sampled_from(sorted(DEFAULT_RULES)),
+       st.integers(min_value=1, max_value=1000))
+def test_resolve_spec_divisibility(axis, dim):
+    """A sharded dim is always divisible by the assigned axis product."""
+    import math
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2) \
+        if len(jax.devices()) >= 8 else _get_mesh()
+    spec = resolve_spec((axis,), (dim,), mesh)
+    if spec and spec[0]:
+        parts = spec[0] if isinstance(spec[0], tuple) else (spec[0],)
+        size = math.prod(mesh.shape[a] for a in parts)
+        assert dim % size == 0
+
+
+# ---------------------------------------------------------------------------
+# HLO parser robustness
+# ---------------------------------------------------------------------------
+
+@SETTINGS
+@given(st.integers(min_value=1, max_value=9),
+       st.integers(min_value=8, max_value=64))
+def test_hlo_flops_scale_with_trip_count(layers, width):
+    """Parsed FLOPs must scale linearly with scan length."""
+    def model(x, ws):
+        x, _ = jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, ws)
+        return x.sum()
+
+    x = jax.ShapeDtypeStruct((4, width), jnp.float32)
+    ws = jax.ShapeDtypeStruct((layers, width, width), jnp.float32)
+    txt = jax.jit(model).lower(x, ws).compile().as_text()
+    res = hlo_mod.analyze(txt)
+    dot_flops = 2 * 4 * width * width * layers
+    assert res["flops"] >= dot_flops
+    assert res["flops"] <= dot_flops * 2.5 + 10000

@@ -1,0 +1,93 @@
+"""int8 weight quantization for serving: roundtrip + model-level checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import registry
+from repro.serve.quantization import (
+    QuantizedTensor, dequantize_tree, quantize_tree, quantized_shapes)
+from tests.conftest import reduce_cfg
+
+
+def test_roundtrip_error_bounded(rng):
+    w = jax.random.normal(rng, (256, 512)) * 0.3
+    qt = quantize_tree({"w": w}, min_size=1)["w"]
+    assert isinstance(qt, QuantizedTensor)
+    assert qt.q.dtype == jnp.int8
+    back = dequantize_tree({"w": qt}, jnp.float32)["w"]
+    # per-channel symmetric int8: error ≤ scale/2 per element
+    scale = np.asarray(qt.scale)
+    err = np.abs(np.asarray(back) - np.asarray(w))
+    assert np.all(err <= scale * 0.5 + 1e-7)
+
+
+def test_small_and_1d_leaves_untouched(rng):
+    tree = {"big": jax.random.normal(rng, (512, 512)),
+            "small": jax.random.normal(rng, (4, 4)),
+            "vec": jnp.ones((1000,)),
+            "step": jnp.zeros((), jnp.int32)}
+    q = quantize_tree(tree, min_size=1 << 10)
+    assert isinstance(q["big"], QuantizedTensor)
+    assert not isinstance(q["small"], QuantizedTensor)
+    assert not isinstance(q["vec"], QuantizedTensor)
+    assert q["step"].dtype == jnp.int32
+
+
+def test_decode_logits_close_to_fp(rng):
+    """Quantized-weight decode ranks tokens ~like the fp model."""
+    cfg = reduce_cfg(get_config("qwen2-0.5b"))
+    params = registry.init_params(cfg, rng)
+    qparams = quantize_tree(params, min_size=1 << 10)
+    dq = dequantize_tree(qparams, jnp.dtype(cfg.dtype))
+    B = 2
+    cache = registry.init_cache(cfg, B, 16)
+    toks = jnp.ones((B, 1), jnp.int32)
+    pos = jnp.zeros((B,), jnp.int32)
+    lf, _ = registry.decode_step(params, cfg, cache, toks, pos)
+    lq, _ = registry.decode_step(dq, cfg, cache, toks, pos)
+    a, b = np.asarray(lf[:, 0], np.float32), np.asarray(lq[:, 0], np.float32)
+    # correlation of logits is the robust closeness metric for int8
+    for i in range(B):
+        corr = np.corrcoef(a[i], b[i])[0, 1]
+        assert corr > 0.99, corr
+    assert np.argmax(a[0]) == np.argmax(b[0])
+
+
+def test_int8_kv_cache_decode_tracks_bf16(rng):
+    """Multi-step decode with int8 KV cache: logits corr > 0.999 and
+    identical greedy tokens vs the bf16 cache."""
+    cfg = reduce_cfg(get_config("qwen2-0.5b"))
+    cfg8 = cfg.with_overrides(kv_cache_dtype="int8")
+    params = registry.init_params(cfg, rng)
+    B, S = 2, 16
+    c16 = registry.init_cache(cfg, B, S)
+    c8 = registry.init_cache(cfg8, B, S)
+    assert c8["k"].dtype == jnp.int8 and "k_scale" in c8
+    toks = jnp.array([[3], [7]], jnp.int32)
+    for t in range(5):
+        pos = jnp.full((B,), t, jnp.int32)
+        l16, c16 = registry.decode_step(params, cfg, c16, toks, pos)
+        l8, c8 = registry.decode_step(params, cfg8, c8, toks, pos)
+        a = np.asarray(l16[:, 0], np.float32)
+        b = np.asarray(l8[:, 0], np.float32)
+        assert np.corrcoef(a.ravel(), b.ravel())[0, 1] > 0.999
+        assert np.array_equal(a.argmax(-1), b.argmax(-1))
+        toks = jnp.asarray(a.argmax(-1))[:, None].astype(jnp.int32)
+
+
+def test_quantized_shapes_structure():
+    cfg = reduce_cfg(get_config("smollm-360m"))
+    shapes = registry.param_shapes(cfg)
+    qshapes = quantized_shapes(shapes, min_size=1 << 10)
+    n_q = sum(isinstance(x, QuantizedTensor)
+              for x in jax.tree.leaves(
+                  qshapes, is_leaf=lambda x: isinstance(x, QuantizedTensor)))
+    assert n_q > 0
+    # every quantized leaf pairs int8 data with f32 scales
+    for leaf in jax.tree.leaves(qshapes,
+                                is_leaf=lambda x: isinstance(x, QuantizedTensor)):
+        if isinstance(leaf, QuantizedTensor):
+            assert leaf.q.dtype == jnp.int8
+            assert leaf.scale.dtype == jnp.float32
+            assert leaf.scale.shape[-1] == 1

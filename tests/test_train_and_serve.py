@@ -1,0 +1,117 @@
+"""End-to-end trainer (with resume) + continuous-batching server tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ProgressEngine
+from repro.data.pipeline import PrefetchPipeline, SyntheticLM
+from repro.models import registry
+from repro.serve.engine import GenRequest, ServeEngine
+from repro.train import optimizer as opt_mod
+from repro.train.train_loop import Trainer, TrainLoopConfig
+from tests.conftest import reduce_cfg
+
+
+def tiny_setup(tmp_path, rng, steps=6, resume=True):
+    cfg = reduce_cfg(get_config("smollm-360m"),
+                     num_layers=2, d_model=32, d_ff=64, vocab_size=64)
+    params = registry.init_params(cfg, rng)
+    ocfg = opt_mod.AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=50)
+    opt_state = opt_mod.init(params)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: registry.loss_fn(p, cfg, batch), has_aux=True)(params)
+        params, opt_state, om = opt_mod.apply(ocfg, opt_state, params, grads)
+        return params, opt_state, dict(loss=loss, **om)
+
+    eng = ProgressEngine()
+    pipe = PrefetchPipeline(SyntheticLM(64, 16, 4, seed=3), eng, depth=2)
+    tl = TrainLoopConfig(total_steps=steps, checkpoint_every=3,
+                         checkpoint_dir=str(tmp_path / "ckpt"),
+                         log_every=1, resume=resume)
+    return Trainer(step_fn, params, opt_state, pipe, tl, engine=eng), pipe
+
+
+class TestTrainer:
+    def test_loss_decreases(self, tmp_path, rng):
+        tr, pipe = tiny_setup(tmp_path, rng, steps=12)
+        log = tr.run()
+        pipe.close()
+        first, last = log[0]["loss"], log[-1]["loss"]
+        assert np.isfinite(first) and np.isfinite(last)
+        assert last < first, (first, last)
+
+    def test_checkpoint_restart_resumes(self, tmp_path, rng):
+        tr, pipe = tiny_setup(tmp_path, rng, steps=4)
+        tr.run()
+        pipe.close()
+        assert tr.ckpt.latest_step() == 3
+        # "crash" and restart: new trainer resumes from step 4
+        tr2, pipe2 = tiny_setup(tmp_path, rng, steps=6)
+        log = tr2.run()
+        pipe2.close()
+        assert tr2.start_step == 4
+        assert log[0]["step"] >= 4
+
+    def test_straggler_records(self, tmp_path, rng):
+        tr, pipe = tiny_setup(tmp_path, rng, steps=3)
+        tr.run()
+        pipe.close()
+        assert len(tr.straggler.history) == 3
+
+
+class TestServeEngine:
+    @pytest.fixture
+    def served(self, rng):
+        cfg = reduce_cfg(get_config("qwen2-0.5b"),
+                         num_layers=2, d_model=32, d_ff=64, vocab_size=64)
+        params = registry.init_params(cfg, rng)
+        eng = ProgressEngine()
+        srv = ServeEngine(cfg, params, eng, batch_slots=4, max_seq=64)
+        return srv, eng
+
+    def test_single_request(self, served):
+        srv, eng = served
+        req = GenRequest("r0", np.array([1, 2, 3], np.int32), max_new_tokens=5)
+        done = srv.submit(req)
+        srv.run_until_idle(timeout=120)
+        assert done.is_complete
+        assert len(done.value()) == 5
+        assert all(0 <= t < 64 for t in done.value())
+
+    def test_continuous_batching_many_requests(self, served):
+        srv, eng = served
+        reqs = [GenRequest(f"r{i}", np.array([i + 1, i + 2], np.int32),
+                           max_new_tokens=4) for i in range(7)]
+        dones = [srv.submit(r) for r in reqs]    # 7 requests, 4 slots
+        srv.run_until_idle(timeout=240)
+        assert all(d.is_complete for d in dones)
+        assert all(len(d.value()) == 4 for d in dones)
+        # slots were reused: more requests than slots all completed
+        assert len(srv.slots.free_slots()) == 4
+
+    def test_greedy_determinism(self, served):
+        srv, eng = served
+        r1 = GenRequest("a", np.array([5, 6], np.int32), max_new_tokens=4)
+        d1 = srv.submit(r1)
+        srv.run_until_idle(timeout=120)
+        r2 = GenRequest("b", np.array([5, 6], np.int32), max_new_tokens=4)
+        d2 = srv.submit(r2)
+        srv.run_until_idle(timeout=120)
+        assert d1.value() == d2.value()
+
+    def test_latency_metrics_recorded(self, served):
+        srv, eng = served
+        req = GenRequest("r0", np.array([1], np.int32), max_new_tokens=2)
+        srv.submit(req)
+        srv.run_until_idle(timeout=120)
+        assert req.first_token_at is not None
+        assert req.finished_at is not None
+        assert req.finished_at >= req.first_token_at
