@@ -11,21 +11,27 @@ from repro.core.engine import (
     reset_global_engine,
 )
 from repro.core.request import (
+    CompletionCounter,
     GeneralizedRequest,
     PollRequest,
     Request,
     request_of,
 )
+from repro.core.executor import ProgressExecutor
 from repro.core.task_class import TaskGraph, TaskQueue
 from repro.core.events import CompletionWatcher, EventQueue
 from repro.core.futures import chain, io_future, jax_future
+from repro.core import stats
 
 __all__ = [
     "DONE", "NOPROGRESS", "PENDING",
     "AsyncThing", "ProgressEngine", "Stream", "Subsystem",
     "global_engine", "reset_global_engine",
-    "GeneralizedRequest", "PollRequest", "Request", "request_of",
+    "CompletionCounter", "GeneralizedRequest", "PollRequest", "Request",
+    "request_of",
+    "ProgressExecutor",
     "TaskGraph", "TaskQueue",
     "CompletionWatcher", "EventQueue",
     "chain", "io_future", "jax_future",
+    "stats",
 ]

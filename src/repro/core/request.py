@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Iterable, Optional
 
 
 class Request:
@@ -32,6 +32,21 @@ class Request:
     def is_complete(self) -> bool:
         """MPIX_Request_is_complete: side-effect free, never progresses."""
         return self._complete
+
+    @property
+    def exception(self) -> Optional[BaseException]:
+        """The failure, if this request completed via ``fail`` (else None).
+        Side-effect free, like ``is_complete`` — dependency trackers use
+        it to propagate failures without calling ``value()``."""
+        return self._exc
+
+    @property
+    def failed(self) -> bool:
+        return self._complete and self._exc is not None
+
+    def wait(self, engine, stream=None, timeout: float | None = None) -> Any:
+        """Convenience: ``engine.wait(self)`` (MPI_Wait on this handle)."""
+        return engine.wait(self, stream=stream, timeout=timeout)
 
     def complete(self, value: Any = None) -> None:
         self._value = value
@@ -85,6 +100,57 @@ class GeneralizedRequest(Request):
     def free(self) -> None:
         if self.free_fn is not None:
             self.free_fn(self.extra_state)
+
+
+class CompletionCounter:
+    """Wait-set aggregate (paper §4.5 / MPI Continuations idiom): counts
+    completions across a set of requests with one atomic-read sweep.
+
+    Unlike ``engine.wait_all`` this is a passive observable — task-runtime
+    schedulers poll ``remaining`` (one ``is_complete`` read per request,
+    the Fig-12 cost model) and release dependents when it hits zero.
+    ``as_request()`` adapts the counter back into a waitable ``Request``
+    so counters compose with ``wait``/``wait_any``/``TaskGraph`` deps.
+    """
+
+    def __init__(self, requests: Iterable["Request"] = ()):
+        self._lock = threading.Lock()
+        self._reqs: list[Request] = []
+        for r in requests:
+            self.add(r)
+
+    def add(self, request: "Request") -> "CompletionCounter":
+        with self._lock:
+            self._reqs.append(request)
+        return self
+
+    @property
+    def total(self) -> int:
+        with self._lock:
+            return len(self._reqs)
+
+    @property
+    def completed(self) -> int:
+        with self._lock:
+            reqs = list(self._reqs)
+        return sum(1 for r in reqs if r.is_complete)
+
+    @property
+    def remaining(self) -> int:
+        return self.total - self.completed
+
+    @property
+    def is_complete(self) -> bool:
+        return self.remaining == 0
+
+    @property
+    def failed(self) -> list["Request"]:
+        with self._lock:
+            reqs = list(self._reqs)
+        return [r for r in reqs if r.failed]
+
+    def as_request(self) -> "PollRequest":
+        return PollRequest(lambda: self.is_complete, tag="ccounter")
 
 
 def request_of(fn: Callable[[], bool], tag: str = "") -> "PollRequest":

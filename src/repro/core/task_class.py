@@ -69,6 +69,8 @@ class TaskGraph:
 
     The paper notes general-purpose dependency tracking belongs in the
     application's poll_fn, not the MPI library — this is that layer.
+    A dependency that *fails* (``Request.fail``) fails its dependents
+    with the same exception, transitively, without starting them.
     """
 
     def __init__(self, engine: ProgressEngine, stream: Optional[Stream] = None):
@@ -104,6 +106,14 @@ class TaskGraph:
             items = list(self._tasks.items())
         finished = []
         for tid, t in items:
+            failed_dep = next((d for d in t["deps"] if d.failed), None)
+            if failed_dep is not None:
+                # failure propagation: a failed dependency fails this task
+                # (transitively — our request now reads as failed to ours'
+                # dependents on the next sweep) without ever starting it
+                t["req"].fail(failed_dep.exception)
+                finished.append(tid)
+                continue
             if any(not d.is_complete for d in t["deps"]):
                 continue                      # dependencies pending: skip poll
             if not t["started"]:

@@ -17,12 +17,17 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--progress-workers", type=int, default=0,
+                    help="N background progress threads (0 = caller-driven)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print progress statistics after serving")
     args = ap.parse_args()
 
     import jax
 
     from repro.configs import get_config
-    from repro.core import ProgressEngine
+    from repro.core import ProgressEngine, ProgressExecutor
+    from repro.core import stats as stats_mod
     from repro.models import registry
     from repro.serve.engine import GenRequest, ServeEngine
     from examples.train_lm import SCALES
@@ -47,8 +52,13 @@ def main():
 
     params = registry.init_params(cfg, jax.random.PRNGKey(0))
     eng = ProgressEngine()
+    executor = None
+    if args.progress_workers > 0:
+        executor = ProgressExecutor(eng, args.progress_workers)
     srv = ServeEngine(cfg, params, eng, batch_slots=args.slots,
-                      max_seq=args.max_seq)
+                      max_seq=args.max_seq, executor=executor)
+    if executor is not None:
+        executor.start()
     rng = np.random.RandomState(1)
     reqs = []
     for i in range(args.requests):
@@ -58,12 +68,19 @@ def main():
         srv.submit(r)
         reqs.append(r)
     srv.run_until_idle(timeout=600)
+    srv.close(timeout=60)
+    if executor is not None:
+        executor.shutdown(drain=True, timeout=60)
 
     gen = sum(len(r.out_tokens) for r in reqs)
     ttfts = [(r.first_token_at - r.submitted_at) for r in reqs]
+    mode = (f"{args.progress_workers} progress workers"
+            if args.progress_workers > 0 else "caller-driven progress")
     print(f"served {len(reqs)} requests, {gen} tokens in {srv.steps} fused "
           f"decode steps (batching factor {gen / max(srv.steps, 1):.2f}x); "
-          f"mean TTFT {np.mean(ttfts) * 1e3:.0f} ms")
+          f"mean TTFT {np.mean(ttfts) * 1e3:.0f} ms [{mode}]")
+    if args.stats:
+        print(stats_mod.format_stats(stats_mod.collect(eng, executor)))
     return 0
 
 

@@ -3,18 +3,22 @@
 Serving is the dynamic side of the paper's story: requests arrive at
 arbitrary times (the "unexpected message queue" of MPI has no SPMD
 analogue — this layer is it).  Everything is an async task on one
-engine:
+engine, split across two serial contexts (§4.4):
 
-* request admission  — a subsystem hook draining the arrival queue into
-  free KV slots (prefill enqueued);
-* prefill            — device task polled via ``Array.is_ready``;
-* decode loop        — one fused decode step for ALL active slots per
-  iteration (continuous batching), again polled, never blocked on;
-* completion         — per-request events fired through
-  ``CompletionWatcher`` (paper §4.5).
+* admission stream   — perpetual task draining the arrival queue into
+  free KV slots (prefill runs here, token-by-token);
+* decode stream      — one fused decode step for ALL active slots per
+  iteration (continuous batching), polled via ``Array.is_ready``,
+  never blocked on;
+* completion         — per-request ``Request`` handles; event callbacks
+  compose via ``CompletionWatcher`` (paper §4.5).
 
-``serve_forever``-style progress is just ``engine.progress()`` in a
-loop — or embedded into a trainer's overlap window for online serving.
+Progress can be driven two ways: pass a ``ProgressExecutor`` and the
+admission/decode streams are adopted by its worker threads (background
+progress, §4.4); pass none and a cheap subsystem bridges both streams
+into every ``engine.progress()`` call, so the classic
+``while: engine.progress()`` loop — or a trainer's overlap window —
+still serves traffic.
 """
 from __future__ import annotations
 
@@ -29,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DONE, NOPROGRESS, ProgressEngine, Request
+from repro.core.executor import ProgressExecutor
 from repro.models import registry
 from repro.serve.kvcache import SlotCache
 
@@ -50,31 +55,70 @@ class GenRequest:
 class ServeEngine:
     def __init__(self, cfg, params, engine: ProgressEngine,
                  batch_slots: int = 8, max_seq: int = 512,
-                 greedy: bool = True):
+                 greedy: bool = True,
+                 executor: Optional[ProgressExecutor] = None):
         self.cfg = cfg
         self.params = params
         self.engine = engine
+        self.executor = executor
         self.slots = SlotCache(cfg, batch_slots, max_seq)
         self.batch_slots = batch_slots
         self.max_seq = max_seq
         self._arrivals: collections.deque[GenRequest] = collections.deque()
         self._active: dict[int, GenRequest] = {}
+        # one lock serialises admission/prefill against decode: the two
+        # streams may live on different executor workers, but KV cache and
+        # slot state are shared
         self._lock = threading.Lock()
         self._decode_inflight = None
+        self._stopping = False
         self._jit_decode = jax.jit(
             lambda p, c, t, q: registry.decode_step(p, cfg, c, t, q))
-        self.engine.register_subsystem("serve-admit", self._admit, cheap=True,
-                                       priority=4)
-        self.engine.async_start(self._decode_poll, None)
+        self.admit_stream = engine.stream("serve-admit")
+        self.decode_stream = engine.stream("serve-decode")
+        engine.async_start(self._admit_poll, None, self.admit_stream)
+        engine.async_start(self._decode_poll, None, self.decode_stream)
+        if executor is not None:
+            executor.adopt(self.admit_stream)
+            executor.adopt(self.decode_stream)
+            self._sub = None
+        else:
+            # no executor: bridge the serve streams into every
+            # engine.progress() call so single-threaded callers still serve
+            self._sub = engine.register_subsystem(
+                "serve-streams", self._poll_streams, cheap=True, priority=4)
         self.steps = 0
 
     # -- client API -------------------------------------------------------
     def submit(self, request: GenRequest) -> Request:
         with self._lock:
+            if self._stopping:
+                raise RuntimeError("serve engine is stopping")
             self._arrivals.append(request)
         return request.done_req
 
-    # -- admission subsystem -----------------------------------------------
+    # -- caller-driven bridge ---------------------------------------------
+    def _poll_streams(self) -> bool:
+        made = 0
+        for s in (self.admit_stream, self.decode_stream):
+            try:
+                made += s._poll_once()
+            except Exception:
+                # the broken task is already dropped and recorded on
+                # s.task_errors; the bridge must NOT let the exception
+                # escape, or the engine's isolation would unregister it
+                # and silently halt all serving
+                pass
+        return made > 0
+
+    # -- admission stream ---------------------------------------------------
+    def _admit_poll(self, thing) -> str:
+        self._admit()
+        with self._lock:
+            if self._stopping and not self._arrivals:
+                return DONE
+        return NOPROGRESS
+
     def _admit(self) -> bool:
         made = False
         with self._lock:
@@ -107,48 +151,86 @@ class ServeEngine:
         toks[slot_index, 0] = token
         return jnp.asarray(toks)
 
-    # -- fused decode loop ---------------------------------------------------
+    # -- fused decode stream --------------------------------------------------
     def _decode_poll(self, thing) -> str:
-        if self._decode_inflight is None:
-            if not self._active:
-                return NOPROGRESS          # idle; keep polling
-            toks = np.zeros((self.batch_slots, 1), np.int32)
-            for idx, req in self._active.items():
-                toks[idx, 0] = req.next_input
-            pos = self.slots.positions()
-            logits, cache = self._jit_decode(
-                self.params, self.slots.cache, jnp.asarray(toks), pos)
-            self._decode_inflight = (logits, cache)
-            return NOPROGRESS
-        logits, cache = self._decode_inflight
-        if not logits.is_ready():
-            return NOPROGRESS              # device still busy — no block
-        self._decode_inflight = None
-        self.slots.cache = cache
-        self.steps += 1
-        next_ids = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        finished = []
-        for idx, req in list(self._active.items()):
-            tok = int(next_ids[idx])
-            if req.first_token_at is None:
-                req.first_token_at = time.monotonic()
-            req.out_tokens.append(tok)
-            req.next_input = tok
-            self.slots.slots[idx].pos += 1
-            if (len(req.out_tokens) >= req.max_new_tokens
-                    or self.slots.slots[idx].pos >= self.max_seq - 1):
-                finished.append(idx)
-        for idx in finished:
-            req = self._active.pop(idx)
-            req.finished_at = time.monotonic()
-            self.slots.release(self.slots.slots[idx])
-            req.done_req.complete(req.out_tokens)
-        return NOPROGRESS                  # perpetual task
+        with self._lock:
+            if self._decode_inflight is None:
+                if not self._active:
+                    if self._stopping and not self._arrivals:
+                        return DONE
+                    return NOPROGRESS      # idle; keep polling
+                toks = np.zeros((self.batch_slots, 1), np.int32)
+                for idx, req in self._active.items():
+                    toks[idx, 0] = req.next_input
+                pos = self.slots.positions()
+                logits, cache = self._jit_decode(
+                    self.params, self.slots.cache, jnp.asarray(toks), pos)
+                self._decode_inflight = (logits, cache)
+                return NOPROGRESS
+            logits, cache = self._decode_inflight
+            if not logits.is_ready():
+                return NOPROGRESS          # device still busy — no block
+            self._decode_inflight = None
+            self.slots.cache = cache
+            self.steps += 1
+            next_ids = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            finished = []
+            for idx, req in list(self._active.items()):
+                tok = int(next_ids[idx])
+                if req.first_token_at is None:
+                    req.first_token_at = time.monotonic()
+                req.out_tokens.append(tok)
+                req.next_input = tok
+                self.slots.slots[idx].pos += 1
+                if (len(req.out_tokens) >= req.max_new_tokens
+                        or self.slots.slots[idx].pos >= self.max_seq - 1):
+                    finished.append(idx)
+            for idx in finished:
+                req = self._active.pop(idx)
+                req.finished_at = time.monotonic()
+                self.slots.release(self.slots.slots[idx])
+                req.done_req.complete(req.out_tokens)
+            return NOPROGRESS              # perpetual while serving
+    # -- lifecycle ------------------------------------------------------------
+    @property
+    def idle(self) -> bool:
+        with self._lock:
+            return not (self._active or self._arrivals)
 
-    # -- convenience ---------------------------------------------------------
     def run_until_idle(self, timeout: float = 120.0) -> None:
+        """Serve until the backlog empties.  With an executor the worker
+        threads do the progressing and this thread just waits; without one
+        it is the classic caller-driven progress loop."""
         t0 = time.monotonic()
-        while self._active or self._arrivals:
-            self.engine.progress()
+        while not self.idle:
+            if self.executor is not None and self.executor.running:
+                time.sleep(0.0005)
+            elif self._sub is not None:
+                self.engine.progress()          # bridge polls the streams
+            else:
+                # executor attached but not running (never started, or
+                # already shut down): drive the adopted streams inline so
+                # waiting can never silently hang
+                self._poll_streams()
+                self.engine.poll_subsystems()
             if time.monotonic() - t0 > timeout:
                 raise TimeoutError("serve engine did not drain")
+
+    def stop(self) -> None:
+        """Begin shutdown: reject new submissions; the perpetual
+        admission/decode tasks return DONE once the backlog is served, so
+        ``executor.shutdown(drain=True)`` / ``engine.drain`` terminate."""
+        with self._lock:
+            self._stopping = True
+
+    def close(self, timeout: float = 60.0) -> None:
+        """Stop and drain both serve streams (Listing 1.2 finalize)."""
+        self.stop()
+        if self.executor is not None and self.executor.running:
+            self.executor.drain(timeout)
+        else:
+            self.engine.drain(self.admit_stream, timeout=timeout)
+            self.engine.drain(self.decode_stream, timeout=timeout)
+        if self._sub is not None:
+            self.engine.unregister_subsystem(self._sub)
+            self._sub = None

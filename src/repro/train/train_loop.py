@@ -22,7 +22,8 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
-from repro.core import ProgressEngine, global_engine, jax_future
+from repro.core import ProgressEngine, ProgressExecutor, global_engine, \
+    jax_future
 from repro.core.request import Request
 from repro.distributed.fault_tolerance import StepWatchdog, StragglerDetector
 from repro.train import optimizer as opt_mod
@@ -37,6 +38,9 @@ class TrainLoopConfig:
     log_every: int = 10
     watchdog_limit_s: float = 600.0
     resume: bool = True
+    # >0: that many background progress workers drive prefetch/checkpoint/
+    # watchdog tasks (§4.4); 0: the overlap window self-progresses as before
+    progress_workers: int = 0
 
 
 class Trainer:
@@ -77,6 +81,23 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def run(self) -> list[dict]:
+        executor = None
+        if self.cfg.progress_workers > 0:
+            # background progress (§4.4): workers own the default stream's
+            # async tasks (prefetch fills, checkpoint stages, futures) plus
+            # the subsystem hooks; the overlap window below then *waits*
+            # (engine.wait yields to the executor) instead of polling
+            executor = ProgressExecutor(self.engine,
+                                        self.cfg.progress_workers)
+            executor.adopt(self.engine.default_stream)
+            executor.start()
+        try:
+            return self._run_loop()
+        finally:
+            if executor is not None:
+                executor.shutdown(drain=True, timeout=600)
+
+    def _run_loop(self) -> list[dict]:
         self.maybe_resume()
         loss_req: Request | None = None
         metrics = None
@@ -90,8 +111,8 @@ class Trainer:
             loss_req = jax_future(self.engine, metrics)
 
             # overlap window: drive collated progress until device done
-            while not loss_req.is_complete:
-                self.engine.progress()
+            # (with progress workers attached, wait yields to them instead)
+            self.engine.wait(loss_req)
             self.watchdog.disarm()
             dur = time.monotonic() - t0
             self.straggler.record("self", dur)

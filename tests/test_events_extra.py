@@ -1,0 +1,160 @@
+"""Event-path coverage: watcher re-entrancy, bounded drains, failure
+propagation through task graphs, and the O(1) head-only queue claim."""
+import pytest
+
+from repro.core import (
+    DONE, NOPROGRESS, CompletionWatcher, EventQueue, ProgressEngine,
+    Request, TaskGraph, TaskQueue,
+)
+
+
+class TestCompletionWatcherReentrancy:
+    def test_callback_registers_new_watch(self):
+        """A completion callback may register a follow-up watch on the
+        SAME watcher from inside the callback (the continuation pattern:
+        each completion schedules the next stage)."""
+        eng = ProgressEngine()
+        w = CompletionWatcher(eng)
+        fired = []
+        first, second = Request(tag="first"), Request(tag="second")
+
+        def on_first(req):
+            fired.append(req.tag)
+            w.watch(second, lambda r: fired.append(r.tag))  # re-entrant
+
+        w.watch(first, on_first)
+        first.complete()
+        eng.progress()
+        assert fired == ["first"]
+        assert w.pending == 1                     # the re-entrant watch
+        second.complete()
+        eng.progress()
+        assert fired == ["first", "second"]
+        assert w.pending == 0
+        # watcher's internal poll task must have retired cleanly
+        eng.progress()
+        assert eng.default_stream.pending == 0
+
+    def test_callback_chain_three_deep(self):
+        eng = ProgressEngine()
+        w = CompletionWatcher(eng)
+        order = []
+        reqs = [Request(tag=f"r{i}") for i in range(3)]
+
+        def chained(i):
+            def cb(req):
+                order.append(req.tag)
+                if i + 1 < len(reqs):
+                    w.watch(reqs[i + 1], chained(i + 1))
+                    reqs[i + 1].complete()
+            return cb
+
+        w.watch(reqs[0], chained(0))
+        reqs[0].complete()
+        for _ in range(4):
+            eng.progress()
+        assert order == ["r0", "r1", "r2"]
+
+
+class TestEventQueueBounds:
+    def test_drain_max_events_bounds(self):
+        evq = EventQueue()
+        for i in range(10):
+            evq.emit(i)
+        assert evq.drain(max_events=3) == [0, 1, 2]
+        assert len(evq) == 7
+        assert evq.drain(max_events=0) == []      # zero means take nothing
+        assert evq.drain(max_events=100) == list(range(3, 10))
+        assert evq.drain(max_events=5) == []      # empty queue
+        assert len(evq) == 0
+
+    def test_drain_unbounded_default(self):
+        evq = EventQueue()
+        for i in range(4):
+            evq.emit(i)
+        assert evq.drain() == [0, 1, 2, 3]
+
+
+class TestTaskGraphFailurePropagation:
+    def test_dep_fail_fails_dependent_without_starting(self):
+        eng = ProgressEngine()
+        g = TaskGraph(eng)
+        started = []
+        dep = Request()
+        r = g.add(lambda: True, deps=[dep],
+                  start_fn=lambda: started.append("x"))
+        eng.progress()
+        assert not r.is_complete
+        boom = ValueError("upstream exploded")
+        dep.fail(boom)
+        eng.progress()
+        assert r.is_complete and r.failed
+        assert started == []                      # never launched
+        with pytest.raises(ValueError, match="upstream exploded"):
+            r.value()
+        assert r.exception is boom                # original, not wrapped
+        assert g.pending == 0
+
+    def test_failure_propagates_transitively(self):
+        """a -> b -> c: failing a's dep fails b, which fails c."""
+        eng = ProgressEngine()
+        g = TaskGraph(eng)
+        gate = Request()
+        ra = g.add(lambda: True, deps=[gate])
+        rb = g.add(lambda: True, deps=[ra])
+        rc = g.add(lambda: True, deps=[rb])
+        eng.progress()
+        assert not (ra.is_complete or rb.is_complete or rc.is_complete)
+        gate.fail(RuntimeError("root cause"))
+        for _ in range(3):                        # one hop per sweep
+            eng.progress()
+        assert ra.failed and rb.failed and rc.failed
+        with pytest.raises(RuntimeError, match="root cause"):
+            rc.value()
+
+    def test_sibling_unaffected_by_failure(self):
+        eng = ProgressEngine()
+        g = TaskGraph(eng)
+        bad_dep, good_dep = Request(), Request()
+        r_bad = g.add(lambda: True, deps=[bad_dep])
+        r_good = g.add(lambda: True, deps=[good_dep],
+                       on_complete=lambda: "ok")
+        bad_dep.fail(RuntimeError("nope"))
+        good_dep.complete()
+        eng.progress()
+        eng.progress()
+        assert r_bad.failed
+        assert r_good.is_complete and r_good.value() == "ok"
+
+
+class TestTaskQueueHeadOnlyPolling:
+    def test_only_head_ready_fn_polled(self):
+        """The Fig-10 claim: progress cost is O(1) because only the queue
+        HEAD's ready_fn runs per sweep — tail tasks are never polled."""
+        eng = ProgressEngine()
+        q = TaskQueue(eng)
+        counts = [0] * 5
+        ready = {"upto": 0}
+
+        def mk(i):
+            def ready_fn():
+                counts[i] += 1
+                return i < ready["upto"]
+            return ready_fn
+
+        reqs = [q.submit(mk(i)) for i in range(5)]
+        for _ in range(4):
+            eng.progress()
+        assert counts[0] == 4                     # head polled each sweep
+        assert counts[1:] == [0, 0, 0, 0]         # tail untouched: O(1)
+        # release the first three: one sweep pops them in order, then
+        # polls the new head exactly once
+        ready["upto"] = 3
+        eng.progress()
+        assert [r.is_complete for r in reqs] == [True] * 3 + [False] * 2
+        assert counts[3] == 1 and counts[4] == 0
+        ready["upto"] = 5
+        eng.progress()
+        assert all(r.is_complete for r in reqs)
+        assert counts[4] >= 1
+        assert q.pending == 0

@@ -1,0 +1,437 @@
+"""Multi-threaded progress executor + wait-set tests (paper §4.4/§4.5).
+
+The assertions lean on repro.core.stats: the §4.4 claim is not just
+"N workers make progress" but "N workers on disjoint streams never
+contend" — Stream.contention counts exactly those lock collisions.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    DONE, NOPROGRESS, CompletionCounter, ProgressEngine, ProgressExecutor,
+    Request, stats,
+)
+
+
+def timed_task(duration, req=None, value=None):
+    """Dummy task (Listing 1.3) completing after ``duration`` seconds."""
+    deadline = time.monotonic() + duration
+
+    def poll(thing):
+        if time.monotonic() >= deadline:
+            if req is not None:
+                req.complete(value)
+            return DONE
+        return NOPROGRESS
+    return poll
+
+
+def wait_until(pred, timeout=10.0, what="condition"):
+    t0 = time.monotonic()
+    while not pred():
+        time.sleep(0.0005)
+        if time.monotonic() - t0 > timeout:
+            raise TimeoutError(what)
+
+
+class TestExecutorBasics:
+    def test_two_workers_two_disjoint_streams_progress_concurrently(self):
+        """The acceptance scenario: each stream's task completes only
+        after the OTHER stream has been polled — possible only if two
+        workers progress the streams concurrently — and disjoint streams
+        show zero lock contention (Fig 11, not Fig 9)."""
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=2, steal=False)
+        s1, s2 = ex.stream("left"), ex.stream("right")
+        polled = {"left": 0, "right": 0}
+        done = {"left": False, "right": False}
+
+        def make(mine, other):
+            def poll(thing):
+                polled[mine] += 1
+                if polled[other] > 0:          # requires concurrent polling
+                    done[mine] = True
+                    return DONE
+                return NOPROGRESS
+            return poll
+
+        eng.async_start(make("left", "right"), None, s1)
+        eng.async_start(make("right", "left"), None, s2)
+        with ex:
+            wait_until(lambda: done["left"] and done["right"], 10,
+                       "cross-stream completion")
+        st = stats.collect(eng, ex)
+        assert st.stream("left").contention == 0
+        assert st.stream("right").contention == 0
+        assert st.stream("left").completions == 1
+        assert st.stream("right").completions == 1
+
+    def test_tasks_run_on_worker_threads_not_caller(self):
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=2, steal=False)
+        s1, s2 = ex.stream(), ex.stream()
+        idents = {s1.name: set(), s2.name: set()}
+        stop = {"v": False}
+
+        def make(stream):
+            def poll(thing):
+                if stop["v"]:
+                    return DONE
+                idents[stream.name].add(threading.get_ident())
+                return NOPROGRESS
+            return poll
+
+        eng.async_start(make(s1), None, s1)
+        eng.async_start(make(s2), None, s2)
+        ex.start()
+        wait_until(lambda: idents[s1.name] and idents[s2.name], 10)
+        ids1, ids2 = set(idents[s1.name]), set(idents[s2.name])
+        stop["v"] = True
+        ex.shutdown(drain=True, timeout=5)
+        assert threading.get_ident() not in ids1 | ids2
+        # steal=False: one dedicated worker per stream, and they differ
+        assert len(ids1) == 1 and len(ids2) == 1
+        assert ids1 != ids2
+
+    def test_drain_leaves_zero_pending(self):
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=2)
+        streams = [ex.stream(f"d{i}") for i in range(4)]
+        for s in streams:
+            for _ in range(5):
+                eng.async_start(timed_task(0.01), None, s)
+        ex.start()
+        ex.drain(timeout=10)
+        assert all(s.pending == 0 for s in streams)
+        ex.shutdown(drain=True, timeout=5)
+        assert not ex.running
+
+    def test_shutdown_absorbs_pending_cross_thread_incoming(self):
+        """async_start lands tasks in the stream's cross-thread _incoming
+        buffer; shutdown(drain=True) must absorb and complete them even
+        when they were enqueued a moment before shutdown."""
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=2)
+        s = ex.stream("late")
+        ex.start()
+        reqs = [Request() for _ in range(20)]
+        for r in reqs:
+            eng.async_start(timed_task(0.002, req=r), None, s)  # -> _incoming
+        ex.shutdown(drain=True, timeout=10)
+        assert s.pending == 0
+        assert all(r.is_complete for r in reqs)
+
+    def test_shutdown_without_drain_leaves_tasks(self):
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=1, steal=False)
+        s = ex.stream()
+        ex.start()
+        ex.shutdown(drain=False)
+        eng.async_start(lambda t: NOPROGRESS, None, s)
+        assert s.pending == 1
+
+    def test_free_stream_raises_on_pending_work(self):
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=1)
+        s = ex.stream("busy")
+        eng.async_start(lambda t: NOPROGRESS, None, s)
+        with pytest.raises(RuntimeError, match="pending"):
+            eng.free_stream(s)
+
+    def test_drain_inline_when_not_running(self):
+        """drain works before start(): the caller progresses inline."""
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=2)
+        s = ex.stream()
+        for _ in range(3):
+            eng.async_start(timed_task(0.002), None, s)
+        ex.drain(timeout=10)
+        assert s.pending == 0
+
+
+class TestWorkStealing:
+    def test_idle_worker_steals_from_loaded_worker(self):
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=2, steal=True, steal_after=2)
+        # both streams on worker 0; worker 1 starts idle and must steal
+        s1, s2 = eng.stream("a"), eng.stream("b")
+        ex.adopt(s1, worker=0)
+        ex.adopt(s2, worker=0)
+        for s in (s1, s2):
+            for _ in range(3):
+                eng.async_start(timed_task(0.05), None, s)
+        with ex:
+            wait_until(lambda: sum(w.steals for w in ex.worker_stats()) > 0,
+                       10, "steal")
+            counts = [len(w.streams) for w in ex.worker_stats()]
+            assert counts == [1, 1]
+            ex.drain(timeout=10)
+        assert s1.pending == 0 and s2.pending == 0
+
+    def test_steal_preserves_single_owner_progress(self):
+        """After a steal, the stream still completes everything exactly
+        once (the serial-context invariant holds through the handoff)."""
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=4, steal=True, steal_after=1)
+        streams = [eng.stream(f"s{i}") for i in range(8)]
+        for s in streams:
+            ex.adopt(s, worker=0)               # all start on one worker
+        completions = {"n": 0}
+        lock = threading.Lock()
+        total = 0
+        for s in streams:
+            for _ in range(10):
+                total += 1
+                deadline = time.monotonic() + 0.02
+
+                def poll(thing, deadline=deadline):
+                    if time.monotonic() >= deadline:
+                        with lock:
+                            completions["n"] += 1
+                        return DONE
+                    return NOPROGRESS
+
+                eng.async_start(poll, None, s)
+        with ex:
+            ex.drain(timeout=15)
+        assert completions["n"] == total
+        assert sum(s.completions for s in streams) == total
+
+
+class TestWaitSets:
+    def test_wait_any_returns_first_completed(self):
+        """Acceptance: wait_any returns the first-completed request."""
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=2)
+        s = ex.stream()
+        reqs = [Request(tag=f"r{i}") for i in range(4)]
+        durations = [0.05, 0.004, 0.05, 0.05]      # r1 finishes first
+        for r, d in zip(reqs, durations):
+            eng.async_start(timed_task(d, req=r, value=r.tag), None, s)
+        with ex:
+            idx, req = eng.wait_any(reqs, timeout=10)
+            assert idx == 1 and req is reqs[1]
+            assert req.value() == "r1"
+            ex.drain(timeout=10)
+
+    def test_wait_any_caller_driven(self):
+        """wait_any drives progress itself when no executor is attached."""
+        eng = ProgressEngine()
+        reqs = [Request(), Request()]
+        eng.async_start(timed_task(0.05, req=reqs[0]))
+        eng.async_start(timed_task(0.002, req=reqs[1]))
+        idx, _ = eng.wait_any(reqs, timeout=10)
+        assert idx == 1
+
+    def test_wait_any_prefers_lowest_index_when_already_complete(self):
+        eng = ProgressEngine()
+        reqs = [Request(), Request(), Request()]
+        reqs[2].complete()
+        reqs[1].complete()
+        idx, req = eng.wait_any(reqs, timeout=1)
+        assert idx == 1                           # deterministic tiebreak
+
+    def test_wait_some_returns_completion_order(self):
+        eng = ProgressEngine()
+        reqs = [Request(tag=f"r{i}") for i in range(4)]
+        durations = [0.03, 0.002, 0.02, 0.01]      # order: 1, 3, 2, 0
+        for r, d in zip(reqs, durations):
+            eng.async_start(timed_task(d, req=r), None)
+        idx = eng.wait_some(reqs, min_count=3, timeout=10)
+        assert idx == [1, 3, 2]
+        # a fresh call observes already-complete requests in index order
+        # (deterministic, like MPI_Waitsome), stragglers in arrival order
+        idx_all = eng.wait_some(reqs, min_count=4, timeout=10)
+        assert idx_all == [1, 2, 3, 0]
+
+    def test_wait_on_unadopted_stream_does_not_deadlock(self):
+        """A running executor must not starve waits on streams it does
+        NOT own: the waiter progresses those inline instead of yielding."""
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=1)
+        ex.stream("owned")
+        req = Request()
+        eng.async_start(timed_task(0.01, req=req))   # default: unadopted
+        with ex:
+            assert eng.wait(req, timeout=10) is None
+        assert eng.default_stream.pending == 0
+
+    def test_wait_some_min_count_validation(self):
+        eng = ProgressEngine()
+        with pytest.raises(ValueError):
+            eng.wait_some([Request()], min_count=2)
+        with pytest.raises(ValueError):
+            eng.wait_any([])
+
+    def test_completion_counter(self):
+        eng = ProgressEngine()
+        reqs = [Request() for _ in range(5)]
+        cc = CompletionCounter(reqs[:3])
+        for r in reqs[3:]:
+            cc.add(r)
+        assert cc.total == 5 and cc.remaining == 5 and not cc.is_complete
+        for r in reqs[:4]:
+            eng.async_start(timed_task(0.002, req=r))
+        eng.wait_all(reqs[:4], timeout=10)
+        assert cc.completed == 4 and cc.remaining == 1
+        reqs[4].fail(RuntimeError("boom"))
+        assert cc.is_complete                      # failed still completes
+        assert cc.failed == [reqs[4]]
+
+    def test_completion_counter_as_request_waitable(self):
+        eng = ProgressEngine()
+        reqs = [Request() for _ in range(3)]
+        cc = CompletionCounter(reqs)
+        for r in reqs:
+            eng.async_start(timed_task(0.005, req=r))
+        eng.wait(cc.as_request(), timeout=10)
+        assert cc.remaining == 0
+
+
+class TestFaultIsolation:
+    def test_subsystem_error_isolated_and_recorded(self):
+        """A raising subsystem is unregistered, recorded, and does not
+        take down global progress (the Listing 1.1 contract)."""
+        eng = ProgressEngine()
+        good = []
+        eng.register_subsystem("bad", lambda: 1 / 0, priority=0)
+        eng.register_subsystem("good", lambda: (good.append(1), True)[1],
+                               priority=1)
+        made = eng.progress()                      # must not raise
+        assert good == [1] and made >= 1
+        assert len(eng.subsystem_errors) == 1
+        assert eng.subsystem_errors[0][0] == "bad"
+        assert isinstance(eng.subsystem_errors[0][1], ZeroDivisionError)
+        eng.progress()
+        assert len(eng.subsystem_errors) == 1      # bad was unregistered
+        st = stats.collect(eng)
+        assert st.subsystem("good").polls == 2
+
+    def test_subsystem_error_strict_reraises(self):
+        eng = ProgressEngine()
+        eng.register_subsystem("bad", lambda: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            eng.progress(strict=True)
+        # still isolated: subsequent non-strict progress is clean
+        assert eng.progress() == 0
+
+    def test_broken_task_dropped_not_respun(self):
+        """A poll_fn that raises is removed from the stream (else every
+        subsequent sweep re-raises forever)."""
+        eng = ProgressEngine()
+        survivor = {"polls": 0}
+
+        def bad(thing):
+            raise RuntimeError("task bug")
+
+        def good(thing):
+            survivor["polls"] += 1
+            return DONE if survivor["polls"] >= 2 else NOPROGRESS
+
+        eng.async_start(bad)
+        eng.async_start(good)
+        with pytest.raises(RuntimeError, match="task bug"):
+            eng.progress()
+        assert len(eng.default_stream.task_errors) == 1
+        eng.progress()
+        eng.progress()
+        assert survivor["polls"] == 2              # good task survived
+        assert eng.default_stream.pending == 0
+
+    def test_executor_worker_survives_broken_task(self):
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=1, steal=False)
+        s = ex.stream()
+        req = Request()
+        eng.async_start(lambda t: 1 / 0, None, s)
+        eng.async_start(timed_task(0.005, req=req), None, s)
+        with ex:
+            wait_until(lambda: req.is_complete, 10, "survivor completion")
+            assert len(ex.errors) == 1
+            ex.drain(timeout=5)
+
+
+class TestSubsystemCriticalSection:
+    def test_hooks_never_polled_concurrently(self):
+        """Subsystem hooks need no thread safety: even with many threads
+        calling engine.progress, hooks run inside a try-lock critical
+        section (MPICH's progress lock), one thread at a time."""
+        eng = ProgressEngine()
+        overlaps = []
+        gate = threading.Lock()
+
+        def hook():
+            if not gate.acquire(blocking=False):
+                overlaps.append(1)          # second thread inside the hook
+                return False
+            try:
+                time.sleep(0.0002)
+                return False
+            finally:
+                gate.release()
+
+        eng.register_subsystem("fragile", hook)
+        stop = time.monotonic() + 0.1
+
+        def spin():
+            while time.monotonic() < stop:
+                eng.progress()
+
+        threads = [threading.Thread(target=spin) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert overlaps == []
+
+    def test_executor_plus_caller_progress_single_fill(self):
+        """The trainer hang regression: a subsystem pulling from a shared
+        generator (PrefetchPipeline pattern) must survive a caller spinning
+        engine.progress while an executor worker polls the hooks."""
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=2)
+        ex.adopt(eng.default_stream)
+
+        def gen():
+            i = 0
+            while True:
+                time.sleep(0.0002)          # widen the race window
+                i += 1
+                yield i
+
+        source = gen()
+        got = []
+        eng.register_subsystem("puller", lambda: (got.append(next(source)),
+                                                  True)[1])
+        ex.start()
+        t0 = time.monotonic()
+        while len(got) < 50:
+            eng.progress()                  # caller races the worker
+            assert time.monotonic() - t0 < 10
+        ex.shutdown(drain=True, timeout=5)
+        assert eng.subsystem_errors == []   # no 'generator already executing'
+        assert got[:50] == sorted(got[:50])
+
+
+class TestStats:
+    def test_idle_spins_and_polls_counted(self):
+        eng = ProgressEngine()
+        eng.async_start(timed_task(10.0))          # never completes here
+        for _ in range(5):
+            eng.progress()
+        st = stats.collect(eng)
+        ds = st.stream("default")
+        assert ds.polls == 5
+        assert ds.idle_spins == 5
+        assert ds.completions == 0 and ds.pending == 1
+
+    def test_format_stats_runs(self):
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=1)
+        ex.stream("x")
+        eng.register_subsystem("sub", lambda: False)
+        eng.progress()
+        text = stats.format_stats(stats.collect(eng, ex))
+        assert "default" in text and "sub" in text and "w0" in text

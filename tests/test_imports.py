@@ -1,0 +1,31 @@
+"""Import smoke test: every ``repro.*`` module must import cleanly.
+
+Collection errors elsewhere in the suite (a missing optional dependency,
+a syntax error in a rarely-run module) surface here as one clear,
+per-module failure instead of a pytest collection abort.
+"""
+import importlib
+import pkgutil
+
+import pytest
+
+import repro
+
+
+def _all_modules() -> list[str]:
+    names = ["repro"]
+    for mod in pkgutil.walk_packages(repro.__path__, prefix="repro."):
+        names.append(mod.name)
+    return sorted(names)
+
+
+@pytest.mark.parametrize("name", _all_modules())
+def test_module_imports(name):
+    importlib.import_module(name)
+
+
+def test_core_public_api_complete():
+    """Everything in repro.core.__all__ actually resolves."""
+    import repro.core as core
+    for sym in core.__all__:
+        assert getattr(core, sym, None) is not None, sym

@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dependency: pip install hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.analysis import hlo as hlo_mod
 from repro.collectives.compression import dequantize_int8, quantize_int8

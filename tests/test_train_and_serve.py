@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import ProgressEngine
+from repro.core import ProgressEngine, ProgressExecutor, stats
 from repro.data.pipeline import PrefetchPipeline, SyntheticLM
 from repro.models import registry
 from repro.serve.engine import GenRequest, ServeEngine
@@ -115,3 +115,103 @@ class TestServeEngine:
         assert req.first_token_at is not None
         assert req.finished_at is not None
         assert req.finished_at >= req.first_token_at
+
+    def test_broken_injected_task_does_not_halt_serving(self, served):
+        """A raising task on a serve stream is dropped; the bridge stays
+        registered and serving continues (regression: the engine's
+        subsystem isolation used to unregister the bridge)."""
+        srv, eng = served
+        eng.async_start(lambda t: 1 / 0, None, srv.decode_stream)
+        req = GenRequest("r0", np.array([1, 2], np.int32), max_new_tokens=2)
+        done = srv.submit(req)
+        srv.run_until_idle(timeout=120)
+        assert done.is_complete and len(done.value()) == 2
+        assert len(srv.decode_stream.task_errors) == 1
+        assert srv._sub is not None              # bridge survived
+
+    def test_close_drains_serve_streams(self, served):
+        srv, eng = served
+        req = GenRequest("r0", np.array([1, 2], np.int32), max_new_tokens=2)
+        srv.submit(req)
+        srv.run_until_idle(timeout=120)
+        srv.close(timeout=60)
+        assert srv.admit_stream.pending == 0
+        assert srv.decode_stream.pending == 0
+        with pytest.raises(RuntimeError):
+            srv.submit(GenRequest("late", np.array([1], np.int32)))
+
+
+class TestServeEngineOnExecutor:
+    def test_serves_on_background_workers(self, rng):
+        """The serve streams adopted by a 2-worker executor: the main
+        thread only submits and waits; progress happens on the workers."""
+        cfg = reduce_cfg(get_config("qwen2-0.5b"),
+                         num_layers=2, d_model=32, d_ff=64, vocab_size=64)
+        params = registry.init_params(cfg, rng)
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=2, steal=False)
+        srv = ServeEngine(cfg, params, eng, batch_slots=4, max_seq=64,
+                          executor=ex)
+        ex.start()
+        reqs = [GenRequest(f"r{i}", np.array([i + 1, i + 2], np.int32),
+                           max_new_tokens=4) for i in range(6)]
+        dones = [srv.submit(r) for r in reqs]    # 6 requests, 4 slots
+        done_idx = eng.wait_some(dones, min_count=len(dones), timeout=240)
+        assert len(done_idx) == 6
+        srv.run_until_idle(timeout=60)
+        srv.close(timeout=60)
+        ex.shutdown(drain=True, timeout=60)
+        assert all(d.is_complete for d in dones)
+        assert all(len(d.value()) == 4 for d in dones)
+        assert len(srv.slots.free_slots()) == 4
+        snap = stats.collect(eng, ex)
+        assert snap.stream("serve-admit").completions >= 1
+        assert snap.stream("serve-decode").completions >= 1
+
+    def test_unstarted_executor_serves_inline(self, rng):
+        """Forgetting executor.start() must degrade to inline progress,
+        not hang until TimeoutError (regression)."""
+        cfg = reduce_cfg(get_config("qwen2-0.5b"),
+                         num_layers=2, d_model=32, d_ff=64, vocab_size=64)
+        params = registry.init_params(cfg, rng)
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=2)    # never started
+        srv = ServeEngine(cfg, params, eng, batch_slots=2, max_seq=64,
+                          executor=ex)
+        done = srv.submit(GenRequest("r0", np.array([1, 2], np.int32),
+                                     max_new_tokens=2))
+        srv.run_until_idle(timeout=120)
+        assert done.is_complete and len(done.value()) == 2
+
+    def test_executor_matches_caller_driven_output(self, rng):
+        cfg = reduce_cfg(get_config("qwen2-0.5b"),
+                         num_layers=2, d_model=32, d_ff=64, vocab_size=64)
+        params = registry.init_params(cfg, rng)
+
+        def serve_once(executor_workers):
+            eng = ProgressEngine()
+            ex = (ProgressExecutor(eng, executor_workers).start()
+                  if executor_workers else None)
+            srv = ServeEngine(cfg, params, eng, batch_slots=4, max_seq=64,
+                              executor=ex)
+            r = GenRequest("a", np.array([5, 6], np.int32), max_new_tokens=4)
+            d = srv.submit(r)
+            srv.run_until_idle(timeout=120)
+            srv.close(timeout=60)
+            if ex is not None:
+                ex.shutdown(drain=True, timeout=60)
+            return d.value()
+
+        assert serve_once(0) == serve_once(2)    # greedy: same tokens
+
+
+class TestTrainerWithProgressWorkers:
+    def test_progress_workers_train(self, tmp_path, rng):
+        tr, pipe = tiny_setup(tmp_path, rng, steps=4)
+        tr.cfg.progress_workers = 2
+        log = tr.run()
+        pipe.close()
+        assert len(log) == 4
+        assert all(np.isfinite(m["loss"]) for m in log)
+        # executor detached again after run()
+        assert tr.engine.executor is None
