@@ -1,12 +1,14 @@
-"""Paper Figs 7–12: progress-engine microbenchmarks."""
+"""Paper Figs 7–12 (+ continuation-delivery rows): progress-engine
+microbenchmarks."""
 from __future__ import annotations
 
 import threading
 import time
 
 from benchmarks._util import LatencyStats, make_dummy_task, row, run_pending_tasks
-from repro.core import (DONE, NOPROGRESS, CompletionWatcher, ProgressEngine,
-                        ProgressExecutor, Request, TaskQueue)
+from repro.core import (DEFERRED, DONE, INLINE, NOPROGRESS, CompletionWatcher,
+                        ContinuationQueue, ProgressEngine, ProgressExecutor,
+                        Request, TaskQueue)
 
 
 def fig7_latency_vs_pending():
@@ -191,6 +193,75 @@ def fig12_request_query():
     return rows
 
 
+def fig13_continuation_vs_waitset():
+    """Completion-delivery latency, callback vs wait-set (the serve-decode
+    pattern): N staggered "decode steps" complete on a worker-progressed
+    stream; measure deadline → consumer-observes-completion.
+
+    * waitset  — the consumer thread loops ``wait_any`` over the
+      outstanding requests and removes each winner (pull).
+    * cont_inline   — continuations run ON the progress worker the moment
+      the sweep observes completion (push, lowest latency).
+    * cont_deferred — continuations queue and the consumer thread drains
+      (push + owner-thread execution, the backpressure-bounded mode).
+    """
+    rows = []
+    n, duration = 64, 0.002
+    for mode in ("waitset", "cont_inline", "cont_deferred"):
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, 1, steal=False)
+        s = ex.stream("decode")
+        stats = LatencyStats()
+        deadlines = {}
+        reqs = []
+        for i in range(n):
+            r = Request(tag=f"step{i}")
+            deadlines[id(r)] = time.perf_counter() + duration * (1 + i % 8)
+            reqs.append(r)
+
+        def mk(r):
+            def poll(thing):
+                if time.perf_counter() >= deadlines[id(r)]:
+                    r.complete()
+                    return DONE
+                return NOPROGRESS
+            return poll
+
+        observed = {"n": 0}
+
+        def on_complete(r):
+            stats.add(time.perf_counter() - deadlines[id(r)])
+            observed["n"] += 1
+
+        q = None
+        if mode != "waitset":
+            policy = INLINE if mode == "cont_inline" else DEFERRED
+            q = ContinuationQueue(eng, s, policy=policy, name=mode)
+            for r in reqs:
+                q.attach(r, on_complete)
+        for r in reqs:
+            eng.async_start(mk(r), None, s)
+        with ex:
+            t0 = time.perf_counter()
+            if mode == "waitset":
+                outstanding = list(reqs)
+                while outstanding:
+                    _, winner = eng.wait_any(outstanding, timeout=30)
+                    on_complete(winner)
+                    outstanding.remove(winner)
+            else:
+                while observed["n"] < n:
+                    if q.policy == DEFERRED:
+                        q.drain(8)          # bounded owner drain
+                    time.sleep(20e-6)
+                    if time.perf_counter() - t0 > 30:
+                        raise TimeoutError
+            ex.drain(timeout=30)
+        rows.append(row(f"fig13_{mode}_{n}", stats.mean(),
+                        f"p99={stats.p99():.1f}us"))
+    return rows
+
+
 def run():
     rows = []
     rows += fig7_latency_vs_pending()
@@ -200,4 +271,5 @@ def run():
     rows += fig10_task_class()
     rows += fig11_streams()
     rows += fig12_request_query()
+    rows += fig13_continuation_vs_waitset()
     return rows

@@ -19,9 +19,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import time
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.collectives import schedules as S
 
-mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("x",))
 x = jnp.arange(8, dtype=jnp.float32).reshape(8, 1)   # one scalar per rank
 
 def native(v):
@@ -31,7 +32,7 @@ fns = {"native_psum": native}
 fns.update({k: (lambda f: lambda v: f(v, "x"))(f) for k, f in S.ALGORITHMS.items()})
 
 for name, fn in fns.items():
-    jitted = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+    jitted = jax.jit(compat.shard_map(fn, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
     out = jitted(x); out.block_until_ready()          # compile
     iters = 300
     t0 = time.perf_counter()

@@ -5,9 +5,10 @@
 import threading
 import time
 
-from repro.core import (DONE, NOPROGRESS, CompletionWatcher, EventQueue,
-                        GeneralizedRequest, ProgressEngine, ProgressExecutor,
-                        Request, TaskQueue, stats)
+from repro.core import (DEFERRED, DONE, INLINE, NOPROGRESS, CompletionWatcher,
+                        ContinuationQueue, EventQueue, GeneralizedRequest,
+                        ProgressEngine, ProgressExecutor, Request, TaskQueue,
+                        stats)
 
 
 def listing_1_1_collated_subsystems(eng):
@@ -137,6 +138,49 @@ def progress_workers():
           f"(2 workers, 2 streams, zero shared-lock collisions)")
 
 
+def continuations_post_attach_drain():
+    """Continuations (§4.6 / the MPI Continuations papers): post work,
+    attach a callback, drain — completion *pushes* into the application
+    instead of being pulled by wait loops.
+
+    Listing-style walkthrough:
+
+        1. post        — async_start a task completing a Request
+        2. attach      — queue.attach(request, callback[, on_error])
+        3. drain       — DEFERRED policy: the owner thread executes ready
+                         callbacks outside the progress path (bounded);
+                         INLINE runs them on the progress thread instead
+        4. chain       — then/when_all/node turn DAG dependencies into
+                         completion-driven scheduling (no polling)
+    """
+    eng = ProgressEngine()
+
+    # -- deferred: detection on progress, execution on the owner ----------
+    q = ContinuationQueue(eng, policy=DEFERRED, name="tour")
+    got = []
+    req = Request(tag="post")
+    deadline = time.perf_counter() + 0.002
+    eng.async_start(lambda t: (req.complete("payload"), DONE)[1]
+                    if time.perf_counter() >= deadline else NOPROGRESS)
+    q.attach(req, lambda r: got.append(r.value()),
+             on_error=lambda r: got.append(r.exception))
+    while q.ready == 0:                 # progress detects the completion…
+        eng.progress()
+    n = q.drain(max_items=8)            # …the owner drains it (bounded)
+    print(f"continuations: deferred drain ran {n} callback(s): {got}")
+
+    # -- chaining: a diamond DAG with no polled dependencies --------------
+    qi = ContinuationQueue(eng, policy=INLINE, name="tour-chain")
+    a = qi.node(lambda: 2)
+    b = qi.then(a, lambda v: v * 10)
+    c = qi.then(a, lambda v: v + 1)
+    d = qi.node(lambda bv, cv: bv + cv, deps=[b, c])
+    for _ in range(6):
+        eng.progress()
+    print(f"continuations: diamond DAG via node/then -> {d.value()} "
+          f"(fired {qi.executed} continuations, 0 polls by consumers)")
+
+
 if __name__ == "__main__":
     eng = ProgressEngine()
     listing_1_1_collated_subsystems(eng)
@@ -146,4 +190,5 @@ if __name__ == "__main__":
     listing_1_6_completion_events(eng)
     listing_1_7_generalized_request(eng)
     progress_workers()
+    continuations_post_attach_drain()
     print("tour OK")

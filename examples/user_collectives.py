@@ -18,15 +18,16 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
+
 from repro.collectives import schedules as S  # noqa: E402
 from repro.collectives.overlap import collective_matmul_ag  # noqa: E402
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("x",))
     x = jax.random.normal(jax.random.PRNGKey(0), (8, 4, 64))
-    native = jax.jit(jax.shard_map(lambda v: jax.lax.psum(v, "x"),
+    native = jax.jit(compat.shard_map(lambda v: jax.lax.psum(v, "x"),
                                    mesh=mesh, in_specs=P("x"),
                                    out_specs=P("x")))
 
@@ -42,7 +43,7 @@ def main():
     one = jnp.arange(8, dtype=jnp.float32).reshape(8, 1)
 
     def bench(fn):
-        jitted = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("x"),
+        jitted = jax.jit(compat.shard_map(fn, mesh=mesh, in_specs=P("x"),
                                        out_specs=P("x")))
         jitted(one).block_until_ready()
         t0 = time.perf_counter()
@@ -58,7 +59,7 @@ def main():
     print("== collective matmul (overlapped all-gather GEMM) ==")
     xm = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
     w = jax.random.normal(jax.random.PRNGKey(2), (32, 128))
-    out = jax.jit(jax.shard_map(
+    out = jax.jit(compat.shard_map(
         lambda xs, ws: collective_matmul_ag(xs, ws, "x"),
         mesh=mesh, in_specs=(P("x"), P(None, "x")),
         out_specs=P(None, "x")))(xm, w)

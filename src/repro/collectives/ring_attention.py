@@ -24,13 +24,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
 def _ring_body(q, k, v, axis: str, *, causal: bool, logit_cap: float = 0.0):
     """Inside shard_map. q,k,v local: [B, S_loc, H, hd] (S global-sharded).
     Returns local attention output [B, S_loc, H, hd]."""
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     idx = jax.lax.axis_index(axis)
     B, S_loc, H, hd = q.shape
     KVH = k.shape[2]
@@ -85,7 +87,7 @@ def _ring_body(q, k, v, axis: str, *, causal: bool, logit_cap: float = 0.0):
 
 def _ring_fwd_stats(q, k, v, axis, causal, logit_cap):
     """Like _ring_body but also returns softmax stats (m, l)."""
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     idx = jax.lax.axis_index(axis)
     B, S_loc, H, hd = q.shape
     KVH = k.shape[2]
@@ -144,7 +146,7 @@ def make_ring_attention_vjp(axis: str, causal: bool, logit_cap: float):
 
     def bwd(res, do):
         q, k, v, o, m, l = res
-        n = jax.lax.axis_size(axis)
+        n = compat.axis_size(axis)
         idx = jax.lax.axis_index(axis)
         B, S_loc, H, hd = q.shape
         KVH = k.shape[2]
@@ -201,7 +203,7 @@ def ring_attention(q, k, v, *, causal: bool = True, axis: str = "model",
     """shard_map wrapper. q,k,v: [B,S,H,hd] with S sharded over `axis` and
     B over `batch_axes`; heads replicated.  Falls back to plain full
     attention when no mesh context / axis size 1."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.current_mesh()
     if mesh is None or mesh.empty or axis not in mesh.shape \
             or mesh.shape[axis] == 1 or q.shape[1] % mesh.shape[axis] != 0:
         from repro.models.layers import attention
@@ -213,6 +215,6 @@ def ring_attention(q, k, v, *, causal: bool = True, axis: str = "model",
                        logit_cap=logit_cap)
     else:
         body = make_ring_attention_vjp(axis, causal, 0.0)
-    return jax.shard_map(
+    return compat.shard_map(
         lambda q_, k_, v_: body(q_, k_, v_),
         mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec)(q, k, v)

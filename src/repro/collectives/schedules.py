@@ -33,9 +33,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def _axis_size(axis: str) -> int:
-    return jax.lax.axis_size(axis)
+    return compat.axis_size(axis)
 
 
 def _axis_index(axis: str):
@@ -245,4 +247,5 @@ def allreduce_under_shard_map(x, mesh, axis: str, algorithm: str = "ring"):
     def body(xs):
         return fn(xs, axis)
 
-    return jax.shard_map(body, mesh=mesh, in_specs=P(axis), out_specs=P(axis))(x)
+    return compat.shard_map(body, mesh=mesh, in_specs=P(axis),
+                            out_specs=P(axis))(x)

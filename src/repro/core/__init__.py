@@ -21,6 +21,12 @@ from repro.core.executor import ProgressExecutor
 from repro.core.task_class import TaskGraph, TaskQueue
 from repro.core.events import CompletionWatcher, EventQueue
 from repro.core.futures import chain, io_future, jax_future
+from repro.core.continuations import (
+    DEFERRED,
+    INLINE,
+    Continuation,
+    ContinuationQueue,
+)
 from repro.core import stats
 
 __all__ = [
@@ -32,6 +38,7 @@ __all__ = [
     "ProgressExecutor",
     "TaskGraph", "TaskQueue",
     "CompletionWatcher", "EventQueue",
+    "INLINE", "DEFERRED", "Continuation", "ContinuationQueue",
     "chain", "io_future", "jax_future",
     "stats",
 ]

@@ -169,14 +169,19 @@ class Subsystem:
     """A progress hook à la MPICH Listing 1.1 (datatype engine /
     collectives / shmem / netmod).  ``poll`` returns True if progress was
     made.  ``cheap`` subsystems are always polled; expensive ones are
-    skipped when an earlier subsystem already made progress."""
+    skipped when an earlier subsystem already made progress.  A
+    ``strict`` subsystem raises *on purpose* (watchdogs, exhausted data
+    sources): its exceptions re-raise out of ``progress`` instead of
+    being swallowed by isolation — else a deliberate crash signal would
+    degrade into an infinite wait."""
 
     def __init__(self, name: str, poll: Callable[[], bool], cheap: bool = True,
-                 priority: int = 0):
+                 priority: int = 0, strict: bool = False):
         self.name = name
         self.poll = poll
         self.cheap = cheap
         self.priority = priority
+        self.strict = strict
         self.polls = 0           # statistics (see repro.core.stats)
         self.progressed = 0
         self.errors = 0
@@ -203,6 +208,9 @@ class ProgressEngine:
         self._executor = None          # attached ProgressExecutor, if any
         # (subsystem_name, exception) pairs from isolated failures
         self.subsystem_errors: list[tuple[str, BaseException]] = []
+        # live ContinuationQueue objects (self-registered; see
+        # repro.core.continuations) — snapshotted by repro.core.stats
+        self.continuation_queues: list = []
 
     # -- streams ---------------------------------------------------------
     def stream(self, name: str = "") -> Stream:
@@ -228,8 +236,9 @@ class ProgressEngine:
 
     # -- subsystems (Listing 1.1) ------------------------------------------
     def register_subsystem(self, name: str, poll: Callable[[], bool],
-                           cheap: bool = True, priority: int = 0) -> Subsystem:
-        sub = Subsystem(name, poll, cheap, priority)
+                           cheap: bool = True, priority: int = 0,
+                           strict: bool = False) -> Subsystem:
+        sub = Subsystem(name, poll, cheap, priority, strict)
         with self._lock:
             self._subsystems.append(sub)
             self._subsystems.sort(key=lambda x: x.priority)
@@ -276,7 +285,7 @@ class ProgressEngine:
                     sub.last_error = exc
                     self.subsystem_errors.append((sub.name, exc))
                     self.unregister_subsystem(sub)
-                    if strict:
+                    if strict or sub.strict:
                         raise
                     warnings.warn(
                         f"progress subsystem {sub.name!r} raised "

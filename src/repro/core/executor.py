@@ -42,10 +42,12 @@ class _Worker:
     def __init__(self, index: int):
         self.index = index
         self.streams: list[Stream] = []
+        self.queues: list = []          # adopted ContinuationQueues
         self.thread: threading.Thread | None = None
         self.sweeps = 0
         self.idle_spins = 0
         self.steals = 0
+        self.drained = 0                # continuations executed by this worker
         self.idle_streak = 0
 
 
@@ -66,7 +68,9 @@ class ProgressExecutor:
 
     def __init__(self, engine: ProgressEngine, num_workers: int = 2, *,
                  poll_subsystems: bool = True, steal: bool = True,
-                 steal_after: int = 16, idle_sleep_s: float = 20e-6):
+                 steal_after: int = 16, idle_sleep_s: float = 20e-6,
+                 drain_continuations: bool = True,
+                 continuation_max_drain: int = 64):
         if num_workers < 1:
             raise ValueError("need at least one worker")
         self.engine = engine
@@ -75,6 +79,12 @@ class ProgressExecutor:
         self.steal = steal
         self.steal_after = steal_after
         self.idle_sleep_s = idle_sleep_s
+        # adopted ContinuationQueues (deferred policy) are drained by their
+        # owning worker between polls, at most continuation_max_drain per
+        # sweep — the paper-recommended place to run completion callbacks
+        # without a dedicated callback thread (bounded => backpressure)
+        self.drain_continuations = drain_continuations
+        self.continuation_max_drain = continuation_max_drain
         self._workers = [_Worker(i) for i in range(num_workers)]
         self._assign_lock = threading.Lock()
         self._stop = threading.Event()
@@ -119,6 +129,34 @@ class ProgressExecutor:
         with self._assign_lock:
             return any(stream in w.streams for w in self._workers)
 
+    # -- continuation-queue assignment -------------------------------------
+    def adopt_queue(self, queue, worker: Optional[int] = None) -> int:
+        """Assign a (deferred-policy) ContinuationQueue to a worker: that
+        worker becomes the queue's owner thread and drains it between
+        polls.  Returns the worker index."""
+        with self._assign_lock:
+            for w in self._workers:
+                if queue in w.queues:
+                    raise ValueError(f"{queue.name} already adopted")
+            if worker is None:
+                w = min(self._workers, key=lambda w: len(w.queues))
+            else:
+                w = self._workers[worker]
+            w.queues.append(queue)
+            return w.index
+
+    def release_queue(self, queue) -> None:
+        with self._assign_lock:
+            for w in self._workers:
+                if queue in w.queues:
+                    w.queues.remove(queue)
+                    return
+        raise ValueError(f"{queue.name} not adopted by this executor")
+
+    def queues(self) -> list:
+        with self._assign_lock:
+            return [q for w in self._workers for q in w.queues]
+
     # -- lifecycle ---------------------------------------------------------
     @property
     def running(self) -> bool:
@@ -149,20 +187,31 @@ class ProgressExecutor:
         t0 = time.monotonic()
         while True:
             streams = self.streams()
-            if not any(s.pending for s in streams):
+            queues = self.queues()
+            if (not any(s.pending for s in streams)
+                    and not any(q.ready for q in queues)):
                 return
             if self._running:
+                if not self.drain_continuations:
+                    # workers are not draining queues; the drainer must,
+                    # or adopted-queue readiness could never reach zero
+                    for q in queues:
+                        q.drain()
                 time.sleep(self.idle_sleep_s)
             else:
                 for s in streams:
                     s._poll_once()
+                for q in queues:
+                    q.drain()
                 if self.poll_subsystems:
                     self.engine.poll_subsystems()
             if timeout is not None and time.monotonic() - t0 > timeout:
                 raise TimeoutError(
                     "executor drain timed out; pending: "
-                    + ", ".join(f"{s.name}={s.pending}"
-                                for s in streams if s.pending))
+                    + "; ".join([f"{s.name}={s.pending}"
+                                 for s in streams if s.pending]
+                                + [f"{q.name}.ready={q.ready}"
+                                   for q in queues if q.ready]))
 
     def shutdown(self, drain: bool = True,
                  timeout: float | None = None) -> None:
@@ -204,7 +253,20 @@ class ProgressExecutor:
                     # (its streams would starve with no error anywhere)
                     self.errors.append((s.name, exc))
             if w.index == 0 and self.poll_subsystems:
-                made += self.engine.poll_subsystems()
+                try:
+                    made += self.engine.poll_subsystems()
+                except BaseException as exc:  # noqa: BLE001
+                    # a strict subsystem re-raises on purpose; on a worker
+                    # thread that must not silently kill the thread (its
+                    # streams would starve) — record it where callers look
+                    self.errors.append(("subsystems", exc))
+            if self.drain_continuations:
+                with self._assign_lock:
+                    queues = list(w.queues)
+                for q in queues:
+                    n = q.drain(self.continuation_max_drain)
+                    made += n
+                    w.drained += n
             w.sweeps += 1
             if made:
                 w.idle_streak = 0
@@ -250,5 +312,5 @@ class ProgressExecutor:
     def worker_stats(self) -> list[WorkerStats]:
         with self._assign_lock:
             return [WorkerStats(w.index, w.sweeps, w.idle_spins, w.steals,
-                                [s.name for s in w.streams])
+                                [s.name for s in w.streams], w.drained)
                     for w in self._workers]

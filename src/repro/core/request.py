@@ -137,7 +137,11 @@ class CompletionCounter:
 
     @property
     def remaining(self) -> int:
-        return self.total - self.completed
+        # one snapshot for both counts: total and completed from separate
+        # lock acquisitions could interleave with add() and go negative
+        with self._lock:
+            reqs = list(self._reqs)
+        return sum(1 for r in reqs if not r.is_complete)
 
     @property
     def is_complete(self) -> bool:

@@ -51,6 +51,20 @@ class WorkerStats:
     idle_spins: int         # sweeps with zero completions
     steals: int             # streams taken from another worker
     streams: list[str] = dataclasses.field(default_factory=list)
+    drained: int = 0        # continuations executed between polls
+
+
+@dataclasses.dataclass
+class ContinuationStats:
+    name: str
+    policy: str             # "inline" | "deferred"
+    enqueued: int           # continuations attached
+    executed: int           # continuations run (success or failure path)
+    deferred: int           # continuations routed through the ready list
+    failed: int             # failure-path runs + callbacks that raised
+    cancelled: int          # dropped unfired by close()
+    pending: int            # attached, request not yet complete
+    ready: int              # awaiting a drain
 
 
 @dataclasses.dataclass
@@ -58,6 +72,8 @@ class EngineStats:
     streams: list[StreamStats]
     subsystems: list[SubsystemStats]
     workers: list[WorkerStats]
+    continuations: list[ContinuationStats] = dataclasses.field(
+        default_factory=list)
 
     def stream(self, name: str) -> StreamStats:
         for s in self.streams:
@@ -69,6 +85,12 @@ class EngineStats:
         for s in self.subsystems:
             if s.name == name:
                 return s
+        raise KeyError(name)
+
+    def continuation_queue(self, name: str) -> ContinuationStats:
+        for c in self.continuations:
+            if c.name == name:
+                return c
         raise KeyError(name)
 
     @property
@@ -86,6 +108,7 @@ def collect(engine: "ProgressEngine",
     with engine._lock:
         streams = list(engine._streams)
         subsystems = list(engine._subsystems)
+    queues = list(getattr(engine, "continuation_queues", ()))
     if executor is None:
         executor = getattr(engine, "_executor", None)
     stream_stats = [
@@ -101,7 +124,13 @@ def collect(engine: "ProgressEngine",
     worker_stats = []
     if executor is not None:
         worker_stats = executor.worker_stats()
-    return EngineStats(stream_stats, sub_stats, worker_stats)
+    cont_stats = [
+        ContinuationStats(q.name, q.policy, q.enqueued, q.executed,
+                          q.deferred, q.failed, q.cancelled,
+                          q.pending, q.ready)
+        for q in queues
+    ]
+    return EngineStats(stream_stats, sub_stats, worker_stats, cont_stats)
 
 
 def format_stats(stats: EngineStats) -> str:
@@ -117,8 +146,16 @@ def format_stats(stats: EngineStats) -> str:
             lines.append(f"{s.name:<18} {s.polls:>5}  {s.progressed:>10}  "
                          f"{s.errors:>6}")
     if stats.workers:
-        lines.append("worker  sweeps  idle  steals  streams")
+        lines.append("worker  sweeps  idle  steals  drained  streams")
         for w in stats.workers:
             lines.append(f"w{w.index:<5} {w.sweeps:>7}  {w.idle_spins:>4}  "
-                         f"{w.steals:>6}  {','.join(w.streams)}")
+                         f"{w.steals:>6}  {w.drained:>7}  "
+                         f"{','.join(w.streams)}")
+    if stats.continuations:
+        lines.append("cont-queue         policy    enq  exec  defer  fail  "
+                     "cancel  pend  ready")
+        for c in stats.continuations:
+            lines.append(f"{c.name:<18} {c.policy:<8} {c.enqueued:>4}  "
+                         f"{c.executed:>4}  {c.deferred:>5}  {c.failed:>4}  "
+                         f"{c.cancelled:>6}  {c.pending:>4}  {c.ready:>5}")
     return "\n".join(lines)

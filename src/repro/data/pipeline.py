@@ -64,8 +64,11 @@ class PrefetchPipeline:
         self._fut = None
         self.stalls = 0          # times next_batch had to block
         self.fills = 0
+        # strict: an exhausted/broken source (StopIteration from next())
+        # must surface to next_batch's caller, not silently unregister
+        # the fill hook and leave next_batch spinning on an empty buffer
         self._sub = engine.register_subsystem(
-            "data-pipeline", self._poll, cheap=True, priority=1)
+            "data-pipeline", self._poll, cheap=True, priority=1, strict=True)
 
     def _poll(self) -> bool:
         """Engine subsystem hook: keep the buffer full, one fill in flight."""

@@ -87,8 +87,10 @@ class StepWatchdog:
         self.clock = clock
         self._armed_at: float | None = None
         self.fired = 0
+        # strict: firing the watchdog (on_hang raising) must abort the
+        # run loudly, not be isolated into a silent unregister + hang
         self._sub = engine.register_subsystem(
-            "watchdog", self._poll, cheap=True, priority=3)
+            "watchdog", self._poll, cheap=True, priority=3, strict=True)
 
     def arm(self) -> None:
         self._armed_at = self.clock()

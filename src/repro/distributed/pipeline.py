@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def gpipe(stage_fn: Callable, mesh, axis: str, num_stages: int,
           params_spec=P(0), x_spec=P()):
@@ -49,9 +51,9 @@ def gpipe(stage_fn: Callable, mesh, axis: str, num_stages: int,
             perm = [(i, (i + 1) % S) for i in range(S)]
             mb_shape = xs.shape[1:]
             # pcast: carries become device-varying inside the tick scan
-            carry_in = jax.lax.pcast(jnp.zeros(mb_shape, xs.dtype),
-                                     (axis,), to="varying")
-            out = jax.lax.pcast(jnp.zeros_like(xs), (axis,), to="varying")
+            carry_in = compat.pcast(jnp.zeros(mb_shape, xs.dtype),
+                                    (axis,), to="varying")
+            out = compat.pcast(jnp.zeros_like(xs), (axis,), to="varying")
 
             def tick(state, t):
                 carry_in, out = state
@@ -76,7 +78,7 @@ def gpipe(stage_fn: Callable, mesh, axis: str, num_stages: int,
             # (every other stage contributes zeros)
             return jax.lax.psum(out, axis)
 
-        return jax.shard_map(
+        return compat.shard_map(
             body, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(axis), stage_params), P()),
             out_specs=P())(stage_params, xs)

@@ -19,6 +19,13 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--progress-workers", type=int, default=0,
                     help="N background progress threads (0 = caller-driven)")
+    ap.add_argument("--continuation-policy", default="deferred",
+                    choices=["inline", "deferred"],
+                    help="completion callbacks run inline on the progress "
+                         "thread, or deferred to a bounded owner drain")
+    ap.add_argument("--continuation-max-drain", type=int, default=64,
+                    help="max continuations executed per drain (deferred "
+                         "policy backpressure bound)")
     ap.add_argument("--stats", action="store_true",
                     help="print progress statistics after serving")
     args = ap.parse_args()
@@ -54,9 +61,13 @@ def main():
     eng = ProgressEngine()
     executor = None
     if args.progress_workers > 0:
-        executor = ProgressExecutor(eng, args.progress_workers)
+        executor = ProgressExecutor(
+            eng, args.progress_workers,
+            continuation_max_drain=args.continuation_max_drain)
     srv = ServeEngine(cfg, params, eng, batch_slots=args.slots,
-                      max_seq=args.max_seq, executor=executor)
+                      max_seq=args.max_seq, executor=executor,
+                      continuation_policy=args.continuation_policy,
+                      continuation_max_drain=args.continuation_max_drain)
     if executor is not None:
         executor.start()
     rng = np.random.RandomState(1)
@@ -68,6 +79,7 @@ def main():
         srv.submit(r)
         reqs.append(r)
     srv.run_until_idle(timeout=600)
+    snap = stats_mod.collect(eng, executor)   # before close drops the queue
     srv.close(timeout=60)
     if executor is not None:
         executor.shutdown(drain=True, timeout=60)
@@ -80,7 +92,7 @@ def main():
           f"decode steps (batching factor {gen / max(srv.steps, 1):.2f}x); "
           f"mean TTFT {np.mean(ttfts) * 1e3:.0f} ms [{mode}]")
     if args.stats:
-        print(stats_mod.format_stats(stats_mod.collect(eng, executor)))
+        print(stats_mod.format_stats(snap))
     return 0
 
 

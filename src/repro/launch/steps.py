@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeSpec, input_specs
 from repro.models import registry
@@ -42,7 +43,7 @@ class Cell:
     def lower(self):
         jitted = jax.jit(self.step_fn, in_shardings=self.in_shardings,
                          out_shardings=self.out_shardings)
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             return jitted.lower(*self.abstract_args)
 
 

@@ -38,6 +38,7 @@ def main():
     import jax
     import jax.numpy as jnp
 
+    from repro import compat
     from repro.configs import get_config
     from repro.configs.shapes import ShapeSpec
     from repro.core import ProgressEngine
@@ -86,7 +87,7 @@ def main():
     jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
                      out_shardings=cell.out_shardings)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = registry.init_params(cfg, jax.random.PRNGKey(0))
         opt_state = opt_mod.init(params)
         # place onto the cell's shardings (FSDP/TP distribution)

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.sharding import shard_hint
 
 # ---------------------------------------------------------------------------
@@ -493,7 +494,7 @@ def _moe_expert_block(xg, dispatch, combine, wi_gate, wi_up, wo):
 
     batch_axes = (gax,) if isinstance(gax, str) else tuple(gax or ())
     blk = _make_moe_blk_vjp(batch_axes)
-    return jax.shard_map(
+    return compat.shard_map(
         blk, mesh=mesh,
         in_specs=(P(gax, None, None), P(gax, None, None, None),
                   P(gax, None, None, None),

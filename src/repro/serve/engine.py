@@ -2,23 +2,37 @@
 
 Serving is the dynamic side of the paper's story: requests arrive at
 arbitrary times (the "unexpected message queue" of MPI has no SPMD
-analogue — this layer is it).  Everything is an async task on one
-engine, split across two serial contexts (§4.4):
+analogue — this layer is it).  Since the continuation layer
+(repro.core.continuations) landed, the whole request lifecycle is
+completion-driven — there is no polling loop anywhere in this file:
 
-* admission stream   — perpetual task draining the arrival queue into
-  free KV slots (prefill runs here, token-by-token);
-* decode stream      — one fused decode step for ALL active slots per
-  iteration (continuous batching), polled via ``Array.is_ready``,
-  never blocked on;
-* completion         — per-request ``Request`` handles; event callbacks
-  compose via ``CompletionWatcher`` (paper §4.5).
+* ``submit``            — the *arrival event* schedules a one-shot
+  admission task on the admit stream (none is scheduled while idle);
+* admission / prefill   — admits arrivals into free KV slots and runs
+  token-by-token prefill, then schedules the first decode step;
+* decode                — one fused decode step for ALL active slots
+  (continuous batching) is dispatched and its device completion watched
+  by a one-shot readiness task (``Array.is_ready``, never blocked on)
+  that completes a per-step ``Request``;
+* detokenize            — a continuation attached to the step request:
+  extracts tokens, finishes requests (their ``done_req`` completes,
+  firing any client continuations), and *chains the next decode step* —
+  each stage's completion schedules the next;
+* slot-free event       — finishing requests re-schedules admission, so
+  a backlog drains exactly when capacity appears.
 
-Progress can be driven two ways: pass a ``ProgressExecutor`` and the
-admission/decode streams are adopted by its worker threads (background
-progress, §4.4); pass none and a cheap subsystem bridges both streams
-into every ``engine.progress()`` call, so the classic
-``while: engine.progress()`` loop — or a trainer's overlap window —
-still serves traffic.
+Between requests every serve stream is empty: no perpetual task spins,
+no idle polling — the paper's event-driven integration claim (§4.6).
+
+The continuation execution policy is a knob (``continuation_policy``):
+``INLINE`` runs detokenize on the progress thread that observed decode
+completion; ``DEFERRED`` (default) queues it and the owner drains with
+``continuation_max_drain`` as bounded backpressure.  With a
+``ProgressExecutor`` the serve streams are adopted by its workers and a
+deferred queue is drained by them between polls; without one, a cheap
+subsystem bridges streams + continuation drain into every
+``engine.progress()`` call, so the classic ``while: engine.progress()``
+loop still serves traffic.
 """
 from __future__ import annotations
 
@@ -26,13 +40,14 @@ import collections
 import dataclasses
 import threading
 import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DONE, NOPROGRESS, ProgressEngine, Request
+from repro.core import DEFERRED, DONE, NOPROGRESS, ProgressEngine, Request
+from repro.core.continuations import POLICIES, ContinuationQueue
 from repro.core.executor import ProgressExecutor
 from repro.models import registry
 from repro.serve.kvcache import SlotCache
@@ -56,7 +71,11 @@ class ServeEngine:
     def __init__(self, cfg, params, engine: ProgressEngine,
                  batch_slots: int = 8, max_seq: int = 512,
                  greedy: bool = True,
-                 executor: Optional[ProgressExecutor] = None):
+                 executor: Optional[ProgressExecutor] = None,
+                 continuation_policy: str = DEFERRED,
+                 continuation_max_drain: int = 64):
+        if continuation_policy not in POLICIES:
+            raise ValueError(f"continuation_policy must be one of {POLICIES}")
         self.cfg = cfg
         self.params = params
         self.engine = engine
@@ -66,28 +85,45 @@ class ServeEngine:
         self.max_seq = max_seq
         self._arrivals: collections.deque[GenRequest] = collections.deque()
         self._active: dict[int, GenRequest] = {}
-        # one lock serialises admission/prefill against decode: the two
-        # streams may live on different executor workers, but KV cache and
+        # one lock serialises admission/prefill against detokenize: the
+        # stages may run on different executor workers, but KV cache and
         # slot state are shared
         self._lock = threading.Lock()
         self._decode_inflight = None
+        self._current_step = None      # the step whose continuation owns state
+        self._admit_scheduled = False
         self._stopping = False
+        self._closed = False
         self._jit_decode = jax.jit(
             lambda p, c, t, q: registry.decode_step(p, cfg, c, t, q))
         self.admit_stream = engine.stream("serve-admit")
         self.decode_stream = engine.stream("serve-decode")
-        engine.async_start(self._admit_poll, None, self.admit_stream)
-        engine.async_start(self._decode_poll, None, self.decode_stream)
+        # decode completions are delivered through this queue; its
+        # detection task lives on the decode stream so INLINE runs
+        # detokenize right where completion was observed
+        self.continuations = ContinuationQueue(
+            engine, self.decode_stream, policy=continuation_policy,
+            name="serve-cont")
+        self.continuation_max_drain = continuation_max_drain
+        self._queue_adopted = False
         if executor is not None:
             executor.adopt(self.admit_stream)
             executor.adopt(self.decode_stream)
+            if continuation_policy == DEFERRED:
+                executor.adopt_queue(self.continuations)
+                self._queue_adopted = True
             self._sub = None
         else:
-            # no executor: bridge the serve streams into every
-            # engine.progress() call so single-threaded callers still serve
+            # no executor: bridge the serve streams (and the continuation
+            # drain) into every engine.progress() call so single-threaded
+            # callers still serve
             self._sub = engine.register_subsystem(
                 "serve-streams", self._poll_streams, cheap=True, priority=4)
         self.steps = 0
+        # bounded: transient device failures on a long-lived server must
+        # not accumulate exception objects forever
+        self.decode_errors: collections.deque[BaseException] = \
+            collections.deque(maxlen=256)
 
     # -- client API -------------------------------------------------------
     def submit(self, request: GenRequest) -> Request:
@@ -95,6 +131,7 @@ class ServeEngine:
             if self._stopping:
                 raise RuntimeError("serve engine is stopping")
             self._arrivals.append(request)
+        self._schedule_admit()               # the arrival event
         return request.done_req
 
     # -- caller-driven bridge ---------------------------------------------
@@ -109,29 +146,48 @@ class ServeEngine:
                 # escape, or the engine's isolation would unregister it
                 # and silently halt all serving
                 pass
+        made += self.continuations.drain(self.continuation_max_drain)
         return made > 0
 
-    # -- admission stream ---------------------------------------------------
-    def _admit_poll(self, thing) -> str:
-        self._admit()
+    # -- admission (event-scheduled, one-shot) ------------------------------
+    def _schedule_admit(self) -> None:
         with self._lock:
-            if self._stopping and not self._arrivals:
-                return DONE
-        return NOPROGRESS
+            if self._admit_scheduled or not self._arrivals:
+                return
+            self._admit_scheduled = True
+        self.engine.async_start(self._admit_task, None, self.admit_stream)
+
+    def _admit_task(self, thing) -> str:
+        with self._lock:
+            self._admit_scheduled = False
+        self._admit()
+        self._schedule_decode()
+        return DONE                          # one-shot: nothing left to poll
 
     def _admit(self) -> bool:
-        made = False
         with self._lock:
-            while self._arrivals and self.slots.free_slots():
-                req = self._arrivals.popleft()
-                slot = self.slots.assign(req.request_id)
-                req.slot_index = slot.index
-                # sequential prefill: feed prompt tokens through decode
-                # steps (token-by-token prefill keeps one compiled shape;
-                # a chunked prefill path is the serving hillclimb)
-                self._prefill(req, slot)
-                self._active[slot.index] = req
-                made = True
+            # prefill mutates slots.cache, which the in-flight step's
+            # continuation will overwrite with the step's output cache —
+            # admitting mid-step would silently discard the prompt KV.
+            # Defer: _on_step_done admits between steps instead.
+            if self._decode_inflight is not None:
+                return False
+            return self._admit_locked()
+
+    def _admit_locked(self) -> bool:
+        """Admit arrivals into free slots; caller holds ``self._lock``
+        and guarantees no decode step is in flight."""
+        made = False
+        while self._arrivals and self.slots.free_slots():
+            req = self._arrivals.popleft()
+            slot = self.slots.assign(req.request_id)
+            req.slot_index = slot.index
+            # sequential prefill: feed prompt tokens through decode
+            # steps (token-by-token prefill keeps one compiled shape;
+            # a chunked prefill path is the serving hillclimb)
+            self._prefill(req, slot)
+            self._active[slot.index] = req
+            made = True
         return made
 
     def _prefill(self, req: GenRequest, slot) -> None:
@@ -151,29 +207,74 @@ class ServeEngine:
         toks[slot_index, 0] = token
         return jnp.asarray(toks)
 
-    # -- fused decode stream --------------------------------------------------
-    def _decode_poll(self, thing) -> str:
+    # -- fused decode (continuation-chained steps) ---------------------------
+    def _schedule_decode(self) -> None:
         with self._lock:
-            if self._decode_inflight is None:
-                if not self._active:
-                    if self._stopping and not self._arrivals:
-                        return DONE
-                    return NOPROGRESS      # idle; keep polling
-                toks = np.zeros((self.batch_slots, 1), np.int32)
-                for idx, req in self._active.items():
-                    toks[idx, 0] = req.next_input
-                pos = self.slots.positions()
-                logits, cache = self._jit_decode(
-                    self.params, self.slots.cache, jnp.asarray(toks), pos)
-                self._decode_inflight = (logits, cache)
+            if self._decode_inflight is not None or not self._active:
+                return
+            step = self._launch_decode_locked()
+        self._attach_step(step)
+
+    def _launch_decode_locked(self) -> Request:
+        """Dispatch one fused decode step; caller holds ``self._lock``.
+
+        Completion is watched by a one-shot readiness task on the decode
+        stream that completes the returned ``step`` request — the only
+        place the device is polled.  Dispatch failure fails the request
+        instead of wedging the stream (the failure continuation cleans
+        up).  The caller attaches the continuation AFTER releasing the
+        lock: an already-failed step fires inline immediately, and that
+        must not happen while the serve lock is held.
+        """
+        step = Request(tag="decode-step")
+        self._current_step = step
+        try:
+            toks = np.zeros((self.batch_slots, 1), np.int32)
+            for idx, req in self._active.items():
+                toks[idx, 0] = req.next_input
+            pos = self.slots.positions()
+            logits, cache = self._jit_decode(
+                self.params, self.slots.cache, jnp.asarray(toks), pos)
+        except BaseException as exc:  # noqa: BLE001
+            step.fail(exc)
+            return step
+        self._decode_inflight = (logits, cache)
+
+        def ready_poll(thing, logits=logits, cache=cache, step=step) -> str:
+            if not logits.is_ready():        # device still busy — no block
                 return NOPROGRESS
-            logits, cache = self._decode_inflight
-            if not logits.is_ready():
-                return NOPROGRESS          # device still busy — no block
+            step.complete((logits, cache))
+            return DONE
+
+        self.engine.async_start(ready_poll, None, self.decode_stream)
+        return step
+
+    def _attach_step(self, step: Request) -> None:
+        self.continuations.attach(step, self._on_step_done,
+                                  on_error=self._on_step_failed)
+
+    def _on_step_done(self, step: Request) -> None:
+        """Detokenize stage (a continuation): harvest the fused step,
+        finish/complete requests, and chain the next decode step."""
+        logits, cache = step.value()
+        try:
+            # materialize OUTSIDE the lock: this is where async device
+            # errors surface (not at dispatch) — a raise here must take
+            # the failure path, not wedge the server with _active full
+            # and no task on any stream
+            next_ids = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        except BaseException as exc:  # noqa: BLE001
+            self._fail_step(step, exc)
+            return
+        freed = False
+        next_step = None
+        with self._lock:
+            if self._current_step is not step:
+                return                         # stale: a newer step owns state
+            self._current_step = None
             self._decode_inflight = None
             self.slots.cache = cache
             self.steps += 1
-            next_ids = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
             finished = []
             for idx, req in list(self._active.items()):
                 tok = int(next_ids[idx])
@@ -190,12 +291,49 @@ class ServeEngine:
                 req.finished_at = time.monotonic()
                 self.slots.release(self.slots.slots[idx])
                 req.done_req.complete(req.out_tokens)
-            return NOPROGRESS              # perpetual while serving
+                freed = True
+            # admit between steps: arrivals that landed while this step
+            # was in flight (their admission was deferred — prefill and
+            # an in-flight step must not both write slots.cache) join
+            # the batch before the next launch
+            self._admit_locked()
+            if self._active:
+                next_step = self._launch_decode_locked()  # chain the next step
+        if next_step is not None:
+            self._attach_step(next_step)
+        if freed:
+            self._schedule_admit()             # the slot-free event
+
+    def _on_step_failed(self, step: Request) -> None:
+        """Failure continuation: a decode step that failed fails every
+        in-flight request with the step's exception (propagated through
+        ``Request.exception``) and frees their slots."""
+        self._fail_step(step, step.exception)
+
+    def _fail_step(self, step: Request, exc: BaseException) -> None:
+        self.decode_errors.append(exc)
+        with self._lock:
+            if self._current_step is not step:
+                # stale failure (a newer healthy step was launched before
+                # this continuation drained): the requests already belong
+                # to that step — touching state here would clobber it
+                return
+            self._current_step = None
+            self._decode_inflight = None
+            for idx, req in list(self._active.items()):
+                self._active.pop(idx)
+                req.finished_at = time.monotonic()
+                self.slots.release(self.slots.slots[idx])
+                req.done_req.fail(exc)
+        self._schedule_admit()
+
     # -- lifecycle ------------------------------------------------------------
     @property
     def idle(self) -> bool:
         with self._lock:
-            return not (self._active or self._arrivals)
+            busy = (self._active or self._arrivals
+                    or self._decode_inflight is not None)
+        return not busy and self.continuations.ready == 0
 
     def run_until_idle(self, timeout: float = 120.0) -> None:
         """Serve until the backlog empties.  With an executor the worker
@@ -206,31 +344,57 @@ class ServeEngine:
             if self.executor is not None and self.executor.running:
                 time.sleep(0.0005)
             elif self._sub is not None:
-                self.engine.progress()          # bridge polls the streams
+                # bridge polls the streams; pace out when nothing moved
+                # (waiting on the device must not burn the core)
+                if self.engine.progress() == 0:
+                    time.sleep(50e-6)
             else:
                 # executor attached but not running (never started, or
                 # already shut down): drive the adopted streams inline so
                 # waiting can never silently hang
-                self._poll_streams()
-                self.engine.poll_subsystems()
+                made = self._poll_streams()
+                subs = self.engine.poll_subsystems()
+                if not made and not subs:
+                    time.sleep(50e-6)       # device wait: don't burn a core
             if time.monotonic() - t0 > timeout:
                 raise TimeoutError("serve engine did not drain")
 
     def stop(self) -> None:
-        """Begin shutdown: reject new submissions; the perpetual
-        admission/decode tasks return DONE once the backlog is served, so
-        ``executor.shutdown(drain=True)`` / ``engine.drain`` terminate."""
+        """Begin shutdown: reject new submissions.  Already-submitted
+        work keeps flowing (the event chain runs the backlog down); once
+        it finishes no tasks remain, so drains terminate."""
         with self._lock:
             self._stopping = True
 
     def close(self, timeout: float = 60.0) -> None:
-        """Stop and drain both serve streams (Listing 1.2 finalize)."""
+        """Stop, serve the backlog, then deterministically drain: both
+        serve streams empty and every pending continuation executed
+        (Listing 1.2 finalize, extended to the continuation layer).
+        Idempotent: a second close (finally blocks, racing shutdown
+        paths) is a no-op."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
         self.stop()
+        self.run_until_idle(timeout=timeout)
         if self.executor is not None and self.executor.running:
             self.executor.drain(timeout)
         else:
             self.engine.drain(self.admit_stream, timeout=timeout)
             self.engine.drain(self.decode_stream, timeout=timeout)
+        self.continuations.drain()             # anything still ready
+        if self._queue_adopted:
+            self.executor.release_queue(self.continuations)
+            self._queue_adopted = False
+        self.continuations.close()
         if self._sub is not None:
             self.engine.unregister_subsystem(self._sub)
             self._sub = None
+        # hand the (drained) streams back to the engine: a process that
+        # builds ServeEngines repeatedly must not grow the stream list
+        for stream in (self.admit_stream, self.decode_stream):
+            if self.executor is not None and self.executor.owns(stream):
+                self.executor.release(stream)
+            if not stream.pending:
+                self.engine.free_stream(stream)

@@ -168,8 +168,8 @@ def shard_hint(x: jax.Array, *logical_axes: str | None):
 
 def _abstract_mesh():
     try:
-        m = jax.sharding.get_abstract_mesh()
-        return m
+        from repro import compat
+        return compat.current_mesh()
     except Exception:
         return None
 

@@ -1,6 +1,7 @@
 """Attention implementation variants: blockskip + ring (fwd & custom bwd)
 against the reference oracle, incl. multi-device subprocess checks."""
 import jax
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -67,15 +68,15 @@ class TestRingAttention:
     def test_multidevice_fwd_and_custom_bwd(self):
         out = run_with_devices("""
             import jax, jax.numpy as jnp, numpy as np
+            from repro import compat
             from repro.collectives.ring_attention import ring_attention
             from repro.kernels.ref import flash_attention_ref
-            mesh = jax.make_mesh((2, 4), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh = compat.make_mesh((2, 4), ("data", "model"))
             ks = jax.random.split(jax.random.PRNGKey(0), 3)
             q = jax.random.normal(ks[0], (2, 128, 6, 32))
             k = jax.random.normal(ks[1], (2, 128, 2, 32))
             v = jax.random.normal(ks[2], (2, 128, 2, 32))
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 out = jax.jit(lambda q, k, v: ring_attention(q, k, v, causal=True))(q, k, v)
                 g = jax.jit(jax.grad(lambda q, k, v: jnp.sum(
                     ring_attention(q, k, v, causal=True) ** 2),
@@ -96,6 +97,7 @@ class TestMoECustomVJP:
     def test_multidevice_matches_fallback_autodiff(self):
         out = run_with_devices("""
             import jax, jax.numpy as jnp, numpy as np
+            from repro import compat
             from repro.configs import get_config
             from repro.models import layers as L
             base = get_config("grok-1-314b")
@@ -109,9 +111,8 @@ class TestMoECustomVJP:
                 y, aux = L.moe_apply(p, x, cfg)
                 return jnp.sum(y ** 2) + aux
             l0, g0 = jax.value_and_grad(loss)(p, x)       # no-mesh fallback
-            mesh = jax.make_mesh((2, 4), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
-            with jax.set_mesh(mesh):
+            mesh = compat.make_mesh((2, 4), ("data", "model"))
+            with compat.set_mesh(mesh):
                 l1, g1 = jax.jit(jax.value_and_grad(loss))(p, x)
             assert abs(float(l0 - l1)) < 1e-3, (l0, l1)
             errs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), g0, g1)

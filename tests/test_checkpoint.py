@@ -5,6 +5,7 @@ import os
 import shutil
 
 import jax
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -69,8 +70,7 @@ def test_restore_resharded_roundtrip(tmp_path, tree):
     eng = ProgressEngine()
     ck = AsyncCheckpointer(str(tmp_path), eng)
     ck.save_blocking(2, tree)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     sh = jax.tree.map(
         lambda _: jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
         tree)

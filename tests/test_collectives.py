@@ -1,6 +1,7 @@
 """User-level collective schedules vs native ops (multi-device subprocess)
 + compression correctness (single device)."""
 import jax
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -14,11 +15,12 @@ class TestSchedulesMultiDevice:
     def test_allreduce_algorithms_match_psum(self):
         out = run_with_devices("""
             import jax, jax.numpy as jnp, numpy as np
+            from repro import compat
             from jax.sharding import PartitionSpec as P
             from repro.collectives import schedules as S
-            mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = compat.make_mesh((8,), ("x",))
             x = jax.random.normal(jax.random.PRNGKey(0), (8, 4, 33))  # odd last dim
-            native = jax.jit(jax.shard_map(lambda v: jax.lax.psum(v, "x"),
+            native = jax.jit(compat.shard_map(lambda v: jax.lax.psum(v, "x"),
                 mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
             for alg in S.ALGORITHMS:
                 out = jax.jit(lambda v, a=alg: S.allreduce_under_shard_map(v, mesh, "x", a))(x)
@@ -31,9 +33,10 @@ class TestSchedulesMultiDevice:
     def test_reduce_scatter_all_gather_match_native(self):
         out = run_with_devices("""
             import jax, jax.numpy as jnp, numpy as np
+            from repro import compat
             from jax.sharding import PartitionSpec as P
             from repro.collectives import schedules as S
-            mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = compat.make_mesh((8,), ("x",))
             x = jax.random.normal(jax.random.PRNGKey(1), (8, 2, 64))
             def user(v):
                 return S.ring_all_gather(S.ring_reduce_scatter(v, "x"), "x")
@@ -41,8 +44,8 @@ class TestSchedulesMultiDevice:
                 return jax.lax.all_gather(
                     jax.lax.psum_scatter(v, "x", scatter_dimension=v.ndim-1, tiled=True),
                     "x", axis=v.ndim-1, tiled=True)
-            a = jax.jit(jax.shard_map(user, mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
-            b = jax.jit(jax.shard_map(native, mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
+            a = jax.jit(compat.shard_map(user, mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
+            b = jax.jit(compat.shard_map(native, mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
             np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
             print("RS_AG_MATCH")
         """)
@@ -51,13 +54,14 @@ class TestSchedulesMultiDevice:
     def test_bruck_matches_native_all_to_all(self):
         out = run_with_devices("""
             import jax, jax.numpy as jnp, numpy as np
+            from repro import compat
             from jax.sharding import PartitionSpec as P
             from repro.collectives import schedules as S
-            mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = compat.make_mesh((8,), ("x",))
             x = jax.random.normal(jax.random.PRNGKey(2), (64, 16))
-            user = jax.jit(jax.shard_map(lambda v: S.bruck_alltoall(v, "x"),
+            user = jax.jit(compat.shard_map(lambda v: S.bruck_alltoall(v, "x"),
                 mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
-            native = jax.jit(jax.shard_map(
+            native = jax.jit(compat.shard_map(
                 lambda v: jax.lax.all_to_all(v.reshape(8, 8 // 8, 16), "x", 0, 0,
                                              tiled=False).reshape(8, 16),
                 mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
@@ -69,12 +73,13 @@ class TestSchedulesMultiDevice:
     def test_collective_matmul_ag_matches_reference(self):
         out = run_with_devices("""
             import jax, jax.numpy as jnp, numpy as np
+            from repro import compat
             from jax.sharding import PartitionSpec as P
             from repro.collectives import overlap as O
-            mesh = jax.make_mesh((4,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = compat.make_mesh((4,), ("x",))
             x = jax.random.normal(jax.random.PRNGKey(0), (32, 16))   # rows sharded
             w = jax.random.normal(jax.random.PRNGKey(1), (16, 64))   # cols sharded
-            user = jax.jit(jax.shard_map(lambda xs, ws: O.collective_matmul_ag(xs, ws, "x"),
+            user = jax.jit(compat.shard_map(lambda xs, ws: O.collective_matmul_ag(xs, ws, "x"),
                 mesh=mesh, in_specs=(P("x"), P(None, "x")), out_specs=P(None, "x")))(x, w)
             ref = x @ w
             np.testing.assert_allclose(np.asarray(user), np.asarray(ref), atol=1e-4)
@@ -85,13 +90,14 @@ class TestSchedulesMultiDevice:
     def test_collective_matmul_rs_matches_reference(self):
         out = run_with_devices("""
             import jax, jax.numpy as jnp, numpy as np
+            from repro import compat
             from jax.sharding import PartitionSpec as P
             from repro.collectives import overlap as O
-            mesh = jax.make_mesh((4,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = compat.make_mesh((4,), ("x",))
             x = jax.random.normal(jax.random.PRNGKey(0), (32, 64))
             w = jax.random.normal(jax.random.PRNGKey(1), (64, 48))
             # contraction sharded: x cols + w rows over "x"; rows scattered out
-            user = jax.jit(jax.shard_map(lambda xs, ws: O.collective_matmul_rs(xs, ws, "x"),
+            user = jax.jit(compat.shard_map(lambda xs, ws: O.collective_matmul_rs(xs, ws, "x"),
                 mesh=mesh, in_specs=(P(None, "x"), P("x", None)), out_specs=P("x", None)))(x, w)
             ref = x @ w
             np.testing.assert_allclose(np.asarray(user), np.asarray(ref), atol=1e-3, rtol=1e-4)
@@ -102,11 +108,12 @@ class TestSchedulesMultiDevice:
     def test_compressed_allreduce_multidevice(self):
         out = run_with_devices("""
             import jax, jax.numpy as jnp, numpy as np
+            from repro import compat
             from jax.sharding import PartitionSpec as P
             from repro.collectives.compression import compressed_allreduce
-            mesh = jax.make_mesh((4,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = compat.make_mesh((4,), ("x",))
             x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 512))
-            out = jax.jit(jax.shard_map(lambda v: compressed_allreduce(v, "x"),
+            out = jax.jit(compat.shard_map(lambda v: compressed_allreduce(v, "x"),
                 mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
             exact = np.broadcast_to(np.asarray(x).sum(0, keepdims=True), x.shape)
             rel = np.abs(np.asarray(out) - exact) / (np.abs(exact) + 1e-3)

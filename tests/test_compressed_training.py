@@ -6,13 +6,13 @@ from tests._multidevice import run_with_devices
 def test_compressed_dp_training_converges_like_exact():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from jax.sharding import PartitionSpec as P
         from repro.collectives.compression import (
             compressed_allreduce, dequantize_int8, quantize_int8)
 
         # toy regression: w [D]; data sharded over 4 devices
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((4,), ("data",))
         D, N = 64, 256
         ks = jax.random.split(jax.random.PRNGKey(0), 3)
         w_true = jax.random.normal(ks[0], (D,))
@@ -41,7 +41,7 @@ def test_compressed_dp_training_converges_like_exact():
                 # check_vma=False: the ring allreduce's output IS
                 # replicated, but the varying-axes checker cannot prove
                 # replication through ppermute chains
-                return jax.shard_map(
+                return compat.shard_map(
                     inner, mesh=mesh,
                     in_specs=(P(), P("data"), P("data"), P("data")),
                     out_specs=(P(), P("data")), check_vma=False)(w, err, Xs, ys)

@@ -1,0 +1,357 @@
+"""Continuation subsystem tests (MPI Continuations on the engine).
+
+Covers both execution policies (inline-on-progress-thread vs deferred
+owner drain), failure continuations, chaining (then/when_all/when_any/
+node-as-TaskGraph), executor queue adoption, and the continuation
+counters surfaced through repro.core.stats.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    DEFERRED, DONE, INLINE, NOPROGRESS, CompletionCounter, ContinuationQueue,
+    ProgressEngine, ProgressExecutor, Request, stats,
+)
+
+
+def timed_task(duration, req=None, value=None):
+    deadline = time.monotonic() + duration
+
+    def poll(thing):
+        if time.monotonic() >= deadline:
+            if req is not None:
+                req.complete(value)
+            return DONE
+        return NOPROGRESS
+    return poll
+
+
+def wait_until(pred, timeout=10.0, what="condition"):
+    t0 = time.monotonic()
+    while not pred():
+        time.sleep(0.0005)
+        if time.monotonic() - t0 > timeout:
+            raise TimeoutError(what)
+
+
+class TestInlinePolicy:
+    def test_fires_on_progress_thread_exactly_once(self):
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=INLINE)
+        req = Request()
+        fired = []
+        q.attach(req, lambda r: fired.append(r))
+        eng.async_start(timed_task(0.002, req=req, value=41))
+        while not fired:
+            eng.progress()
+        for _ in range(5):
+            eng.progress()                    # further sweeps must not refire
+        assert fired == [req]
+        assert req.value() == 41
+        assert q.enqueued == 1 and q.executed == 1 and q.deferred == 0
+        assert q.pending == 0 and q.ready == 0
+
+    def test_already_complete_request_fires_immediately(self):
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=INLINE)
+        req = Request()
+        req.complete("now")
+        fired = []
+        q.attach(req, lambda r: fired.append(r.value()))
+        assert fired == ["now"]               # no progress call needed
+
+    def test_queue_task_retires_when_empty(self):
+        """No perpetual task: once every continuation fired, the detection
+        task returns DONE and the stream goes empty (no idle polling)."""
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=INLINE)
+        req = Request()
+        q.attach(req, lambda r: None)
+        req.complete()
+        eng.progress()
+        eng.progress()
+        assert eng.default_stream.pending == 0
+        # re-attach re-registers (lazily)
+        req2 = Request()
+        q.attach(req2, lambda r: None)
+        assert eng.default_stream.pending == 1
+
+    def test_callback_exception_recorded_not_raised(self):
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=INLINE)
+        req = Request()
+        q.attach(req, lambda r: 1 / 0)
+        req.complete()
+        eng.progress()                        # must not raise
+        assert len(q.callback_errors) == 1
+        assert q.failed == 1
+        assert eng.default_stream.task_errors == []   # queue task survived
+
+
+class TestDeferredPolicy:
+    def test_owner_drains_outside_progress_path(self):
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=DEFERRED)
+        reqs = [Request() for _ in range(4)]
+        fired = []
+        for r in reqs:
+            q.attach(r, lambda rr: fired.append(rr))
+        for r in reqs:
+            r.complete()
+        eng.progress()
+        assert fired == []                    # detection only defers
+        assert q.ready == 4 and q.deferred == 4
+        assert q.drain() == 4
+        assert len(fired) == 4 and set(fired) == set(reqs)
+
+    def test_bounded_drain_backpressure(self):
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=DEFERRED)
+        reqs = [Request() for _ in range(10)]
+        fired = []
+        for r in reqs:
+            q.attach(r, lambda rr: fired.append(rr))
+            r.complete()
+        eng.progress()
+        assert q.drain(max_items=3) == 3
+        assert len(fired) == 3 and q.ready == 7
+        assert q.drain() == 7
+
+    def test_fire_exactly_once_with_concurrent_drainers(self):
+        """Two threads draining the same queue never double-execute."""
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=DEFERRED)
+        n = 200
+        counts = [0] * n
+        for i in range(n):
+            r = Request()
+            q.attach(r, lambda rr, i=i: counts.__setitem__(i, counts[i] + 1))
+            r.complete()
+        eng.progress()
+        assert q.ready == n
+        threads = [threading.Thread(target=q.drain) for _ in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert counts == [1] * n
+        assert q.executed == n
+
+
+class TestFailureContinuations:
+    def test_on_error_routes_failed_requests(self):
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=INLINE)
+        ok, bad = [], []
+        r1, r2 = Request(), Request()
+        q.attach(r1, ok.append, on_error=bad.append)
+        q.attach(r2, ok.append, on_error=bad.append)
+        r1.complete("fine")
+        r2.fail(RuntimeError("boom"))
+        eng.progress()
+        assert ok == [r1] and bad == [r2]
+        assert isinstance(r2.exception, RuntimeError)
+        assert q.failed == 1
+
+    def test_failed_without_on_error_still_fires_callback(self):
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=INLINE)
+        seen = []
+        r = Request()
+        q.attach(r, lambda rr: seen.append(rr.failed))
+        r.fail(ValueError("x"))
+        eng.progress()
+        assert seen == [True]
+
+
+class TestChaining:
+    def test_then_transforms_value(self):
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=INLINE)
+        r = Request()
+        out = q.then(r, lambda v: v * 2)
+        r.complete(21)
+        eng.progress()
+        assert out.is_complete and out.value() == 42
+
+    def test_then_propagates_failure_through_chain(self):
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=INLINE)
+        r = Request()
+        mid = q.then(r, lambda v: v + 1)
+        end = q.then(mid, lambda v: v + 1)
+        r.fail(RuntimeError("root cause"))
+        for _ in range(4):
+            eng.progress()
+        assert end.failed
+        with pytest.raises(RuntimeError, match="root cause"):
+            end.value()
+
+    def test_then_on_error_recovers(self):
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=INLINE)
+        r = Request()
+        out = q.then(r, lambda v: v, on_error=lambda exc: "recovered")
+        r.fail(RuntimeError("gone"))
+        eng.progress()
+        assert out.value() == "recovered"
+
+    def test_fn_raising_fails_result(self):
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=INLINE)
+        r = Request()
+        out = q.then(r, lambda v: 1 / 0)
+        r.complete(1)
+        eng.progress()
+        assert out.failed and isinstance(out.exception, ZeroDivisionError)
+
+    def test_when_all_collects_values_in_order(self):
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=INLINE)
+        reqs = [Request() for _ in range(3)]
+        out = q.when_all(reqs)
+        for i, r in enumerate(reversed(reqs)):    # complete out of order
+            r.complete(i)
+        for _ in range(3):
+            eng.progress()
+        assert out.value() == [2, 1, 0]
+
+    def test_when_any_returns_first_complete(self):
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=INLINE)
+        reqs = [Request() for _ in range(3)]
+        out = q.when_any(reqs)
+        reqs[1].complete("mid")
+        eng.progress()
+        i, r = out.value()
+        assert i == 1 and r.value() == "mid"
+
+    def test_node_dag_as_continuations(self):
+        """A TaskGraph expressed as continuation nodes: diamond DAG with
+        completion-driven scheduling and transitive failure propagation."""
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=INLINE)
+        order = []
+        a = q.node(lambda: (order.append("a"), 1)[1])
+        b = q.then(a, lambda v: (order.append("b"), v + 10)[1])
+        c = q.then(a, lambda v: (order.append("c"), v + 100)[1])
+        d = q.node(lambda bv, cv: (order.append("d"), bv + cv)[1], deps=[b, c])
+        for _ in range(6):
+            eng.progress()
+        assert d.value() == 112
+        assert order[0] == "a" and order[-1] == "d"
+
+    def test_node_failure_skips_dependents(self):
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=INLINE)
+        ran = []
+        a = q.node(lambda: 1 / 0)
+        b = q.node(lambda av: ran.append(av), deps=[a])
+        for _ in range(4):
+            eng.progress()
+        assert b.failed and isinstance(b.exception, ZeroDivisionError)
+        assert ran == []
+
+    def test_attach_to_completion_counter(self):
+        """Wait-set aggregate continuation: fires once when ALL requests
+        behind the counter completed."""
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=INLINE)
+        reqs = [Request() for _ in range(4)]
+        cc = CompletionCounter(reqs)
+        fired = []
+        q.attach_counter(cc, lambda c: fired.append(c.completed))
+        for r in reqs[:3]:
+            r.complete()
+        eng.progress()
+        assert fired == []
+        reqs[3].complete()
+        eng.progress()
+        assert fired == [4]
+
+
+class TestExecutorIntegration:
+    def test_workers_drain_adopted_queue_between_polls(self):
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=2, continuation_max_drain=8)
+        s = ex.stream("work")
+        q = ContinuationQueue(eng, s, policy=DEFERRED, name="bg")
+        ex.adopt_queue(q)
+        fired = []
+        reqs = [Request() for _ in range(20)]
+        for r in reqs:
+            q.attach(r, lambda rr: fired.append(rr))
+        for r, d in zip(reqs, range(len(reqs))):
+            eng.async_start(timed_task(0.001 * (d % 4), req=r), None, s)
+        with ex:
+            wait_until(lambda: len(fired) == 20, 10, "worker drain")
+        assert q.executed == 20 and q.deferred == 20
+        assert sum(w.drained for w in ex.worker_stats()) == 20
+
+    def test_executor_drain_includes_ready_continuations(self):
+        """shutdown(drain=True) must not leave fired-but-undrained
+        continuations behind (Listing 1.2 extended to the queue)."""
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=1)
+        s = ex.stream("d")
+        q = ContinuationQueue(eng, s, policy=DEFERRED, name="dq")
+        ex.adopt_queue(q)
+        fired = []
+        for _ in range(5):
+            r = Request()
+            q.attach(r, lambda rr: fired.append(rr))
+            eng.async_start(timed_task(0.002, req=r), None, s)
+        ex.start()
+        ex.shutdown(drain=True, timeout=10)
+        assert len(fired) == 5
+        assert q.ready == 0
+
+    def test_release_queue(self):
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=1)
+        q = ContinuationQueue(eng, name="r")
+        ex.adopt_queue(q)
+        assert q in ex.queues()
+        ex.release_queue(q)
+        assert q not in ex.queues()
+        with pytest.raises(ValueError):
+            ex.release_queue(q)
+
+
+class TestLifecycleAndStats:
+    def test_close_cancels_pending_runs_ready(self):
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=DEFERRED)
+        fired = []
+        done_r, never_r = Request(), Request()
+        q.attach(done_r, lambda r: fired.append("done"))
+        q.attach(never_r, lambda r: fired.append("never"))
+        done_r.complete()
+        eng.progress()                       # done_r -> ready
+        q.close()
+        assert fired == ["done"]
+        assert q.cancelled == 1
+        with pytest.raises(RuntimeError):
+            q.attach(Request(), lambda r: None)
+        eng.progress()                       # detection task retires
+        assert eng.default_stream.pending == 0
+
+    def test_counters_in_stats_snapshot(self):
+        eng = ProgressEngine()
+        q = ContinuationQueue(eng, policy=DEFERRED, name="metered")
+        r1, r2 = Request(), Request()
+        q.attach(r1, lambda r: None)
+        q.attach(r2, lambda r: None, on_error=lambda r: None)
+        r1.complete()
+        r2.fail(RuntimeError("x"))
+        eng.progress()
+        q.drain()
+        snap = stats.collect(eng)
+        cs = snap.continuation_queue("metered")
+        assert cs.policy == DEFERRED
+        assert cs.enqueued == 2 and cs.executed == 2
+        assert cs.deferred == 2 and cs.failed == 1
+        assert cs.pending == 0 and cs.ready == 0
+        assert "metered" in stats.format_stats(snap)

@@ -10,8 +10,8 @@ import time
 import pytest
 
 from repro.core import (
-    DONE, NOPROGRESS, CompletionCounter, ProgressEngine, ProgressExecutor,
-    Request, stats,
+    DEFERRED, DONE, NOPROGRESS, CompletionCounter, ContinuationQueue,
+    ProgressEngine, ProgressExecutor, Request, stats,
 )
 
 
@@ -413,6 +413,81 @@ class TestSubsystemCriticalSection:
         ex.shutdown(drain=True, timeout=5)
         assert eng.subsystem_errors == []   # no 'generator already executing'
         assert got[:50] == sorted(got[:50])
+
+
+class TestStreamChurnStress:
+    def test_register_unregister_streams_under_load(self):
+        """Stress: streams are created, loaded, drained, and freed WHILE
+        workers poll, steal, and fire continuations.  Invariants: every
+        task's continuation fires exactly once (none lost, none doubled)
+        and shutdown is clean."""
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=3, steal=True, steal_after=2,
+                              continuation_max_drain=16)
+        q = ContinuationQueue(eng, ex.stream("stress-detect"),
+                              policy=DEFERRED, name="stress")
+        ex.adopt_queue(q)
+        fired: dict[tuple, int] = {}
+        flock = threading.Lock()
+        total = 0
+        waves, tasks_per_wave = 12, 8
+        with ex:
+            live: list = []
+            for wave in range(waves):
+                s = ex.stream(f"churn{wave}")
+                live.append(s)
+                for t in range(tasks_per_wave):
+                    key = (wave, t)
+                    fired[key] = 0
+                    r = Request()
+
+                    def cb(rr, key=key):
+                        with flock:
+                            fired[key] += 1
+
+                    q.attach(r, cb)
+                    eng.async_start(
+                        timed_task(0.0005 * (t % 3), req=r), None, s)
+                    total += 1
+                # churn: retire every already-drained older stream while
+                # the workers are mid-flight on the rest
+                for old in list(live):
+                    if old is not s and old.pending == 0:
+                        ex.release(old)
+                        eng.free_stream(old)
+                        live.remove(old)
+                time.sleep(0.001)
+            ex.drain(timeout=30)
+        assert not ex.running                     # clean shutdown
+        assert ex.errors == []
+        assert sum(fired.values()) == total       # no lost tasks
+        assert all(v == 1 for v in fired.values())  # no double-execution
+        assert q.executed == total
+        assert q.pending == 0 and q.ready == 0
+        # every surviving stream fully drained
+        assert all(s.pending == 0 for s in live)
+
+    def test_adoption_churn_with_outside_waiters(self):
+        """Streams hop between executor ownership and caller-driven
+        progress (release → engine.wait → re-adopt) without losing
+        completions or deadlocking."""
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=2, steal=False)
+        s = ex.stream("hop")
+        with ex:
+            for round_ in range(6):
+                r = Request()
+                eng.async_start(timed_task(0.002, req=r, value=round_),
+                                None, s)
+                if round_ % 2 == 0:
+                    assert eng.wait(r, timeout=10) == round_  # worker-owned
+                else:
+                    ex.release(s)
+                    # caller-driven: wait progresses the unadopted stream
+                    assert eng.wait(r, stream=s, timeout=10) == round_
+                    ex.adopt(s)
+            ex.drain(timeout=10)
+        assert s.pending == 0
 
 
 class TestStats:

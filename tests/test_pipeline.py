@@ -13,10 +13,10 @@ def test_bubble_fraction():
 def test_pipeline_forward_matches_sequential():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.distributed.pipeline import gpipe
         S, M, mb, D = 4, 6, 2, 16
-        mesh = jax.make_mesh((S,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((S,), ("stage",))
         ks = jax.random.split(jax.random.PRNGKey(0), 2)
         # each stage: x -> tanh(x @ w + b)
         params = {"w": jax.random.normal(ks[0], (S, D, D)) * 0.3,
@@ -43,10 +43,10 @@ def test_pipeline_forward_matches_sequential():
 def test_pipeline_gradients_match_sequential():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.distributed.pipeline import gpipe
         S, M, mb, D = 4, 4, 2, 8
-        mesh = jax.make_mesh((S,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((S,), ("stage",))
         ks = jax.random.split(jax.random.PRNGKey(1), 2)
         params = {"w": jax.random.normal(ks[0], (S, D, D)) * 0.3}
         xs = jax.random.normal(ks[1], (M, mb, D))
@@ -77,14 +77,14 @@ def test_elastic_reshard_restore_end_to_end():
     resharded onto (2,2) — values identical, shardings valid."""
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np, tempfile
+        from repro import compat
         from repro.core import ProgressEngine
         from repro.train.checkpoint import AsyncCheckpointer
         from repro.distributed.elastic import plan_mesh, reshard_restore
         from repro.launch.mesh import make_mesh
         from repro.models import layers as L
 
-        mesh8 = jax.make_mesh((4, 2), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh8 = compat.make_mesh((4, 2), ("data", "model"))
         spec_tree_axes = {"w": ("embed", "mlp"), "b": ("mlp",)}
         tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 8)),
                 "b": jnp.ones((8,))}

@@ -1,5 +1,6 @@
 """Property-based tests (hypothesis) on system invariants."""
 import jax
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -10,7 +11,8 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.analysis import hlo as hlo_mod
 from repro.collectives.compression import dequantize_int8, quantize_int8
-from repro.core import DONE, NOPROGRESS, ProgressEngine
+from repro.core import (DEFERRED, DONE, INLINE, NOPROGRESS, CompletionCounter,
+                        ContinuationQueue, ProgressEngine, Request)
 from repro.kernels import ref
 from repro.sharding import DEFAULT_RULES, resolve_spec
 from jax.sharding import PartitionSpec as P
@@ -66,6 +68,97 @@ def test_engine_spawn_depth(depth, width):
         eng.async_start(make(1), None)
     eng.drain(timeout=10)
     assert len(seen) == depth * width
+
+
+# ---------------------------------------------------------------------------
+# Wait-set / completion-counter / continuation invariants
+# ---------------------------------------------------------------------------
+
+def _counting_task(req, polls_left):
+    """Task completing ``req`` after ``polls_left`` NOPROGRESS sweeps."""
+    state = {"left": polls_left}
+
+    def poll(thing):
+        if state["left"] <= 0:
+            req.complete()
+            return DONE
+        state["left"] -= 1
+        return NOPROGRESS
+    return poll
+
+
+@SETTINGS
+@given(st.lists(st.integers(min_value=0, max_value=6), min_size=1,
+                max_size=12),
+       st.integers(min_value=1, max_value=12))
+def test_wait_sets_return_only_completed_requests(poll_counts, min_count):
+    """wait_any/wait_some only ever report requests that ARE complete,
+    with no duplicates, regardless of completion cadence."""
+    eng = ProgressEngine()
+    reqs = []
+    for n in poll_counts:
+        r = Request()
+        eng.async_start(_counting_task(r, n))
+        reqs.append(r)
+    idx, winner = eng.wait_any(reqs, timeout=10)
+    assert winner is reqs[idx] and winner.is_complete
+    k = min(min_count, len(reqs))
+    done_idx = eng.wait_some(reqs, min_count=k, timeout=10)
+    assert len(done_idx) >= k
+    assert len(set(done_idx)) == len(done_idx)          # no duplicates
+    assert all(reqs[i].is_complete for i in done_idx)   # only completed
+    eng.drain(timeout=10)
+
+
+@SETTINGS
+@given(st.lists(st.booleans(), min_size=1, max_size=20), st.data())
+def test_completion_counter_never_overshoots(outcomes, data):
+    """completed <= total and remaining >= 0 at every point of any
+    completion order; failures still count as completions."""
+    reqs = [Request() for _ in outcomes]
+    cc = CompletionCounter(reqs)
+    order = data.draw(st.permutations(range(len(reqs))))
+    done = 0
+    for i in order:
+        assert cc.completed == done and cc.remaining == len(reqs) - done
+        if outcomes[i]:
+            reqs[i].complete(i)
+        else:
+            reqs[i].fail(RuntimeError(f"r{i}"))
+        done += 1
+        assert 0 <= cc.completed <= cc.total
+        assert cc.completed == done
+        assert cc.remaining >= 0
+    assert cc.is_complete
+    assert len(cc.failed) == sum(1 for ok in outcomes if not ok)
+
+
+@SETTINGS
+@given(st.integers(min_value=1, max_value=16),
+       st.sampled_from([INLINE, DEFERRED]),
+       st.data())
+def test_continuations_fire_exactly_once_any_order(n, policy, data):
+    """Each attached continuation fires exactly once under an arbitrary
+    completion order interleaved with progress sweeps and drains."""
+    eng = ProgressEngine()
+    q = ContinuationQueue(eng, policy=policy)
+    counts = [0] * n
+    reqs = [Request() for _ in range(n)]
+    for i, r in enumerate(reqs):
+        q.attach(r, lambda rr, i=i: counts.__setitem__(i, counts[i] + 1))
+    order = data.draw(st.permutations(range(n)))
+    for j, i in enumerate(order):
+        reqs[i].complete(i)
+        if j % 2 == 0:                    # interleave detection + drain
+            eng.progress()
+            q.drain()
+    for _ in range(3):                    # settle stragglers
+        eng.progress()
+        q.drain()
+    assert counts == [1] * n
+    assert q.executed == n and q.enqueued == n
+    assert q.pending == 0 and q.ready == 0
+    assert eng.default_stream.pending == 0   # detection task retired
 
 
 # ---------------------------------------------------------------------------
@@ -141,8 +234,7 @@ _mesh = None
 def _get_mesh():
     global _mesh
     if _mesh is None:
-        _mesh = jax.make_mesh((1, 1), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        _mesh = compat.make_mesh((1, 1), ("data", "model"))
     return _mesh
 
 
@@ -163,8 +255,7 @@ def test_resolve_spec_never_assigns_duplicate_axes(axes, dims):
 def test_resolve_spec_divisibility(axis, dim):
     """A sharded dim is always divisible by the assigned axis product."""
     import math
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2) \
+    mesh = compat.make_mesh((2, 4), ("data", "model")) \
         if len(jax.devices()) >= 8 else _get_mesh()
     spec = resolve_spec((axis,), (dim,), mesh)
     if spec and spec[0]:

@@ -1,5 +1,6 @@
 """End-to-end trainer (with resume) + continuous-batching server tests."""
 import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -7,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import ProgressEngine, ProgressExecutor, stats
+from repro.core import ProgressEngine, ProgressExecutor, Request, stats
 from repro.data.pipeline import PrefetchPipeline, SyntheticLM
 from repro.models import registry
 from repro.serve.engine import GenRequest, ServeEngine
@@ -137,8 +138,129 @@ class TestServeEngine:
         srv.close(timeout=60)
         assert srv.admit_stream.pending == 0
         assert srv.decode_stream.pending == 0
+        assert srv.continuations.ready == 0 and srv.continuations.pending == 0
         with pytest.raises(RuntimeError):
             srv.submit(GenRequest("late", np.array([1], np.int32)))
+
+    def test_decode_completions_delivered_via_continuations(self, served):
+        """The event-driven acceptance: every fused decode step's
+        completion is delivered by continuation execution (counters
+        nonzero and equal to the step count), not by a polling consumer."""
+        srv, eng = served
+        reqs = [GenRequest(f"r{i}", np.array([1, 2], np.int32),
+                           max_new_tokens=3) for i in range(3)]
+        for r in reqs:
+            srv.submit(r)
+        srv.run_until_idle(timeout=240)
+        snap = stats.collect(eng)
+        cq = snap.continuation_queue("serve-cont")
+        assert srv.steps > 0
+        assert cq.executed == srv.steps        # one detokenize per step
+        assert cq.failed == 0
+
+    def test_no_busy_wait_when_idle(self, served):
+        """No polling loop in the lifecycle: once the backlog is served,
+        the serve streams are EMPTY — further progress calls poll zero
+        tasks (the old perpetual admit/decode tasks would spin forever)."""
+        srv, eng = served
+        req = GenRequest("r0", np.array([1, 2], np.int32), max_new_tokens=2)
+        srv.submit(req)
+        srv.run_until_idle(timeout=120)
+        polls_before = (srv.admit_stream.polls, srv.decode_stream.polls)
+        spins_before = (srv.admit_stream.idle_spins,
+                        srv.decode_stream.idle_spins)
+        for _ in range(50):
+            eng.progress()
+        assert (srv.admit_stream.polls, srv.decode_stream.polls) == polls_before
+        assert (srv.admit_stream.idle_spins,
+                srv.decode_stream.idle_spins) == spins_before
+
+    def test_admission_deferred_while_step_inflight(self, served):
+        """Prefill writes slots.cache; an in-flight step's continuation
+        overwrites it with the step's output cache.  Admission must
+        therefore defer while a step is in flight (the continuation
+        admits between steps) or mid-step arrivals lose their prompt KV."""
+        srv, eng = served
+        with srv._lock:
+            srv._decode_inflight = ("sentinel", "sentinel")
+        srv.submit(GenRequest("r", np.array([1], np.int32), max_new_tokens=1))
+        assert srv._admit() is False           # deferred, not prefetched
+        assert len(srv._arrivals) == 1         # still queued
+        with srv._lock:
+            srv._decode_inflight = None
+        assert srv._admit() is True            # admitted between steps
+        srv.run_until_idle(timeout=120)
+
+    def test_decode_dispatch_failure_fails_requests(self, served):
+        """Failure continuation: a decode step that cannot even dispatch
+        fails every in-flight request with the step's exception instead
+        of hanging the server."""
+        srv, eng = served
+        req = GenRequest("r0", np.array([1], np.int32), max_new_tokens=2)
+        with srv._lock:
+            slot = srv.slots.assign(req.request_id)
+            req.slot_index = slot.index
+            req.next_input = 1
+            srv._active[slot.index] = req
+
+        def broken(*a, **k):
+            raise RuntimeError("device lost")
+
+        srv._jit_decode = broken
+        srv._schedule_decode()
+        t0 = time.monotonic()
+        while not req.done_req.is_complete:
+            eng.progress()
+            assert time.monotonic() - t0 < 30
+        assert req.done_req.failed
+        assert isinstance(req.done_req.exception, RuntimeError)
+        assert len(srv.slots.free_slots()) == 4    # slot released
+        assert len(srv.decode_errors) == 1
+
+    def test_harvest_failure_fails_requests(self, served):
+        """Async device errors surface at materialization, not dispatch:
+        a step whose logits blow up during detokenize must fail the
+        in-flight requests (failure path), not wedge the server."""
+        srv, eng = served
+        req = GenRequest("r0", np.array([1], np.int32), max_new_tokens=2)
+        with srv._lock:
+            slot = srv.slots.assign(req.request_id)
+            req.slot_index = slot.index
+            req.next_input = 1
+            srv._active[slot.index] = req
+
+        class BoomLogits:
+            def __getitem__(self, key):
+                raise RuntimeError("device preempted")
+
+        step = Request(tag="decode-step")
+        with srv._lock:
+            srv._current_step = step
+            srv._decode_inflight = (BoomLogits(), "cache")
+        step.complete((BoomLogits(), srv.slots.cache))
+        srv._attach_step(step)
+        t0 = time.monotonic()
+        while not req.done_req.is_complete:
+            eng.progress()
+            assert time.monotonic() - t0 < 30
+        assert req.done_req.failed
+        assert "preempted" in str(req.done_req.exception)
+        assert len(srv.slots.free_slots()) == 4
+
+    def test_inline_continuation_policy_serves(self, rng):
+        cfg = reduce_cfg(get_config("qwen2-0.5b"),
+                         num_layers=2, d_model=32, d_ff=64, vocab_size=64)
+        params = registry.init_params(cfg, rng)
+        eng = ProgressEngine()
+        srv = ServeEngine(cfg, params, eng, batch_slots=2, max_seq=64,
+                          continuation_policy="inline")
+        reqs = [GenRequest(f"r{i}", np.array([1, 2], np.int32),
+                           max_new_tokens=3) for i in range(3)]
+        dones = [srv.submit(r) for r in reqs]
+        srv.run_until_idle(timeout=240)
+        assert all(d.is_complete for d in dones)
+        assert srv.continuations.deferred == 0     # inline: never queued
+        assert srv.continuations.executed == srv.steps
 
 
 class TestServeEngineOnExecutor:
@@ -159,14 +281,18 @@ class TestServeEngineOnExecutor:
         done_idx = eng.wait_some(dones, min_count=len(dones), timeout=240)
         assert len(done_idx) == 6
         srv.run_until_idle(timeout=60)
+        snap = stats.collect(eng, ex)      # before close frees the streams
         srv.close(timeout=60)
         ex.shutdown(drain=True, timeout=60)
         assert all(d.is_complete for d in dones)
         assert all(len(d.value()) == 4 for d in dones)
         assert len(srv.slots.free_slots()) == 4
-        snap = stats.collect(eng, ex)
         assert snap.stream("serve-admit").completions >= 1
         assert snap.stream("serve-decode").completions >= 1
+        # close handed the streams back to the engine
+        with eng._lock:
+            names = [s.name for s in eng._streams]
+        assert "serve-admit" not in names and "serve-decode" not in names
 
     def test_unstarted_executor_serves_inline(self, rng):
         """Forgetting executor.start() must degrade to inline progress,
