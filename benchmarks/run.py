@@ -2,39 +2,101 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   figs 7-12  progress-engine microbenchmarks (paper §4.2-§4.5)
-  fig 13     user-level allreduce vs native (paper §4.7; 8-device child)
+  fig 13/14  user-level (i)allreduce vs native (paper §4.7; 8-dev child)
   overlap    computation/communication overlap (paper §2.3 thesis)
   kernels    substrate formulation timings
 Roofline tables (the TPU-target performance report) are produced by the
 dry-run: ``python -m repro.launch.dryrun`` + EXPERIMENTS.md.
+
+``--json PATH`` (default ``BENCH_progress.json``) additionally writes a
+machine-readable summary — the CI uploads it as an artifact so the perf
+trajectory accumulates across commits.  ``--sections a,b`` filters.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import math
+import platform
+import subprocess
 import sys
+import time
 import traceback
 
 
-def main() -> None:
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001
+        return "unknown"
+
+
+def _parse_row(section: str, line: str) -> dict:
+    name, us, derived = (line.split(",", 2) + ["", ""])[:3]
+    try:
+        us_val = float(us)
+    except ValueError:
+        us_val = None
+    if us_val is not None and not math.isfinite(us_val):
+        us_val = None       # 'nan' failure rows must stay strict-JSON
+    return {"section": section, "name": name, "us_per_call": us_val,
+            "derived": derived}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_progress.json",
+                    help="write a JSON summary here ('' disables)")
+    ap.add_argument("--sections", default="",
+                    help="comma-separated filter, e.g. 'progress,allreduce'")
+    args = ap.parse_args(argv)
+
     from benchmarks import bench_progress, bench_user_allreduce, bench_overlap, \
         bench_kernels
 
     print("name,us_per_call,derived")
     sections = [
         ("progress (figs 7-12)", bench_progress.run),
-        ("user allreduce (fig 13)", bench_user_allreduce.run),
+        ("user allreduce (figs 13-14)", bench_user_allreduce.run),
         ("overlap", bench_overlap.run),
         ("kernels", bench_kernels.run),
     ]
-    failed = 0
+    if args.sections:
+        wanted = [w.strip() for w in args.sections.split(",") if w.strip()]
+        sections = [(n, f) for n, f in sections
+                    if any(w in n for w in wanted)]
+
+    records: list[dict] = []
+    failed: list[str] = []
+    t_start = time.time()
     for name, fn in sections:
         print(f"# --- {name} ---")
         try:
             for r in fn():
                 print(r, flush=True)
+                records.append(_parse_row(name, r))
         except Exception:  # noqa: BLE001
-            failed += 1
+            failed.append(name)
             print(f"# SECTION FAILED: {name}", flush=True)
             traceback.print_exc()
+
+    if args.json:
+        summary = {
+            "schema": "repro-bench-v1",
+            "git_rev": _git_rev(),
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "wall_s": round(time.time() - t_start, 3),
+            "failed_sections": failed,
+            "rows": records,
+        }
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2)
+        print(f"# wrote {args.json}: {len(records)} rows, "
+              f"{len(failed)} failed sections")
+
     if failed:
         sys.exit(1)
 

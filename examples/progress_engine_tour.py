@@ -181,6 +181,50 @@ def continuations_post_attach_drain():
           f"(fired {qi.executed} continuations, 0 polls by consumers)")
 
 
+def nonblocking_collectives():
+    """User-space collectives on the engine (paper §4.7): the schedules
+    of ``collectives/schedules.py`` compiled into chunk-pipelined,
+    continuation-chained round programs returning Request handles.
+
+        1. issue    — coll.iallreduce(x, mesh, axis, algorithm=, chunks=)
+                      returns a CollectiveRequest immediately (the rounds
+                      have only been *scheduled* on the collective stream)
+        2. overlap  — the application computes; any engine.progress /
+                      executor worker drives round r, whose completion
+                      continuation dispatches round r+1 per chunk
+        3. wait     — req.wait() (or engine.wait(req, stream=req.stream))
+                      drives the stream to completion; the result matches
+                      the native psum bit for bit
+
+    Runs on however many host devices this process has (1 is fine — the
+    schedule degenerates but the machinery is identical)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.collectives import nonblocking as NB
+
+    n = len(jax.devices())
+    mesh = compat.make_mesh((n,), ("x",))
+    eng = ProgressEngine()
+    coll = NB.UserCollectives(eng)
+    x = jnp.arange(n * 8, dtype=jnp.float32).reshape(n, 8)
+    native = jax.jit(compat.shard_map(lambda v: jax.lax.psum(v, "x"),
+                                      mesh=mesh, in_specs=P("x"),
+                                      out_specs=P("x")))(x)
+    req = coll.iallreduce(x, mesh, "x", algorithm="ring", chunks=2)
+    issued_complete = req.is_complete       # False: rounds still queued
+    out = req.wait(timeout=60)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(native),
+                               atol=1e-5)
+    coll.close()
+    print(f"nonblocking collectives: iallreduce({req.algorithm}, "
+          f"chunks={req.num_chunks}) complete_at_issue={issued_complete}, "
+          f"{req.rounds_done} rounds driven by the engine, matches psum")
+
+
 if __name__ == "__main__":
     eng = ProgressEngine()
     listing_1_1_collated_subsystems(eng)
@@ -191,4 +235,5 @@ if __name__ == "__main__":
     listing_1_7_generalized_request(eng)
     progress_workers()
     continuations_post_attach_drain()
+    nonblocking_collectives()
     print("tour OK")

@@ -1,0 +1,835 @@
+"""Nonblocking user-space collectives on the progress engine (paper §4.7).
+
+The paper's third demonstration: collective algorithms built *in user
+space* on the explicit progress engine rival native implementations.
+``schedules.py`` holds the algorithms as monolithic ``shard_map``
+programs — one XLA computation, invisible to the engine.  This module
+compiles the same algorithms into **chunk-pipelined schedules** driven
+by the engine, the way "Extending MPI with User-Level Schedules"
+(Schafer et al.) builds persistent collective schedules and the MPI
+Continuations work (Schuchart et al.) drives them to completion:
+
+* the payload is split into K chunks;
+* each algorithm is decomposed into per-round ``ppermute`` + combine
+  steps, each its own jitted ``shard_map`` program;
+* chunk c's round r+1 is chained off round r by a *continuation* on a
+  ``jax_future`` (round r's output arrays), so rounds fire exactly when
+  their inputs are device-ready — no wait loop, no blocking;
+* all round tasks live on one dedicated collective ``Stream``, so a
+  ``ProgressExecutor`` worker (or any ``engine.progress`` caller) can
+  drive many in-flight collectives while the application computes.
+
+``iallreduce`` / ``ireduce_scatter`` / ``iallgather`` / ``ialltoall``
+return ``CollectiveRequest`` handles (``Request`` subclass): issue
+returns immediately, completion is observed via ``is_complete`` /
+``engine.wait`` like every other request in the system, and a failing
+round fails the request instead of raising into the progress loop.
+
+Chunking layouts keep outputs bit-identical to the native op:
+
+* allreduce — elementwise, so chunks are contiguous last-dim slices
+  (payload zero-padded to a multiple of n·K for the ring family);
+* reduce-scatter — chunks interleave the per-rank blocks
+  (``[..., n, K, m]`` view) so per-chunk block r slots reassemble into
+  the native rank-r block;
+* all-gather — the inverse interleave on the output side;
+* all-to-all — acts on the leading block dim, so last-dim slices
+  concatenate transparently.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.collectives import schedules as S
+from repro.core.continuations import DEFERRED, INLINE, ContinuationQueue
+from repro.core.engine import ProgressEngine, Stream, global_engine
+from repro.core.futures import jax_future
+from repro.core.request import Request
+
+
+# ---------------------------------------------------------------------------
+# Shape helpers (module-level jitted: stable function objects => one
+# compile per distinct shape, not per call)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _pad_last_to(x, target: int):
+    pad = target - x.shape[-1]
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _slice_last(x, width: int):
+    if x.shape[-1] == width:
+        return x
+    return x[..., :width]
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _split_last(x, chunks: int, width: int):
+    """Contiguous last-dim split into ``chunks`` pieces of ``width``."""
+    return tuple(x[..., c * width:(c + 1) * width] for c in range(chunks))
+
+
+@jax.jit
+def _concat_last(parts):
+    if len(parts) == 1:
+        return parts[0]
+    return jnp.concatenate(parts, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _rs_split(x, n: int, chunks: int):
+    """Interleaved reduce-scatter split: chunk c gets piece c of every
+    rank block, so chunked RS outputs reassemble into the native rank
+    block.  x: [..., D] with D divisible by n*chunks."""
+    m = x.shape[-1] // (n * chunks)
+    v = x.reshape(x.shape[:-1] + (n, chunks, m))
+    return tuple(v[..., :, c, :].reshape(x.shape[:-1] + (n * m,))
+                 for c in range(chunks))
+
+
+@jax.jit
+def _rs_join(parts):
+    """Per-chunk RS outputs [..., m] -> native rank block [..., K*m]."""
+    if len(parts) == 1:
+        return parts[0]
+    return jnp.stack(parts, axis=-2).reshape(
+        parts[0].shape[:-1] + (len(parts) * parts[0].shape[-1],))
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _ag_join(parts, n: int):
+    """Per-chunk AG outputs [..., n*m] -> native [..., n*d]: the rank-r
+    segment of the full output is the concat of every chunk's rank-r
+    segment."""
+    if len(parts) == 1:
+        return parts[0]
+    blocks = [p.reshape(p.shape[:-1] + (n, p.shape[-1] // n)) for p in parts]
+    stacked = jnp.stack(blocks, axis=-2)          # [..., n, K, m]
+    return stacked.reshape(parts[0].shape[:-1]
+                           + (n * len(parts) * blocks[0].shape[-1],))
+
+
+# ---------------------------------------------------------------------------
+# Round-decomposed schedules
+# ---------------------------------------------------------------------------
+
+def _take_block(chunks, pos):
+    """chunks [..., n, m], traced pos -> [..., m] via dynamic_slice.
+
+    Unlike the one-hot select in ``schedules._take_chunk`` this reads
+    only the m-wide block — in a per-round program the one-hot form
+    costs a full-payload pass *every round*, turning the ring's 2·W
+    total traffic into (2n-1)·W."""
+    start = [jnp.zeros((), jnp.int32)] * chunks.ndim
+    start[-2] = pos
+    sizes = chunks.shape[:-2] + (1,) + chunks.shape[-1:]
+    return jax.lax.dynamic_slice(chunks, start, sizes).squeeze(-2)
+
+
+def _put_block(out, cur, pos):
+    """out [..., n, m] <- cur [..., m] at block pos (dynamic_update_slice:
+    with the carry donated this is an in-place m-wide write)."""
+    start = [jnp.zeros((), jnp.int32)] * out.ndim
+    start[-2] = pos
+    return jax.lax.dynamic_update_slice(out, cur[..., None, :], start)
+
+class _Schedule:
+    """One chunk's compiled pipeline: optional init, per-round step
+    functions, optional finish — every entry a jitted shard_map program
+    carrying a pytree of arrays sharded on the leading dim."""
+
+    __slots__ = ("stages",)
+
+    def __init__(self, init, rounds, finish):
+        stages = []
+        if init is not None:
+            stages.append(init)
+        stages.extend(rounds)
+        if finish is not None:
+            stages.append(finish)
+        self.stages = tuple(stages)
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.stages)
+
+
+def _jit_smap(fn, mesh, axis, *, donate: bool = True):
+    # donate the carry: stage inputs past the first are intermediate
+    # buffers the pipeline owns (the previous round's outputs), so XLA
+    # aliases the through-flowing arrays instead of copying the full
+    # payload once per round.  The FIRST stage of a schedule never
+    # donates: when padding/splitting is a no-op, jit may forward the
+    # caller's buffer straight through, and donating it would delete the
+    # user's input array.
+    return jax.jit(compat.shard_map(fn, mesh=mesh, in_specs=P(axis),
+                                    out_specs=P(axis)),
+                   donate_argnums=(0,) if donate else ())
+
+
+# cache: (kind, algorithm-ish key, mesh, axis, n, extras) -> _Schedule.
+# jit itself caches per payload shape; this cache keeps the *function
+# objects* stable so re-issuing a collective never re-traces.
+_schedule_cache: dict = {}
+
+
+def _cached(key, build):
+    sched = _schedule_cache.get(key)
+    if sched is None:
+        sched = build()
+        _schedule_cache[key] = sched
+    return sched
+
+
+def _identity_schedule(mesh, axis):
+    return _cached(("identity", mesh, axis),
+                   lambda: _Schedule(None, (), None))
+
+
+def _recursive_doubling_schedule(mesh, axis, n):
+    def build():
+        rounds = []
+        mask = 1
+        while mask < n:
+            perm = [(i, i ^ mask) for i in range(n)]
+
+            def step(v, perm=perm):
+                return v + jax.lax.ppermute(v, axis, perm)
+
+            rounds.append(_jit_smap(step, mesh, axis, donate=mask > 1))
+            mask <<= 1
+        return _Schedule(None, tuple(rounds), None)
+
+    return _cached(("rd", mesh, axis, n), build)
+
+
+def _ring_rs_init(mesh, axis, n, d):
+    """carry = (chunks [..., n, W/n], acc [..., W/n]) with acc = own
+    starting chunk (rank r starts from chunk (r - d) mod n)."""
+    def init(x):
+        idx = S._axis_index(axis)
+        w = x.shape[-1]
+        chunks = jnp.reshape(x, x.shape[:-1] + (n, w // n))
+        acc = _take_block(chunks, (idx - d) % n)
+        return chunks, acc
+
+    return _jit_smap(init, mesh, axis, donate=False)
+
+
+def _ring_rs_round(mesh, axis, n, d, step):
+    perm = [(i, (i + d) % n) for i in range(n)]
+
+    def rnd(carry):
+        chunks, acc = carry
+        idx = S._axis_index(axis)
+        acc = jax.lax.ppermute(acc, axis, perm)
+        acc = acc + _take_block(chunks, (idx - d * (1 + step)) % n)
+        return chunks, acc
+
+    return _jit_smap(rnd, mesh, axis)
+
+
+def _ring_ag_start(mesh, axis, n):
+    """AG step 0: place the (fully reduced) resident chunk at slot idx."""
+    def start(carry):
+        _, acc = carry
+        idx = S._axis_index(axis)
+        out = jnp.zeros(acc.shape[:-1] + (n, acc.shape[-1]), acc.dtype)
+        out = _put_block(out, acc, idx)
+        return out, acc
+
+    return _jit_smap(start, mesh, axis)
+
+
+def _ring_ag_round(mesh, axis, n, d, step):
+    perm = [(i, (i + d) % n) for i in range(n)]
+
+    def rnd(carry):
+        out, cur = carry
+        idx = S._axis_index(axis)
+        cur = jax.lax.ppermute(cur, axis, perm)
+        pos = (idx - d * step) % n
+        out = _put_block(out, cur, pos)
+        return out, cur
+
+    return _jit_smap(rnd, mesh, axis)
+
+
+def _ring_finish(mesh, axis):
+    def finish(carry):
+        out, _ = carry
+        return jnp.reshape(out, out.shape[:-2] + (out.shape[-2] * out.shape[-1],))
+
+    return _jit_smap(finish, mesh, axis)
+
+
+def _ring_allreduce_schedule(mesh, axis, n, reverse):
+    """2n-1 rounds: n-1 reduce-scatter, 1 AG placement, n-1 all-gather."""
+    def build():
+        d = -1 if reverse else 1
+        rounds = [_ring_rs_round(mesh, axis, n, d, s) for s in range(1, n)]
+        rounds.append(_ring_ag_start(mesh, axis, n))
+        rounds.extend(_ring_ag_round(mesh, axis, n, d, s) for s in range(1, n))
+        return _Schedule(_ring_rs_init(mesh, axis, n, d), tuple(rounds),
+                         _ring_finish(mesh, axis))
+
+    return _cached(("ring", mesh, axis, n, reverse), build)
+
+
+def _halving_doubling_schedule(mesh, axis, n):
+    def build():
+        rounds = []
+        first = True
+        mask = n >> 1
+        while mask >= 1:                      # reduce-scatter by halving
+            perm = [(i, i ^ mask) for i in range(n)]
+
+            def halve(cur, perm=perm, mask=mask):
+                idx = S._axis_index(axis)
+                width = cur.shape[-1] // 2
+                lo, hi = cur[..., :width], cur[..., width:]
+                keep_hi = ((idx // mask) % 2) == 1
+                send = jnp.where(keep_hi, lo, hi)
+                recv = jax.lax.ppermute(send, axis, perm)
+                mine = jnp.where(keep_hi, hi, lo)
+                return mine + recv
+
+            rounds.append(_jit_smap(halve, mesh, axis, donate=not first))
+            first = False
+            mask >>= 1
+        mask = 1
+        while mask < n:                       # all-gather by doubling
+            perm = [(i, i ^ mask) for i in range(n)]
+
+            def double(cur, perm=perm, mask=mask):
+                idx = S._axis_index(axis)
+                recv = jax.lax.ppermute(cur, axis, perm)
+                keep_hi = ((idx // mask) % 2) == 1
+                lo = jnp.where(keep_hi, recv, cur)
+                hi = jnp.where(keep_hi, cur, recv)
+                return jnp.concatenate([lo, hi], axis=-1)
+
+            rounds.append(_jit_smap(double, mesh, axis))
+            mask <<= 1
+        return _Schedule(None, tuple(rounds), None)
+
+    return _cached(("hd", mesh, axis, n), build)
+
+
+def _ring_reduce_scatter_schedule(mesh, axis, n):
+    def build():
+        rounds = [_ring_rs_round(mesh, axis, n, 1, s) for s in range(1, n)]
+
+        def finish(carry):
+            return carry[1]
+
+        return _Schedule(_ring_rs_init(mesh, axis, n, 1), tuple(rounds),
+                         _jit_smap(finish, mesh, axis))
+
+    return _cached(("rs", mesh, axis, n), build)
+
+
+def _ring_all_gather_schedule(mesh, axis, n):
+    def build():
+        def init(x):
+            idx = S._axis_index(axis)
+            out = jnp.zeros(x.shape[:-1] + (n, x.shape[-1]), x.dtype)
+            return _put_block(out, x, idx), x
+
+        rounds = [_ring_ag_round(mesh, axis, n, 1, s) for s in range(1, n)]
+        return _Schedule(_jit_smap(init, mesh, axis, donate=False),
+                         tuple(rounds),
+                         _ring_finish(mesh, axis))
+
+    return _cached(("ag", mesh, axis, n), build)
+
+
+def _bruck_alltoall_schedule(mesh, axis, n):
+    def build():
+        def init(x):
+            idx = S._axis_index(axis)
+            return jnp.take(x, (jnp.arange(n) + idx) % n, axis=0)
+
+        rounds = []
+        step = 1
+        while step < n:
+            perm = [(i, (i + step) % n) for i in range(n)]
+            move = [(k // step) % 2 == 1 for k in range(n)]
+
+            def rnd(x, perm=perm, move=tuple(move)):
+                moved = jax.lax.ppermute(x, axis, perm)
+                sel = jnp.asarray(move).reshape((n,) + (1,) * (x.ndim - 1))
+                return jnp.where(sel, moved, x)
+
+            rounds.append(_jit_smap(rnd, mesh, axis))
+            step <<= 1
+
+        def finish(x):
+            idx = S._axis_index(axis)
+            return jnp.take(x, (idx - jnp.arange(n)) % n, axis=0)
+
+        return _Schedule(_jit_smap(init, mesh, axis, donate=False),
+                         tuple(rounds), _jit_smap(finish, mesh, axis))
+
+    return _cached(("bruck", mesh, axis, n), build)
+
+
+# ---------------------------------------------------------------------------
+# The request handle
+# ---------------------------------------------------------------------------
+
+class CollectiveRequest(Request):
+    """Handle for an in-flight user-space collective.
+
+    Carries the collective stream so ``wait()`` (and ``engine.wait``
+    callers who pass ``req.stream``) progress the right serial context;
+    ``rounds_done``/``rounds_total`` expose pipeline position for stats
+    and tests."""
+
+    __slots__ = ("engine", "stream", "queue", "op", "algorithm",
+                 "num_chunks", "rounds_total", "rounds_done", "_fail_lock")
+
+    def __init__(self, engine: ProgressEngine, stream: Stream, queue,
+                 op: str, algorithm: str, num_chunks: int,
+                 rounds_total: int):
+        super().__init__(tag=f"i{op}")
+        self.engine = engine
+        self.stream = stream
+        self.queue = queue
+        self.op = op
+        self.algorithm = algorithm
+        self.num_chunks = num_chunks
+        self.rounds_total = rounds_total
+        self.rounds_done = 0
+        self._fail_lock = threading.Lock()
+
+    def wait(self, engine=None, stream=None, timeout: float | None = None):
+        """MPI_Wait: drive the collective's stream until complete.
+
+        A DEFERRED queue needs its ready list drained by an owner; when
+        no executor worker does that, the waiter must — otherwise the
+        round chain stalls forever with everything 'ready'."""
+        eng = engine if engine is not None else self.engine
+        s = stream if stream is not None else self.stream
+        q = self.queue
+        if q is not None and q.policy == DEFERRED:
+            import time
+            t0 = time.monotonic()
+            while not self.is_complete:
+                eng._advance(s)
+                q.drain()
+                if timeout is not None and time.monotonic() - t0 > timeout:
+                    raise TimeoutError(f"wait timed out after {timeout}s")
+            return self.value()
+        return eng.wait(self, stream=s, timeout=timeout)
+
+    def __repr__(self):
+        return (f"CollectiveRequest({self.op}/{self.algorithm}, "
+                f"chunks={self.num_chunks}, "
+                f"rounds={self.rounds_done}/{self.rounds_total}, "
+                f"complete={self.is_complete})")
+
+
+# ---------------------------------------------------------------------------
+# The chunk pipeline driver
+# ---------------------------------------------------------------------------
+
+class _ChunkPipeline:
+    """Drives K chunks through their round schedules via continuations.
+
+    Every stage dispatch happens inside a continuation callback (or at
+    issue time for round 0): run stage r, register a ``jax_future`` for
+    its outputs on the collective stream, attach the next continuation.
+    A stage that raises — or a future that fails — fails the collective
+    request exactly once; remaining chunks are abandoned (their pending
+    futures complete harmlessly)."""
+
+    def __init__(self, ctx: "UserCollectives", req: CollectiveRequest,
+                 schedules, payloads, join: Callable[[list], Any]):
+        self.ctx = ctx
+        self.req = req
+        self.schedules = schedules
+        self.join = join
+        self._lock = threading.Lock()
+        self._results: list = [None] * len(payloads)
+        self._remaining = len(payloads)
+        for c, payload in enumerate(payloads):
+            self._advance(c, 0, payload)
+
+    def _advance(self, c: int, r: int, value) -> None:
+        if self.req.is_complete:
+            return                    # another chunk failed: abandon
+        stages = self.schedules[c].stages
+        if r >= len(stages):
+            # degenerate schedule (n == 1): completion still flows
+            # through one future so issue never completes synchronously
+            fut = jax_future(self.ctx.engine, value, self.ctx.stream)
+            self.ctx.queue.attach(
+                fut, lambda rq, c=c: self._chunk_done(c, rq.value()),
+                on_error=self._on_error)
+            return
+        try:
+            out = stages[r](value)
+        except BaseException as exc:  # noqa: BLE001
+            self._fail(exc)
+            return
+        self.req.rounds_done += 1
+        fut = jax_future(self.ctx.engine, out, self.ctx.stream)
+        if r + 1 < len(stages):
+            cb = lambda rq, c=c, r=r: self._advance(c, r + 1, rq.value())  # noqa: E731
+        else:
+            cb = lambda rq, c=c: self._chunk_done(c, rq.value())  # noqa: E731
+        self.ctx.queue.attach(fut, cb, on_error=self._on_error)
+
+    def _fail(self, exc: BaseException) -> None:
+        """Fail the request exactly once; the failure counter moves with
+        the request, not with every chunk that observes the failure."""
+        with self.req._fail_lock:
+            if self.req.is_complete:
+                return
+            self.req.fail(exc)
+        self.ctx.failed += 1
+
+    def _on_error(self, rq) -> None:
+        self._fail(rq.exception or RuntimeError("collective round failed"))
+
+    def _chunk_done(self, c: int, value) -> None:
+        with self._lock:
+            self._results[c] = value
+            self._remaining -= 1
+            done = self._remaining == 0
+        if not done or self.req.is_complete:
+            return
+        try:
+            result = self.join(self._results)
+        except BaseException as exc:  # noqa: BLE001
+            self._fail(exc)
+            return
+        with self.req._fail_lock:
+            if not self.req.is_complete:
+                self.req.complete(result)
+        self.ctx.completed += 1
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def _axis_len(mesh, axis: str) -> int:
+    return dict(mesh.shape)[axis]
+
+
+def _largest_divisor_leq(total: int, k: int) -> int:
+    k = max(1, min(k, total))
+    while total % k:
+        k -= 1
+    return k
+
+
+def _check_payload(x, op: str) -> None:
+    """All four collectives shard the leading dim and chunk/schedule over
+    the last — a 1-D payload would chunk the sharded dim itself and die
+    deep inside a round program; reject it eagerly instead."""
+    if len(x.shape) < 2:
+        raise ValueError(
+            f"i{op}: payload must be at least 2-D ([sharded_dim, ..., "
+            f"payload_dim]), got shape {tuple(x.shape)}; reshape(-1, 1) "
+            f"scalars-per-rank or add a trailing payload dim")
+
+
+class UserCollectives:
+    """Issue context for nonblocking user-space collectives.
+
+    Owns one dedicated collective ``Stream`` (created on the engine, or
+    adopted by a ``ProgressExecutor`` when given) and one
+    ``ContinuationQueue`` that chains the per-round dispatches.  INLINE
+    policy (default) runs the chaining on whichever thread progresses
+    the stream — a background worker, or the waiting thread itself;
+    DEFERRED routes it through the queue's ready list (adopt the queue
+    on an executor so its workers drain it between polls).
+    """
+
+    _ids = itertools.count()
+
+    def __init__(self, engine: Optional[ProgressEngine] = None, *,
+                 executor=None, stream: Optional[Stream] = None,
+                 policy: str = INLINE, name: str = ""):
+        self.engine = engine if engine is not None else global_engine()
+        self.executor = executor
+        self.name = name or f"usercoll{next(UserCollectives._ids)}"
+        self._own_stream = stream is None
+        if stream is None:
+            if executor is not None:
+                stream = executor.stream(f"{self.name}-stream")
+            else:
+                stream = self.engine.stream(f"{self.name}-stream")
+        self.stream = stream
+        self.queue = ContinuationQueue(self.engine, self.stream,
+                                       policy=policy, name=f"{self.name}-q")
+        self._adopted_queue = False
+        if executor is not None and policy == DEFERRED:
+            executor.adopt_queue(self.queue)
+            self._adopted_queue = True
+        self.issued = 0
+        self.completed = 0
+        self.failed = 0
+        self._closed = False
+
+    # -- the collectives ---------------------------------------------------
+    def iallreduce(self, x, mesh, axis: str, *, algorithm: str = "ring",
+                   chunks: int = 1) -> CollectiveRequest:
+        """Nonblocking allreduce of ``x`` (leading dim sharded on
+        ``axis``), bit-identical to ``psum`` under the same shard_map
+        layout.  ``algorithm`` is any ``schedules.ALGORITHMS`` key;
+        power-of-two-only algorithms fall back to ring with a warning on
+        other axis sizes (eager — nothing raises from inside jit)."""
+        self._check_open()
+        _check_payload(x, "allreduce")
+        n = _axis_len(mesh, axis)
+        algorithm = S.resolve_algorithm(algorithm, n)
+        chunks = max(1, int(chunks))
+        D = x.shape[-1]
+        if n == 1:
+            scheds = [_identity_schedule(mesh, axis)]
+            payloads = [x]
+            join = _concat_last
+        elif algorithm == "recursive_doubling":
+            # no divisibility constraint: contiguous near-equal slices
+            widths = [len(r) for r in _split_ranges(D, min(chunks, D))]
+            payloads = _contiguous_chunks(x, widths)
+            scheds = [_recursive_doubling_schedule(mesh, axis, n)] * len(payloads)
+            join = _concat_last
+        else:
+            # ring family (+ halving/doubling): pad to a multiple of n*K
+            # so every chunk splits evenly into per-rank blocks
+            per = -(-D // (n * chunks)) * n          # chunk width
+            xp = _pad_last_to(x, per * chunks)
+            payloads = list(_split_last(xp, chunks, per))
+            if algorithm == "bidir":
+                # both ICI directions at once: alternate ring direction
+                # per chunk (chunks=1 degenerates to a forward ring)
+                scheds = [_ring_allreduce_schedule(mesh, axis, n, bool(c % 2))
+                          for c in range(chunks)]
+            elif algorithm == "halving_doubling":
+                scheds = [_halving_doubling_schedule(mesh, axis, n)] * chunks
+            else:
+                scheds = [_ring_allreduce_schedule(mesh, axis, n, False)] * chunks
+            join = lambda parts: _slice_last(_concat_last(tuple(parts)), D)  # noqa: E731
+        return self._issue("allreduce", algorithm, scheds, payloads, join)
+
+    def ireduce_scatter(self, x, mesh, axis: str, *,
+                        chunks: int = 1) -> CollectiveRequest:
+        """Nonblocking ring reduce-scatter (matches tiled
+        ``psum_scatter`` on the last dim).  Requires the last dim
+        divisible by the axis size (validated eagerly)."""
+        self._check_open()
+        _check_payload(x, "reduce_scatter")
+        n = _axis_len(mesh, axis)
+        D = x.shape[-1]
+        if D % n:
+            raise ValueError(
+                f"ireduce_scatter: last dim {D} not divisible by "
+                f"axis size {n}")
+        if n == 1:
+            return self._issue("reduce_scatter", "ring",
+                               [_identity_schedule(mesh, axis)], [x],
+                               _concat_last)
+        k = _largest_divisor_leq(D // n, max(1, int(chunks)))
+        payloads = list(_rs_split(x, n, k))
+        scheds = [_ring_reduce_scatter_schedule(mesh, axis, n)] * k
+        return self._issue("reduce_scatter", "ring", scheds, payloads,
+                           lambda parts: _rs_join(tuple(parts)))
+
+    def iallgather(self, x, mesh, axis: str, *,
+                   chunks: int = 1) -> CollectiveRequest:
+        """Nonblocking ring all-gather (matches tiled ``all_gather`` on
+        the last dim)."""
+        self._check_open()
+        _check_payload(x, "allgather")
+        n = _axis_len(mesh, axis)
+        if n == 1:
+            return self._issue("allgather", "ring",
+                               [_identity_schedule(mesh, axis)], [x],
+                               _concat_last)
+        d = x.shape[-1]
+        k = _largest_divisor_leq(d, max(1, int(chunks)))
+        payloads = list(_split_last(x, k, d // k))
+        scheds = [_ring_all_gather_schedule(mesh, axis, n)] * k
+        return self._issue("allgather", "ring", scheds, payloads,
+                           lambda parts: _ag_join(tuple(parts), n))
+
+    def ialltoall(self, x, mesh, axis: str, *,
+                  chunks: int = 1) -> CollectiveRequest:
+        """Nonblocking Bruck all-to-all over the leading block dim
+        (matches ``bruck_alltoall`` / native ``all_to_all``).  The
+        global leading dim must be n·n blocks (n per device)."""
+        self._check_open()
+        _check_payload(x, "alltoall")
+        n = _axis_len(mesh, axis)
+        lead = x.shape[0]
+        if lead % n:
+            raise ValueError(
+                f"ialltoall: leading dim {lead} not divisible by "
+                f"axis size {n}")
+        if n == 1:
+            return self._issue("alltoall", "bruck",
+                               [_identity_schedule(mesh, axis)], [x],
+                               _concat_last)
+        D = x.shape[-1]
+        widths = [len(r) for r in _split_ranges(D, min(max(1, int(chunks)), D))]
+        payloads = _contiguous_chunks(x, widths)
+        scheds = [_bruck_alltoall_schedule(mesh, axis, n)] * len(payloads)
+        return self._issue("alltoall", "bruck", scheds, payloads, _concat_last)
+
+    # -- machinery ---------------------------------------------------------
+    def _issue(self, op, algorithm, scheds, payloads, join) -> CollectiveRequest:
+        req = CollectiveRequest(self.engine, self.stream, self.queue, op,
+                                algorithm, len(payloads),
+                                sum(s.num_rounds for s in scheds))
+        self.issued += 1
+        _ChunkPipeline(self, req, scheds, payloads, join)
+        return req
+
+    def _check_open(self):
+        if self._closed:
+            raise RuntimeError(f"UserCollectives {self.name!r} is closed")
+
+    # -- lifecycle ---------------------------------------------------------
+    @property
+    def in_flight(self) -> int:
+        return self.issued - self.completed - self.failed
+
+    def close(self, *, drain: bool = True, timeout: float | None = 30.0) -> None:
+        """Drain in-flight collectives, then release the stream/queue.
+        With ``drain=False`` (the abandon path — e.g. unwinding an
+        exception) pending continuations are cancelled and a still-busy
+        stream is left registered on the engine rather than freed, so
+        close never raises over the application's original error.
+        Safe to call twice."""
+        if self._closed:
+            return
+        self._closed = True          # block new issues during the drain
+        if drain:
+            import time
+            t0 = time.monotonic()
+            ex = self.executor
+            while self.stream.pending or self.queue.ready:
+                if ex is not None and ex.running and ex.owns(self.stream):
+                    time.sleep(50e-6)
+                else:
+                    self.engine.progress(self.stream)
+                    self.queue.drain()
+                if timeout is not None and time.monotonic() - t0 > timeout:
+                    # reopen so a retry close() actually drains/releases
+                    # instead of no-opping with the stream/queue leaked
+                    self._closed = False
+                    raise TimeoutError(
+                        f"UserCollectives.close: {self.stream.pending} tasks "
+                        f"/ {self.queue.ready} continuations still pending")
+        if self._adopted_queue:
+            self.executor.release_queue(self.queue)
+        # abandon path: running ready continuations would dispatch further
+        # rounds onto a stream nobody will progress — cancel them instead
+        self.queue.close(run_ready=drain)
+        if self._own_stream:
+            if self.executor is not None and self.executor.owns(self.stream):
+                self.executor.release(self.stream)
+            if not self.stream.pending:
+                self.engine.free_stream(self.stream)
+            # else: abandoned in-flight tasks retire on future progress
+            # sweeps (progress_all/finalize); the stream stays registered
+
+    def __enter__(self) -> "UserCollectives":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close(drain=exc_type is None)
+
+    def __repr__(self):
+        return (f"UserCollectives({self.name!r}, issued={self.issued}, "
+                f"completed={self.completed}, failed={self.failed})")
+
+
+def _split_ranges(total: int, k: int):
+    base, extra = divmod(total, k)
+    ranges, off = [], 0
+    for i in range(k):
+        w = base + (1 if i < extra else 0)
+        ranges.append(range(off, off + w))
+        off += w
+    return [r for r in ranges if len(r)]
+
+
+def _contiguous_chunks(x, widths):
+    parts, off = [], 0
+    for w in widths:
+        parts.append(_chunk_at(x, off, w))
+        off += w
+    return parts
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _chunk_at(x, off: int, width: int):
+    return x[..., off:off + width]
+
+
+# -- module-level convenience (one default context per engine) --------------
+
+def default_collectives(engine: Optional[ProgressEngine] = None,
+                        **kwargs) -> UserCollectives:
+    eng = engine if engine is not None else global_engine()
+    ctx = getattr(eng, "_user_collectives", None)
+    if ctx is None or ctx._closed:
+        ctx = UserCollectives(eng, **kwargs)
+        eng._user_collectives = ctx
+        return ctx
+    # cache hit: refuse to hand back a context configured differently
+    # from what the caller asked for (e.g. INLINE when DEFERRED+executor
+    # was requested) — silent policy mismatches are undebuggable
+    if (("policy" in kwargs and kwargs["policy"] != ctx.queue.policy)
+            or ("executor" in kwargs
+                and kwargs["executor"] is not ctx.executor)
+            or ("stream" in kwargs and kwargs["stream"] is not ctx.stream)):
+        raise ValueError(
+            f"engine already has a default UserCollectives "
+            f"({ctx.name!r}: policy={ctx.queue.policy}, "
+            f"executor={ctx.executor}) configured differently; close it "
+            f"first or construct a UserCollectives explicitly")
+    return ctx
+
+
+def iallreduce(x, mesh, axis: str, *, engine: Optional[ProgressEngine] = None,
+               algorithm: str = "ring", chunks: int = 1) -> CollectiveRequest:
+    return default_collectives(engine).iallreduce(
+        x, mesh, axis, algorithm=algorithm, chunks=chunks)
+
+
+def ireduce_scatter(x, mesh, axis: str, *,
+                    engine: Optional[ProgressEngine] = None,
+                    chunks: int = 1) -> CollectiveRequest:
+    return default_collectives(engine).ireduce_scatter(x, mesh, axis,
+                                                       chunks=chunks)
+
+
+def iallgather(x, mesh, axis: str, *,
+               engine: Optional[ProgressEngine] = None,
+               chunks: int = 1) -> CollectiveRequest:
+    return default_collectives(engine).iallgather(x, mesh, axis, chunks=chunks)
+
+
+def ialltoall(x, mesh, axis: str, *,
+              engine: Optional[ProgressEngine] = None,
+              chunks: int = 1) -> CollectiveRequest:
+    return default_collectives(engine).ialltoall(x, mesh, axis, chunks=chunks)

@@ -18,6 +18,7 @@ compute of piece i:
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
 from typing import Callable
 
@@ -113,6 +114,131 @@ def microbatched_grad_fn(loss_fn: Callable, num_microbatches: int,
         return loss, grads
 
     return grad_fn
+
+
+# ---------------------------------------------------------------------------
+# Engine-driven bucketed gradient reduction (paper §4.7 at the host level)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _flatten_bucket(leaves, n: int):
+    """Stacked per-device leaves [n, *shape] -> one [n, bucket] payload."""
+    return jnp.concatenate([g.reshape(n, -1) for g in leaves], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def _unflatten_bucket(flat, shapes: tuple, scale: float, n: int):
+    """Reduced [n, bucket] payload (every row = the cross-device sum)
+    back into reduced leaves [*shape] (row 0, optionally scaled)."""
+    out, off = [], 0
+    for shape in shapes:
+        size = 1
+        for s in shape:
+            size *= s
+        leaf = flat[0, off:off + size].reshape(shape)
+        out.append(leaf * scale if scale != 1.0 else leaf)
+        off += size
+    return out
+
+
+class TreeReduction:
+    """Handle for an in-flight engine-driven gradient reduction: one
+    nonblocking collective request per bucket plus the reassembly plan."""
+
+    def __init__(self, reducer: "EngineGradReducer", requests, buckets,
+                 shapes, dtypes, treedef, num_leaves: int):
+        self.reducer = reducer
+        self.requests = requests
+        self._buckets = buckets
+        self._shapes = shapes
+        self._dtypes = dtypes
+        self._treedef = treedef
+        self._num_leaves = num_leaves
+
+    @property
+    def is_complete(self) -> bool:
+        return all(r.is_complete for r in self.requests)
+
+    def wait(self, timeout: float | None = None):
+        """Drive the engine until every bucket reduced; returns the
+        reduced gradient pytree (leaves deduplicated back to one copy)."""
+        coll = self.reducer.coll
+        coll.engine.wait_all(self.requests, stream=coll.stream,
+                             timeout=timeout)
+        n = self.reducer.axis_size
+        scale = (1.0 / n) if self.reducer.mean else 1.0
+        red = [None] * self._num_leaves
+        for req, bucket in zip(self.requests, self._buckets):
+            shapes = tuple(self._shapes[i] for i in bucket)
+            leaves = _unflatten_bucket(req.value(), shapes, scale, n)
+            for i, leaf in zip(bucket, leaves):
+                red[i] = leaf.astype(self._dtypes[i])
+        return jax.tree.unflatten(self._treedef, red)
+
+
+class EngineGradReducer:
+    """DDP-style bucketed gradient allreduce driven by the progress
+    engine (the 'engine mode' of :func:`allreduce_tree`).
+
+    Input gradients are *stacked per-device* trees — each leaf
+    ``[axis_size, *shape]`` sharded on the leading dim (the output of a
+    ``shard_map``-local grad step: device i's local gradient in row i).
+    ``iallreduce_tree`` flattens leaves into ~``bucket_bytes`` buckets
+    and issues one chunk-pipelined nonblocking :func:`iallreduce` per
+    bucket, so the reductions progress on the collective stream while
+    the caller keeps computing (backward of the next microbatch, the
+    optimizer of the previous step, prefetch fills...).  ``mean=True``
+    scales by 1/axis_size on reassembly — the data-parallel gradient
+    mean."""
+
+    def __init__(self, mesh, axis: str, *, engine=None, collectives=None,
+                 algorithm: str = "ring", chunks: int = 4,
+                 bucket_bytes: int = 1 << 25, mean: bool = True,
+                 executor=None):
+        from repro.collectives import nonblocking as NB
+        self.mesh = mesh
+        self.axis = axis
+        self.axis_size = dict(mesh.shape)[axis]
+        self.algorithm = S.resolve_algorithm(algorithm, self.axis_size)
+        self.chunks = chunks
+        self.bucket_bytes = bucket_bytes
+        self.mean = mean
+        self._own_coll = collectives is None
+        self.coll = collectives if collectives is not None else \
+            NB.UserCollectives(engine, executor=executor, name="gradreduce")
+
+    def iallreduce_tree(self, stacked_grads) -> TreeReduction:
+        """Issue the bucketed reduction; returns immediately."""
+        leaves, treedef = jax.tree.flatten(stacked_grads)
+        n = self.axis_size
+        shapes = [tuple(g.shape[1:]) for g in leaves]
+        dtypes = [g.dtype for g in leaves]
+        buckets, cur, cur_bytes = [], [], 0
+        for i, g in enumerate(leaves):
+            per_device = (g.size // max(1, g.shape[0])) * g.dtype.itemsize
+            cur.append(i)
+            cur_bytes += per_device
+            if cur_bytes >= self.bucket_bytes:
+                buckets.append(cur)
+                cur, cur_bytes = [], 0
+        if cur:
+            buckets.append(cur)
+        requests = []
+        for bucket in buckets:
+            flat = _flatten_bucket(tuple(leaves[i] for i in bucket), n)
+            requests.append(self.coll.iallreduce(
+                flat, self.mesh, self.axis, algorithm=self.algorithm,
+                chunks=self.chunks))
+        return TreeReduction(self, requests, buckets, shapes, dtypes,
+                             treedef, len(leaves))
+
+    def allreduce_tree(self, stacked_grads, timeout: float | None = None):
+        """Blocking convenience: issue + engine-driven wait."""
+        return self.iallreduce_tree(stacked_grads).wait(timeout=timeout)
+
+    def close(self) -> None:
+        if self._own_coll:
+            self.coll.close()
 
 
 # ---------------------------------------------------------------------------

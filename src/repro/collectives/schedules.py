@@ -237,11 +237,38 @@ ALGORITHMS = {
     "halving_doubling": recursive_halving_doubling_allreduce,
 }
 
+# algorithms whose XOR-partner exchange only works for power-of-two sizes
+POW2_ONLY = frozenset({"recursive_doubling", "halving_doubling"})
+
+
+def resolve_algorithm(algorithm: str, axis_size: int, *,
+                      fallback: str = "ring") -> str:
+    """Eager validation of (algorithm, axis size) — call *before* tracing.
+
+    Unknown names raise immediately; power-of-two-only algorithms on a
+    non-power-of-two axis fall back to ``fallback`` with a clear warning
+    instead of raising an opaque ``ValueError`` from inside jit."""
+    if algorithm not in ALGORITHMS:
+        raise ValueError(f"unknown allreduce algorithm {algorithm!r}; "
+                         f"options: {sorted(ALGORITHMS)}")
+    if algorithm in POW2_ONLY and axis_size & (axis_size - 1):
+        import warnings
+        warnings.warn(
+            f"{algorithm} allreduce requires a power-of-two axis size, "
+            f"got {axis_size}; falling back to {fallback!r}",
+            RuntimeWarning, stacklevel=3)
+        return fallback
+    return algorithm
+
 
 def allreduce_under_shard_map(x, mesh, axis: str, algorithm: str = "ring"):
     """Allreduce `x` (sharded on `axis`'s data dim) with a user schedule;
     output is the allreduced value, still sharded the same way — directly
-    comparable to ``jax.lax.psum`` in tests and the Fig-13 benchmark."""
+    comparable to ``jax.lax.psum`` in tests and the Fig-13 benchmark.
+
+    The (algorithm, axis size) pair is validated eagerly: power-of-two-
+    only algorithms fall back to ring with a warning on other sizes."""
+    algorithm = resolve_algorithm(algorithm, dict(mesh.shape)[axis])
     fn = ALGORITHMS[algorithm]
 
     def body(xs):

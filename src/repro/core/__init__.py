@@ -11,6 +11,7 @@ from repro.core.engine import (
     reset_global_engine,
 )
 from repro.core.request import (
+    CancelledError,
     CompletionCounter,
     GeneralizedRequest,
     PollRequest,
@@ -33,8 +34,8 @@ __all__ = [
     "DONE", "NOPROGRESS", "PENDING",
     "AsyncThing", "ProgressEngine", "Stream", "Subsystem",
     "global_engine", "reset_global_engine",
-    "CompletionCounter", "GeneralizedRequest", "PollRequest", "Request",
-    "request_of",
+    "CancelledError", "CompletionCounter", "GeneralizedRequest",
+    "PollRequest", "Request", "request_of",
     "ProgressExecutor",
     "TaskGraph", "TaskQueue",
     "CompletionWatcher", "EventQueue",

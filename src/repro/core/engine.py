@@ -440,7 +440,14 @@ class ProgressEngine:
                 if timeout is not None and time.monotonic() - t0 > timeout:
                     raise TimeoutError("drain timed out")
             return
-        while any(s.pending for s in self._streams):
+        while True:
+            # snapshot under the lock: a task/continuation may free_stream
+            # (or stream()) mid-sweep, and iterating the live list would
+            # blow up with "list changed size during iteration"
+            with self._lock:
+                streams = list(self._streams)
+            if not any(s.pending for s in streams):
+                return
             self.progress_all()
             if timeout is not None and time.monotonic() - t0 > timeout:
                 raise TimeoutError("drain timed out")

@@ -16,6 +16,12 @@ import time
 from typing import Any, Callable, Iterable, Optional
 
 
+class CancelledError(RuntimeError):
+    """Failure a cancelled request completes with (MPI_Cancel semantics):
+    ``MPI_Wait`` on a cancelled request must *return*, not spin — here,
+    ``engine.wait`` raises this instead of timing out."""
+
+
 class Request:
     """Completion handle. The flag is a plain attribute — CPython attribute
     loads are atomic, mirroring the paper's 'an atomic read instruction'."""
@@ -88,14 +94,28 @@ class GeneralizedRequest(Request):
         self._cancelled = False
 
     def complete(self, value: Any = None) -> None:  # MPI_Grequest_complete
+        if self._complete:
+            # already complete — e.g. cancelled; MPI_Grequest_complete on
+            # a cancelled request must not resurrect it as successful
+            return
         if self.query_fn is not None:
             value = self.query_fn(self.extra_state)
         super().complete(value)
 
+    @property
+    def cancelled(self) -> bool:
+        return self._cancelled
+
     def cancel(self) -> None:
+        """MPI_Cancel: inform the callback, then *complete* the request
+        (with a ``CancelledError`` failure) if it has not completed yet —
+        MPI_Cancel + MPI_Wait semantics: a wait on a cancelled request
+        returns instead of spinning until timeout."""
         if self.cancel_fn is not None:
             self.cancel_fn(self.extra_state, self._complete)
-        self._cancelled = True
+        if not self._complete:
+            self._cancelled = True
+            self.fail(CancelledError(f"grequest {self.tag!r} cancelled"))
 
     def free(self) -> None:
         if self.free_fn is not None:

@@ -28,6 +28,17 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--cast-bf16", action="store_true")
+    ap.add_argument("--collective-backend", default="native",
+                    choices=["native", "user"],
+                    help="native: gradient reduction inside the jitted "
+                         "step (GSPMD); user: nonblocking user-space "
+                         "collectives on the progress engine")
+    ap.add_argument("--collective-chunks", type=int, default=4,
+                    help="chunk pipelining factor for --collective-backend "
+                         "user")
+    ap.add_argument("--collective-algorithm", default="ring",
+                    help="user-backend allreduce schedule "
+                         "(ring/bidir/recursive_doubling/halving_doubling)")
     args = ap.parse_args()
 
     if args.devices:
@@ -78,14 +89,22 @@ def main():
 
     shape_spec = ShapeSpec("train", seq_len=args.seq,
                            global_batch=args.global_batch, kind="train")
-    cell = build_cell(cfg, shape_spec, mesh,
-                      opt_cfg=opt_mod.AdamWConfig(
-                          lr=3e-3, warmup_steps=5,
-                          total_steps=max(args.steps, 10)),
+    ocfg = opt_mod.AdamWConfig(lr=3e-3, warmup_steps=5,
+                               total_steps=max(args.steps, 10))
+    cell = build_cell(cfg, shape_spec, mesh, opt_cfg=ocfg,
                       microbatches=args.microbatches,
                       cast_params_bf16=args.cast_bf16)
     jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
                      out_shardings=cell.out_shardings)
+
+    user_backend = args.collective_backend == "user"
+    if user_backend:
+        if dict(mesh.shape).get("model", 1) != 1:
+            raise SystemExit("--collective-backend user needs a pure "
+                             "data-parallel mesh (model dim 1)")
+        if args.microbatches > 1:
+            raise SystemExit("--collective-backend user does not compose "
+                             "with --microbatches yet")
 
     with compat.set_mesh(mesh):
         params = registry.init_params(cfg, jax.random.PRNGKey(0))
@@ -94,34 +113,89 @@ def main():
         params = jax.device_put(params, cell.in_shardings[0])
         opt_state = jax.device_put(opt_state, cell.in_shardings[1])
         b_shardings = cell.in_shardings[2]
-        eng = ProgressEngine()
-        src = SyntheticLM(cfg.vocab_size, args.seq, args.global_batch, seed=5)
 
-        def to_batch(b):
-            batch = {k: jnp.asarray(v) for k, v in b.items()}
-            if cfg.is_encoder_decoder:
-                batch["encoder_embeds"] = jnp.ones(
-                    (args.global_batch, cfg.encoder_frames, cfg.d_model),
-                    jnp.bfloat16)
-            return batch
+    eng = ProgressEngine()
+    src = SyntheticLM(cfg.vocab_size, args.seq, args.global_batch, seed=5)
 
-        pipe = PrefetchPipeline(map(to_batch, iter(src)), eng, depth=3)
+    def to_batch(b):
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        if cfg.is_encoder_decoder:
+            batch["encoder_embeds"] = jnp.ones(
+                (args.global_batch, cfg.encoder_frames, cfg.d_model),
+                jnp.bfloat16)
+        return batch
 
-        def step_fn(params, opt_state, batch):
-            batch = {k: jax.device_put(v, b_shardings[k]) for k, v in batch.items()}
-            return jitted(params, opt_state, batch)
+    pipe = PrefetchPipeline(map(to_batch, iter(src)), eng, depth=3)
 
-        trainer = Trainer(
-            step_fn, params, opt_state, pipe,
-            TrainLoopConfig(total_steps=args.steps, checkpoint_every=10,
-                            checkpoint_dir=os.path.join(args.ckpt_dir, args.arch),
-                            log_every=5),
-            engine=eng,
-            hooks=[lambda s, m: print(
-                f"step {s:4d} loss={m['loss']:.4f} "
-                f"{m['step_time_s'] * 1e3:.0f}ms", flush=True)])
+    def step_fn(params, opt_state, batch):
+        batch = {k: jax.device_put(v, b_shardings[k]) for k, v in batch.items()}
+        return jitted(params, opt_state, batch)
+
+    split, reducer = None, None
+    if user_backend:
+        # Split step: shard_map-local grads (stacked per device) + an
+        # engine-driven bucketed allreduce + a jitted apply.  Traced
+        # OUTSIDE the mesh context so in-model shard hints no-op inside
+        # the manual shard_map region.
+        from jax.sharding import PartitionSpec as P
+        from repro.collectives.overlap import EngineGradReducer
+        from repro.train.train_loop import UserCollectiveStep
+
+        def local_grad(params, batch):
+            cparams = params
+            if args.cast_bf16:
+                # mirror build_cell's cast_params_bf16: bf16 forward,
+                # f32 master params and gradients
+                cdt = jnp.dtype(cfg.dtype)
+                cparams = jax.tree.map(
+                    lambda p: p.astype(cdt)
+                    if p.dtype == jnp.float32 and p.ndim > 1 else p, params)
+            (loss, mets), g = jax.value_and_grad(
+                registry.loss_fn, has_aux=True)(cparams, cfg, batch)
+            stacked = jax.tree.map(
+                lambda v: v[None].astype(jnp.float32), g)
+            mets = dict(mets, loss=loss)
+            return jax.tree.map(lambda v: v[None], mets), stacked
+
+        grad_fn = jax.jit(compat.shard_map(
+            local_grad, mesh=mesh, in_specs=(P(), P("data")),
+            out_specs=P("data")))
+
+        @jax.jit
+        def apply_fn(params, opt_state, grads, stacked_mets):
+            params, opt_state, om = opt_mod.apply(ocfg, opt_state,
+                                                  params, grads)
+            mets = {k: jnp.mean(v) for k, v in stacked_mets.items()}
+            return params, opt_state, dict(mets, **om)
+
+        reducer = EngineGradReducer(
+            mesh, "data", engine=eng,
+            algorithm=args.collective_algorithm,
+            chunks=args.collective_chunks, mean=True)
+        split = UserCollectiveStep(grad_fn, apply_fn, reducer)
+        print(f"collective backend: user "
+              f"({reducer.algorithm}, chunks={args.collective_chunks})")
+
+    loop_cfg = TrainLoopConfig(
+        total_steps=args.steps, checkpoint_every=10,
+        checkpoint_dir=os.path.join(args.ckpt_dir, args.arch),
+        log_every=5, collective_backend=args.collective_backend,
+        collective_algorithm=args.collective_algorithm,
+        collective_chunks=args.collective_chunks)
+    trainer = Trainer(
+        step_fn, params, opt_state, pipe, loop_cfg,
+        engine=eng, split_step=split,
+        hooks=[lambda s, m: print(
+            f"step {s:4d} loss={m['loss']:.4f} "
+            f"{m['step_time_s'] * 1e3:.0f}ms", flush=True)])
+    if user_backend:
         log = trainer.run()
-        pipe.close()
+    else:
+        with compat.set_mesh(mesh):
+            log = trainer.run()
+    pipe.close()
+    if reducer is not None:
+        reducer.close()
     print(f"final loss {log[-1]['loss']:.4f}")
     return 0
 

@@ -41,14 +41,49 @@ class TrainLoopConfig:
     # >0: that many background progress workers drive prefetch/checkpoint/
     # watchdog tasks (§4.4); 0: the overlap window self-progresses as before
     progress_workers: int = 0
+    # gradient-reduction backend: "native" keeps the reduction inside the
+    # jitted step (GSPMD); "user" runs it as nonblocking user-space
+    # collectives on the progress engine (requires a split step — see
+    # ``UserCollectiveStep``) so reduction overlaps host-driven progress
+    collective_backend: str = "native"
+    collective_algorithm: str = "ring"
+    collective_chunks: int = 4
+
+
+@dataclasses.dataclass
+class UserCollectiveStep:
+    """Split train step for the engine-driven collective backend.
+
+    ``grad_fn(params, batch) -> (stacked_metrics, stacked_grads)`` —
+    per-device losses/metrics and gradients stacked on a leading
+    axis-size dim (``shard_map`` local grads); ``reducer`` (an
+    ``EngineGradReducer``) allreduces the grads on the collective
+    stream while the engine also progresses prefetch/checkpoint tasks;
+    ``apply_fn(params, opt_state, grads, stacked_metrics) -> (params,
+    opt_state, metrics)`` finishes the step."""
+    grad_fn: Callable
+    apply_fn: Callable
+    reducer: Any
 
 
 class Trainer:
     def __init__(self, step_fn: Callable, params, opt_state,
                  pipeline, cfg: TrainLoopConfig,
                  engine: Optional[ProgressEngine] = None,
-                 hooks: list[Callable[[int, dict], None]] | None = None):
+                 hooks: list[Callable[[int, dict], None]] | None = None,
+                 split_step: "UserCollectiveStep | None" = None):
+        # keep the config's collective_backend and the split_step argument
+        # consistent: the config is the record (stats/logs), the split_step
+        # carries the machinery — they must agree or the caller gets the
+        # wrong backend silently
+        if split_step is not None and cfg.collective_backend != "user":
+            cfg = dataclasses.replace(cfg, collective_backend="user")
+        elif split_step is None and cfg.collective_backend == "user":
+            raise ValueError(
+                "collective_backend='user' requires a split_step "
+                "(UserCollectiveStep with grad_fn/apply_fn/reducer)")
         self.step_fn = step_fn
+        self.split_step = split_step
         self.params = params
         self.opt_state = opt_state
         self.pipeline = pipeline
@@ -105,9 +140,22 @@ class Trainer:
             batch = self.pipeline.next_batch()     # warm path: no block
             t0 = time.monotonic()
             self.watchdog.arm()
-            # nonblocking dispatch — jit returns before the device finishes
-            self.params, self.opt_state, metrics = self.step_fn(
-                self.params, self.opt_state, batch)
+            if self.split_step is not None:
+                # engine-driven collective backend: dispatch local grads,
+                # issue the nonblocking bucketed allreduce, and let the
+                # engine overlap the reduction with prefetch/checkpoint
+                # progress (and the tail of backward, still in flight)
+                stacked_metrics, grads = self.split_step.grad_fn(
+                    self.params, batch)
+                reduction = self.split_step.reducer.iallreduce_tree(grads)
+                grads = reduction.wait(timeout=self.cfg.watchdog_limit_s)
+                self.params, self.opt_state, metrics = \
+                    self.split_step.apply_fn(self.params, self.opt_state,
+                                             grads, stacked_metrics)
+            else:
+                # nonblocking dispatch — jit returns before device finishes
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch)
             loss_req = jax_future(self.engine, metrics)
 
             # overlap window: drive collated progress until device done

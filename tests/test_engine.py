@@ -5,8 +5,8 @@ import time
 import pytest
 
 from repro.core import (
-    DONE, NOPROGRESS, ProgressEngine, Request, GeneralizedRequest,
-    TaskQueue, TaskGraph, CompletionWatcher, EventQueue,
+    DONE, NOPROGRESS, CancelledError, ProgressEngine, Request,
+    GeneralizedRequest, TaskQueue, TaskGraph, CompletionWatcher, EventQueue,
 )
 
 
@@ -258,6 +258,38 @@ class TestRequests:
         greq.free()
         assert freed == ["es"]
 
+    def test_cancel_completes_grequest(self):
+        """Regression: cancel() used to set only the flag — a subsequent
+        engine.wait() spun until timeout.  MPI_Cancel + MPI_Wait must
+        return: the request completes with a CancelledError failure."""
+        eng = ProgressEngine()
+        informed = []
+        greq = GeneralizedRequest(
+            cancel_fn=lambda st, complete: informed.append(complete),
+            extra_state="es")
+        greq.cancel()
+        assert informed == [False]          # callback saw "not yet complete"
+        assert greq.cancelled
+        assert greq.is_complete             # wait() returns immediately...
+        assert greq.failed
+        with pytest.raises(CancelledError):  # ...by raising, not spinning
+            eng.wait(greq, timeout=1.0)
+        # MPI_Grequest_complete racing the cancel must not resurrect it
+        greq.complete()
+        assert greq.failed
+
+    def test_cancel_after_complete_is_noop(self):
+        informed = []
+        greq = GeneralizedRequest(
+            query_fn=lambda st: "v",
+            cancel_fn=lambda st, complete: informed.append(complete))
+        greq.complete()
+        greq.cancel()
+        assert informed == [True]           # callback saw "already complete"
+        assert not greq.cancelled           # nothing was cancelled
+        assert not greq.failed
+        assert greq.value() == "v"
+
 
 class TestTaskClasses:
     def test_task_queue_in_order(self):
@@ -328,3 +360,57 @@ class TestEvents:
         assert len(evq) == 1
         assert evq.drain() == ["ev"]
         assert len(evq) == 0
+
+
+class TestDrainStreamChurn:
+    def test_task_freeing_streams_mid_drain(self):
+        """A task that frees (and creates) OTHER streams while drain
+        sweeps must not corrupt the stream list or wedge the drain."""
+        eng = ProgressEngine()
+        victims = [eng.stream(f"victim{i}") for i in range(4)]
+        work = eng.stream("work")
+        state = {"n": 0}
+
+        def poll(thing):
+            state["n"] += 1
+            if victims:
+                eng.free_stream(victims.pop())   # churn during the sweep
+                eng.stream(f"new{state['n']}")   # and grow the list too
+                return NOPROGRESS
+            return DONE
+
+        eng.async_start(poll, None, work)
+        eng.drain(timeout=5.0)                   # must terminate cleanly
+        assert work.pending == 0
+        assert state["n"] >= 5
+
+    def test_concurrent_free_during_drain(self):
+        """Regression: drain(stream=None) iterated the live stream list;
+        a concurrent free_stream blew it up with 'list changed size
+        during iteration'.  The list is snapshotted now."""
+        eng = ProgressEngine()
+        deadline = time.monotonic() + 0.2
+
+        def slow(thing):
+            return DONE if time.monotonic() >= deadline else NOPROGRESS
+
+        eng.async_start(slow, None, eng.stream("busy"))
+        stop = threading.Event()
+        errors = []
+
+        def churn():
+            while not stop.is_set():
+                s = eng.stream("churn")
+                try:
+                    eng.free_stream(s)
+                except BaseException as exc:  # noqa: BLE001
+                    errors.append(exc)
+
+        t = threading.Thread(target=churn, daemon=True)
+        t.start()
+        try:
+            eng.drain(timeout=10.0)              # raced the churn thread
+        finally:
+            stop.set()
+            t.join(timeout=5.0)
+        assert errors == []

@@ -1,0 +1,467 @@
+"""Nonblocking user-space collectives (paper §4.7 on the engine).
+
+Equivalence vs the native ops runs in multi-device subprocesses
+(1/2/4 devices, odd and power-of-two payloads, several chunk counts);
+the pipeline mechanics — failure propagation, exactly-once completion
+under random drain orderings, eager validation — run in-process with
+host-only fake schedules (no devices needed).
+"""
+import random
+import types
+
+import pytest
+
+from tests._multidevice import run_with_devices
+
+
+# ---------------------------------------------------------------------------
+# Equivalence vs native (subprocess, 1/2/4 devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_devices", [1, 2, 4])
+def test_iallreduce_matches_psum(n_devices):
+    out = run_with_devices(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
+        from jax.sharding import PartitionSpec as P
+        from repro.core import ProgressEngine
+        from repro.collectives import nonblocking as NB
+        from repro.collectives import schedules as S
+        n = {n_devices}
+        mesh = compat.make_mesh((n,), ("x",))
+        eng = ProgressEngine()
+        coll = NB.UserCollectives(eng)
+        for D in (33, 64):                      # odd and power-of-two
+            x = jax.random.normal(jax.random.PRNGKey(D), (n * 2, 3, D))
+            native = jax.jit(compat.shard_map(lambda v: jax.lax.psum(v, "x"),
+                mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
+            for alg in S.ALGORITHMS:
+                for K in (1, 3):
+                    req = coll.iallreduce(x, mesh, "x", algorithm=alg,
+                                          chunks=K)
+                    assert not req.is_complete, (
+                        f"{{alg}} K={{K}}: complete at issue time")
+                    out = req.wait(timeout=120)
+                    np.testing.assert_allclose(
+                        np.asarray(out), np.asarray(native),
+                        atol=1e-4, rtol=1e-4, err_msg=f"{{alg}} D={{D}} K={{K}}")
+                    assert req.rounds_done == req.rounds_total
+        coll.close()
+        assert coll.failed == 0
+        print("IALLREDUCE_OK")
+    """, n_devices=n_devices)
+    assert "IALLREDUCE_OK" in out
+
+
+@pytest.mark.parametrize("n_devices", [1, 2, 4])
+def test_irs_iag_ia2a_match_native(n_devices):
+    out = run_with_devices(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
+        from jax.sharding import PartitionSpec as P
+        from repro.core import ProgressEngine
+        from repro.collectives import nonblocking as NB
+        n = {n_devices}
+        mesh = compat.make_mesh((n,), ("x",))
+        eng = ProgressEngine()
+        coll = NB.UserCollectives(eng)
+
+        # reduce-scatter vs tiled psum_scatter
+        x = jax.random.normal(jax.random.PRNGKey(0), (n * 2, 2, n * 8))
+        if n == 1:
+            nat = x
+        else:
+            nat = jax.jit(compat.shard_map(
+                lambda v: jax.lax.psum_scatter(
+                    v, "x", scatter_dimension=v.ndim - 1, tiled=True),
+                mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
+        for K in (1, 2, 4):
+            out = coll.ireduce_scatter(x, mesh, "x", chunks=K).wait(timeout=120)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(nat),
+                                       atol=1e-4, rtol=1e-4,
+                                       err_msg=f"rs K={{K}}")
+
+        # all-gather vs tiled all_gather
+        x = jax.random.normal(jax.random.PRNGKey(1), (n * 2, 2, 6))
+        if n == 1:
+            nat = x
+        else:
+            nat = jax.jit(compat.shard_map(
+                lambda v: jax.lax.all_gather(v, "x", axis=v.ndim - 1,
+                                             tiled=True),
+                mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
+        for K in (1, 2, 3):
+            out = coll.iallgather(x, mesh, "x", chunks=K).wait(timeout=120)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(nat),
+                                       atol=1e-6, err_msg=f"ag K={{K}}")
+
+        # all-to-all vs native block transpose
+        x = jax.random.normal(jax.random.PRNGKey(2), (n * n, 5))
+        if n == 1:
+            nat = x
+        else:
+            nat = jax.jit(compat.shard_map(
+                lambda v: jax.lax.all_to_all(
+                    v.reshape(n, 1, 5), "x", 0, 0,
+                    tiled=False).reshape(n, 5),
+                mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
+        for K in (1, 2, 5):
+            out = coll.ialltoall(x, mesh, "x", chunks=K).wait(timeout=120)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(nat),
+                                       atol=1e-6, err_msg=f"a2a K={{K}}")
+        coll.close()
+        print("IRS_IAG_IA2A_OK")
+    """, n_devices=n_devices)
+    assert "IRS_IAG_IA2A_OK" in out
+
+
+def test_non_pow2_falls_back_and_matches():
+    """Eager pow2 validation: on 3 devices the XOR-partner algorithms
+    warn and fall back to ring — and still match native."""
+    out = run_with_devices("""
+        import warnings
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
+        from jax.sharding import PartitionSpec as P
+        from repro.core import ProgressEngine
+        from repro.collectives import nonblocking as NB
+        from repro.collectives import schedules as S
+        n = 3
+        mesh = compat.make_mesh((n,), ("x",))
+        x = jax.random.normal(jax.random.PRNGKey(0), (n * 2, 33))
+        native = jax.jit(compat.shard_map(lambda v: jax.lax.psum(v, "x"),
+            mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
+        # shard_map wrapper path
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            out = S.allreduce_under_shard_map(x, mesh, "x", "halving_doubling")
+            assert any("power-of-two" in str(i.message) for i in w), w
+        np.testing.assert_allclose(np.asarray(out), np.asarray(native),
+                                   atol=1e-4, rtol=1e-4)
+        # nonblocking path
+        eng = ProgressEngine()
+        coll = NB.UserCollectives(eng)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            req = coll.iallreduce(x, mesh, "x",
+                                  algorithm="recursive_doubling", chunks=2)
+            assert any("power-of-two" in str(i.message) for i in w), w
+        assert req.algorithm == "ring"
+        np.testing.assert_allclose(np.asarray(req.wait(timeout=120)),
+                                   np.asarray(native), atol=1e-4, rtol=1e-4)
+        coll.close()
+        print("FALLBACK_OK")
+    """, n_devices=3)
+    assert "FALLBACK_OK" in out
+
+
+def test_engine_grad_reducer_matches_sum():
+    """EngineGradReducer: bucketed stacked-gradient reduction equals the
+    plain cross-device mean, through buckets and chunk pipelining."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
+        from jax.sharding import PartitionSpec as P
+        from repro.core import ProgressEngine
+        from repro.collectives.overlap import EngineGradReducer
+        n = 4
+        mesh = compat.make_mesh((n,), ("data",))
+        eng = ProgressEngine()
+        red = EngineGradReducer(mesh, "data", engine=eng, chunks=3,
+                                bucket_bytes=64, mean=True)
+        grads = {
+            "w": jax.random.normal(jax.random.PRNGKey(0), (n, 8, 16)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (n, 16)),
+            "s": jax.random.normal(jax.random.PRNGKey(2), (n,)),
+        }
+        handle = red.iallreduce_tree(grads)
+        assert len(handle.requests) >= 2, "expected multiple buckets"
+        out = handle.wait(timeout=120)
+        for k, g in grads.items():
+            np.testing.assert_allclose(np.asarray(out[k]),
+                                       np.asarray(g).mean(0),
+                                       atol=1e-5, err_msg=k)
+        red.close()
+        print("REDUCER_OK")
+    """, n_devices=4)
+    assert "REDUCER_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Pipeline mechanics (in-process, host-only fake schedules)
+# ---------------------------------------------------------------------------
+
+from repro.core import DEFERRED, ProgressEngine  # noqa: E402
+from repro.collectives import nonblocking as NB  # noqa: E402
+
+
+def make_coll(policy=None):
+    eng = ProgressEngine()
+    kwargs = {"policy": policy} if policy else {}
+    return NB.UserCollectives(eng, **kwargs)
+
+
+def fake_schedule(stages):
+    """A _Schedule of plain host callables — floats instead of arrays;
+    jax_future treats objects without .is_ready() as immediately ready,
+    so the pipeline machinery runs without any devices."""
+    sched = NB._Schedule.__new__(NB._Schedule)
+    sched.stages = tuple(stages)
+    return sched
+
+
+class TestPipelineMechanics:
+    def test_failure_at_issue_time_fails_request(self):
+        coll = make_coll()
+
+        def boom(v):
+            raise RuntimeError("round-0 boom")
+
+        req = coll._issue("allreduce", "ring", [fake_schedule([boom])],
+                          [1.0], lambda parts: parts[0])
+        assert req.failed
+        with pytest.raises(RuntimeError, match="round-0 boom"):
+            req.value()
+        assert coll.failed == 1
+        coll.close()
+
+    def test_failure_mid_pipeline_propagates_into_request(self):
+        coll = make_coll()
+        ran = []
+
+        def ok(v):
+            ran.append(v)
+            return v + 1
+
+        def boom(v):
+            raise ValueError("round-1 boom")
+
+        req = coll._issue("allreduce", "ring",
+                          [fake_schedule([ok, boom])], [1.0],
+                          lambda parts: parts[0])
+        assert not req.is_complete          # round 0 dispatched fine
+        with pytest.raises(ValueError, match="round-1 boom"):
+            req.wait(timeout=5.0)
+        assert req.failed
+        assert ran == [1.0]
+        assert coll.failed == 1
+        # one failing chunk must not wedge a sibling: stream drains clean
+        coll.close()
+
+    def test_one_bad_chunk_fails_request_but_good_chunks_finish(self):
+        coll = make_coll()
+        done = []
+
+        def ok(v):
+            done.append(v)
+            return v
+
+        def boom(v):
+            raise RuntimeError("chunk-1 boom")
+
+        req = coll._issue(
+            "allreduce", "ring",
+            [fake_schedule([ok, ok]), fake_schedule([ok, boom])],
+            [1.0, 2.0], lambda parts: parts)
+        with pytest.raises(RuntimeError, match="chunk-1 boom"):
+            req.wait(timeout=5.0)
+        # the failure is counted once per REQUEST, not once per chunk
+        assert coll.failed == 1
+        assert coll.in_flight == 0
+        coll.close()                        # good chunk's tasks all retire
+
+    def test_failure_abandons_sibling_chunks(self):
+        """Once one chunk fails the request, sibling chunks stop
+        dispatching further rounds (no wasted work on the error path)."""
+        coll = make_coll()
+        ran = []
+
+        def boom(v):
+            raise RuntimeError("boom")
+
+        def late(v):
+            ran.append(v)
+            return v
+
+        # chunk 0 fails at issue time, so chunk 1 (issued after) must
+        # never run any of its stages
+        req = coll._issue("allreduce", "ring",
+                          [fake_schedule([boom]),
+                           fake_schedule([late, late, late])],
+                          [1.0, 2.0], lambda parts: parts)
+        assert req.failed
+        for _ in range(10):
+            coll.engine.progress(coll.stream)
+        assert ran == []
+        assert coll.failed == 1
+        coll.close()
+
+    def test_deferred_without_executor_wait_self_drains(self):
+        """Regression: with policy=DEFERRED and no executor adopting the
+        queue, req.wait() must drain the ready list itself — otherwise
+        every multi-stage collective times out with all work 'ready'."""
+        coll = make_coll(policy=DEFERRED)
+        req = coll._issue("allreduce", "ring",
+                          [fake_schedule([lambda v: v + 1,
+                                          lambda v: v * 10])],
+                          [1.0], lambda parts: parts[0])
+        assert req.wait(timeout=5.0) == 20.0
+        coll.close()
+
+    def test_close_timeout_is_retryable(self):
+        """A drain timeout must not leave the context half-closed: a
+        retry close() after the blocker clears drains and frees."""
+        coll = make_coll()
+        gate = {"open": False}
+        blocker = types.SimpleNamespace(is_ready=lambda: gate["open"])
+        req = coll._issue("allreduce", "ring",
+                          [fake_schedule([lambda v: blocker])], [1.0],
+                          lambda parts: parts[0])
+        with pytest.raises(TimeoutError):
+            coll.close(timeout=0.05)
+        gate["open"] = True                  # blocker clears
+        coll.close(timeout=5.0)              # retry succeeds
+        assert req.is_complete
+        assert coll.stream not in coll.engine._streams
+
+    def test_default_collectives_conflicting_kwargs_raise(self):
+        eng = ProgressEngine()
+        ctx = NB.default_collectives(eng)
+        assert NB.default_collectives(eng) is ctx
+        with pytest.raises(ValueError, match="configured differently"):
+            NB.default_collectives(eng, policy=DEFERRED)
+        ctx.close()
+        # after close, a fresh context with the new policy is built
+        ctx2 = NB.default_collectives(eng, policy=DEFERRED)
+        assert ctx2.queue.policy == DEFERRED
+        ctx2.close()
+
+    def test_join_failure_fails_request(self):
+        coll = make_coll()
+
+        def bad_join(parts):
+            raise RuntimeError("join boom")
+
+        req = coll._issue("allreduce", "ring",
+                          [fake_schedule([lambda v: v])], [1.0], bad_join)
+        with pytest.raises(RuntimeError, match="join boom"):
+            req.wait(timeout=5.0)
+        coll.close()
+
+    def test_closed_context_rejects_issues(self):
+        coll = make_coll()
+        coll.close()
+        mesh = types.SimpleNamespace(shape={"x": 2})
+        with pytest.raises(RuntimeError, match="closed"):
+            coll.iallreduce(None, mesh, "x")
+
+    def test_eager_shape_validation(self):
+        coll = make_coll()
+        mesh = types.SimpleNamespace(shape={"x": 3})
+        arr = types.SimpleNamespace(shape=(6, 10))
+        with pytest.raises(ValueError, match="not divisible"):
+            coll.ireduce_scatter(arr, mesh, "x")
+        arr2 = types.SimpleNamespace(shape=(7, 9))
+        with pytest.raises(ValueError, match="not divisible"):
+            coll.ialltoall(arr2, mesh, "x")
+        with pytest.raises(ValueError, match="unknown allreduce algorithm"):
+            coll.iallreduce(arr, mesh, "x", algorithm="nope")
+        # 1-D payloads would chunk the sharded dim itself: rejected eagerly
+        one_d = types.SimpleNamespace(shape=(6,))
+        for op in ("iallreduce", "ireduce_scatter", "iallgather",
+                   "ialltoall"):
+            with pytest.raises(ValueError, match="at least 2-D"):
+                getattr(coll, op)(one_d, mesh, "x")
+        coll.close()
+
+    def test_abandon_close_with_in_flight_work_does_not_raise(self):
+        """close(drain=False) — the __exit__ exception path — must not
+        raise over the application's original error even with rounds
+        still pending; pending continuations are cancelled, the busy
+        stream is left registered instead of freed."""
+        coll = make_coll()
+        never_ready = types.SimpleNamespace(is_ready=lambda: False)
+
+        def stall(v):
+            return never_ready                  # future that never fires
+
+        req = coll._issue("allreduce", "ring",
+                          [fake_schedule([stall, lambda v: v])], [1.0],
+                          lambda parts: parts[0])
+        assert coll.stream.pending
+        coll.close(drain=False)                 # must not raise
+        assert not req.is_complete              # abandoned, not completed
+        # the stream stays registered; its tasks retire on later sweeps
+        assert coll.stream in coll.engine._streams
+
+
+def run_random_drain(rng, num_chunks, num_stages):
+    """One exactly-once trial: chunked fake schedules on a DEFERRED
+    queue, progressed/drained in a random interleave."""
+    coll = make_coll(policy=DEFERRED)
+    eng, stream, queue = coll.engine, coll.stream, coll.queue
+    counts = [[0] * num_stages for _ in range(num_chunks)]
+
+    def stage(c, s):
+        def fn(v):
+            counts[c][s] += 1
+            return v + 1
+        return fn
+
+    scheds = [fake_schedule([stage(c, s) for s in range(num_stages)])
+              for c in range(num_chunks)]
+    joins = []
+
+    def join(parts):
+        joins.append(list(parts))
+        return sum(parts)
+
+    req = coll._issue("allreduce", "ring", scheds,
+                      [float(c) for c in range(num_chunks)], join)
+    assert not req.is_complete
+    steps = 0
+    while not req.is_complete and steps < 10_000:
+        op = rng.randrange(3)
+        if op == 0:
+            eng.progress(stream)
+        elif op == 1:
+            queue.drain(max_items=rng.randrange(1, 3))
+        else:
+            eng.progress(stream)
+            queue.drain()
+        steps += 1
+    assert req.is_complete, "pipeline wedged under random drain ordering"
+    # exactly once: every stage of every chunk ran once, one join
+    assert counts == [[1] * num_stages for _ in range(num_chunks)], counts
+    assert len(joins) == 1
+    assert req.value() == sum(c + num_stages for c in range(num_chunks))
+    coll.close()
+
+
+class TestExactlyOnce:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_random_drain_orderings(self, seed):
+        rng = random.Random(seed)
+        run_random_drain(rng, num_chunks=rng.randrange(1, 5),
+                         num_stages=rng.randrange(1, 6))
+
+    def test_hypothesis_property(self):
+        hyp = pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=40, deadline=None)
+        @given(seed=st.integers(0, 2**32 - 1),
+               chunks=st.integers(1, 6), stages=st.integers(1, 6))
+        def prop(seed, chunks, stages):
+            run_random_drain(random.Random(seed), chunks, stages)
+
+        prop()
+
+
+def test_trainer_rejects_user_backend_without_split_step(tmp_path):
+    from repro.train.train_loop import Trainer, TrainLoopConfig
+    cfg = TrainLoopConfig(collective_backend="user",
+                          checkpoint_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="split_step"):
+        Trainer(lambda *a: None, None, None, None, cfg,
+                engine=ProgressEngine())
