@@ -7,8 +7,20 @@ that the specialized user-level implementation is competitive (it
 beats MPICH's Iallreduce in the paper thanks to context shortcuts).
 Fig 14: the *nonblocking* engine-driven ``iallreduce`` (chunk-pipelined
 round schedules, see ``collectives/nonblocking.py``) vs native ``psum``
-at several payload sizes and chunk counts, with achieved bandwidth —
-the user schedule is expected within 2× of native at the largest size.
+at 128KB / 4MB / 64MB / 256MB, two ways:
+
+* **one-shot per-round** (``round_batch=1``, the PR-3 baseline rows —
+  names unchanged so the CI trend report tracks them): every round of
+  every chunk is its own dispatch + engine round trip;
+* **persistent + round batching** (``allreduce_init``/``start`` with the
+  auto batch factor): the plan and fused round programs are built once,
+  each ``start`` re-binds the payload.  Small payloads collapse to 1–2
+  dispatches (with multi-chunk payloads stacked through one program);
+  large payloads keep per-round dispatch for chunk pipelining.
+
+``fig14_persistent_gain_*`` rows record the per-config speedup of the
+persistent path over the one-shot per-round baseline — the small-payload
+amortization win the trend gate must never lose.
 """
 from __future__ import annotations
 
@@ -55,11 +67,19 @@ coll = NB.UserCollectives(eng)
 native_jit = jax.jit(compat.shard_map(native, mesh=mesh, in_specs=P("x"),
                                       out_specs=P("x")))
 
-# payload rows: 128KB (latency regime), 64MB, 256MB (bandwidth regime).
-# On CPU hosts the per-round dispatch+sync cost dominates small sizes;
-# at the largest size recursive doubling (3 rounds) with 2-way chunk
-# pipelining lands within 2x of the native psum — the acceptance bar.
-for D, iters in ((4096, 30), (2097152, 8), (8388608, 4)):
+def timed(issue, iters):
+    out = issue()                             # compile / warm everything
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = issue()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+# payload rows: 128KB + 4MB (latency regime: persistent + round batching
+# collapse each start to 1-2 dispatches), 64MB, 256MB (bandwidth regime:
+# per-round dispatch keeps chunks pipelining; recursive doubling with
+# 2-way chunk pipelining lands within ~1.4x of the native psum).
+for D, iters in ((4096, 30), (131072, 20), (2097152, 8), (8388608, 4)):
     xs = jnp.ones((8, D), jnp.float32)
     nbytes = xs.size * 4
     out = native_jit(xs); out.block_until_ready()
@@ -72,17 +92,28 @@ for D, iters in ((4096, 30), (2097152, 8), (8388608, 4)):
           f"bw={nbytes / nat_us / 1e3:.2f}GB/s")
     for alg in ("ring", "recursive_doubling"):
         for K in (1, 2, 4):
-            req = coll.iallreduce(xs, mesh, "x", algorithm=alg, chunks=K)
-            req.wait(timeout=600)                 # compile all rounds
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                req = coll.iallreduce(xs, mesh, "x", algorithm=alg, chunks=K)
-                out = req.wait(timeout=600)
-            jax.block_until_ready(out)
-            us = (time.perf_counter() - t0) / iters * 1e6
+            # one-shot, one dispatch per round: the PR-3 baseline row
+            # (same name across PRs — the trend report tracks it)
+            us = timed(lambda: coll.iallreduce(
+                xs, mesh, "x", algorithm=alg, chunks=K,
+                round_batch=1).wait(timeout=600), iters)
             print(f"fig14_user_iallreduce_{nbytes}B_{alg}_c{K},{us:.3f},"
                   f"bw={nbytes / us / 1e3:.2f}GB/s vs native "
                   f"x{us / nat_us:.2f}")
+            # persistent handle + auto round batching: *_init once,
+            # start() per iteration re-binds the payload
+            h = coll.allreduce_init(xs, mesh, "x", algorithm=alg, chunks=K)
+            pus = timed(lambda: h.start(xs).wait(timeout=600), iters)
+            print(f"fig14_user_iallreduce_persistent_{nbytes}B_{alg}_c{K},"
+                  f"{pus:.3f},rb={h.round_batch} "
+                  f"bw={nbytes / pus / 1e3:.2f}GB/s vs native "
+                  f"x{pus / nat_us:.2f}")
+            # value field IS the speedup ratio (trend.py excludes these
+            # rows from the latency gate by prefix)
+            print(f"fig14_persistent_gain_{nbytes}B_{alg}_c{K},"
+                  f"{us / pus:.3f},persistent {pus:.1f}us vs one-shot "
+                  f"per-round {us:.1f}us")
+            h.close()
 coll.close()
 """
 
@@ -94,11 +125,11 @@ def run():
     env.pop("XLA_FLAGS", None)
     try:
         proc = subprocess.run([sys.executable, "-c", textwrap.dedent(SNIPPET)],
-                              capture_output=True, text=True, timeout=900,
+                              capture_output=True, text=True, timeout=1500,
                               env=env)
         stdout, rc, err = proc.stdout, proc.returncode, proc.stderr or ""
     except subprocess.TimeoutExpired as e:
-        stdout, rc, err = e.stdout or "", -1, "timeout after 900s"
+        stdout, rc, err = e.stdout or "", -1, "timeout after 1500s"
     # salvage whatever rows completed: a slow/dead fig14 sweep must not
     # throw away the fig13 rows already printed before it
     rows = [l for l in stdout.splitlines() if l.startswith("fig1")]

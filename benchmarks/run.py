@@ -65,6 +65,14 @@ def main(argv=None) -> None:
     ]
     if args.sections:
         wanted = [w.strip() for w in args.sections.split(",") if w.strip()]
+        names = [n for n, _ in sections]
+        unknown = [w for w in wanted if not any(w in n for n in names)]
+        if unknown:
+            # an unmatched filter must error, not silently run nothing —
+            # a typo'd --sections in CI would otherwise produce an empty
+            # (but green-looking) BENCH_progress.json
+            sys.exit(f"run.py: unknown section filter(s) {unknown}; "
+                     f"available sections: {names}")
         sections = [(n, f) for n, f in sections
                     if any(w in n for w in wanted)]
 

@@ -1,0 +1,166 @@
+"""Perf-trend gate: diff the current ``BENCH_progress.json`` against the
+previous run's artifact and flag regressions.
+
+The CI ``bench`` job accumulates ``BENCH_progress.json`` (schema
+``repro-bench-v1``) as an artifact per commit; this tool compares the
+fig7 / fig13 / fig14 rows of the current run against the artifact
+downloaded from the last successful main run, writes a markdown table to
+``$GITHUB_STEP_SUMMARY`` (and stdout), and exits non-zero when any
+tracked row slowed down by more than ``--threshold`` (default 20%) — the
+job stays non-blocking (``continue-on-error``), so a regression
+*annotates* the run instead of failing the PR, but it can never slip by
+silently.
+
+Usage:
+    python -m benchmarks.trend --current BENCH_progress.json \
+        --previous prev/BENCH_progress.json [--threshold 0.2]
+
+Missing previous artifact (first run, expired retention, forked PR
+without artifact access) is not an error: the report says so and exits 0.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# Row-name prefixes tracked by the gate: the progress-engine
+# microbenchmarks (fig7), callback-vs-waitset delivery (fig13) and the
+# user-collective sweep (fig14).  fig14_persistent_gain rows hold a
+# ratio, not a latency — excluded.
+DEFAULT_PREFIXES = ("fig7", "fig13", "fig14_native", "fig14_user")
+DEFAULT_THRESHOLD = 0.20
+
+
+def load_rows(path: str, prefixes) -> dict[str, float]:
+    """name -> us_per_call for tracked rows with a measured value."""
+    with open(path) as f:
+        summary = json.load(f)
+    rows = {}
+    for row in summary.get("rows", []):
+        name, us = row.get("name", ""), row.get("us_per_call")
+        if us is None or not name.startswith(tuple(prefixes)):
+            continue
+        rows[name] = float(us)
+    return rows
+
+
+def compare(prev: dict[str, float], cur: dict[str, float],
+            threshold: float) -> list[dict]:
+    """One entry per union row, flagged regressed/improved/ok/new/gone."""
+    entries = []
+    for name in sorted(set(prev) | set(cur)):
+        p, c = prev.get(name), cur.get(name)
+        if p is None:
+            entries.append({"name": name, "prev": None, "cur": c,
+                            "ratio": None, "status": "new"})
+        elif c is None:
+            entries.append({"name": name, "prev": p, "cur": None,
+                            "ratio": None, "status": "gone"})
+        else:
+            ratio = c / p if p > 0 else float("inf")
+            if ratio > 1.0 + threshold:
+                status = "regressed"
+            elif ratio < 1.0 - threshold:
+                status = "improved"
+            else:
+                status = "ok"
+            entries.append({"name": name, "prev": p, "cur": c,
+                            "ratio": ratio, "status": status})
+    return entries
+
+
+_ICON = {"regressed": "🔴 regressed", "improved": "🟢 improved",
+         "ok": "·", "new": "new", "gone": "gone"}
+
+
+def _fmt_us(v) -> str:
+    return f"{v:,.1f}" if v is not None else "—"
+
+
+def format_markdown(entries: list[dict], threshold: float,
+                    prev_rev: str = "?", cur_rev: str = "?") -> str:
+    regressed = [e for e in entries if e["status"] == "regressed"]
+    improved = [e for e in entries if e["status"] == "improved"]
+    lines = [
+        "## Perf trend: BENCH_progress",
+        "",
+        f"Comparing `{cur_rev}` (current) against `{prev_rev}` (last "
+        f"successful main run); threshold ±{threshold:.0%}.",
+        f"**{len(regressed)} regressed**, {len(improved)} improved, "
+        f"{len(entries)} rows tracked.",
+        "",
+        "| row | prev µs | cur µs | Δ | |",
+        "|---|---:|---:|---:|---|",
+    ]
+    for e in entries:
+        delta = (f"{(e['ratio'] - 1.0) * 100:+.1f}%"
+                 if e["ratio"] is not None else "—")
+        lines.append(f"| `{e['name']}` | {_fmt_us(e['prev'])} | "
+                     f"{_fmt_us(e['cur'])} | {delta} | "
+                     f"{_ICON[e['status']]} |")
+    return "\n".join(lines) + "\n"
+
+
+def _emit(report: str, summary_path: str | None) -> None:
+    print(report)
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(report + "\n")
+
+
+def _git_rev(path: str) -> str:
+    try:
+        with open(path) as f:
+            return json.load(f).get("git_rev", "?")
+    except Exception:  # noqa: BLE001
+        return "?"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", default="BENCH_progress.json")
+    ap.add_argument("--previous", default="prev/BENCH_progress.json")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="relative slowdown that counts as a regression")
+    ap.add_argument("--prefixes", default=",".join(DEFAULT_PREFIXES),
+                    help="comma-separated row-name prefixes to track")
+    ap.add_argument("--summary", default=os.environ.get(
+        "GITHUB_STEP_SUMMARY", ""),
+        help="markdown file to append the report to "
+             "(default: $GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args(argv)
+    prefixes = tuple(p.strip() for p in args.prefixes.split(",") if p.strip())
+
+    if not os.path.exists(args.current):
+        _emit(f"## Perf trend: BENCH_progress\n\nno current summary at "
+              f"`{args.current}` — bench harness produced nothing to "
+              f"compare.", args.summary or None)
+        return 2
+    if not os.path.exists(args.previous):
+        cur = load_rows(args.current, prefixes)
+        _emit(f"## Perf trend: BENCH_progress\n\nno previous artifact at "
+              f"`{args.previous}` — nothing to compare against "
+              f"({len(cur)} rows recorded for the next run).",
+              args.summary or None)
+        return 0
+
+    prev = load_rows(args.previous, prefixes)
+    cur = load_rows(args.current, prefixes)
+    entries = compare(prev, cur, args.threshold)
+    report = format_markdown(entries, args.threshold,
+                             prev_rev=_git_rev(args.previous),
+                             cur_rev=_git_rev(args.current))
+    _emit(report, args.summary or None)
+    regressed = [e for e in entries if e["status"] == "regressed"]
+    if regressed:
+        print(f"TREND: {len(regressed)} row(s) regressed >"
+              f"{args.threshold:.0%}: "
+              + ", ".join(e["name"] for e in regressed), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -219,10 +219,30 @@ def nonblocking_collectives():
     out = req.wait(timeout=60)
     np.testing.assert_allclose(np.asarray(out), np.asarray(native),
                                atol=1e-5)
-    coll.close()
     print(f"nonblocking collectives: iallreduce({req.algorithm}, "
           f"chunks={req.num_chunks}) complete_at_issue={issued_complete}, "
           f"{req.rounds_done} rounds driven by the engine, matches psum")
+
+    # -- persistent collectives (MPI *_init / MPI_Start semantics) -----
+    # allreduce_init fixes the plan (validation, chunk layout, join) and
+    # compiles every fused round program ONCE; start(payload) re-binds a
+    # new payload to the same schedule, paying only split + dispatch.
+    # Round batching (auto from payload size) fuses consecutive rounds
+    # into one jitted dispatch — small payloads collapse to a single
+    # program per start, with multi-chunk payloads stacked through it.
+    # The handle allows one outstanding start (MPI semantics), supports
+    # cancel(), and a failed or cancelled start is restartable.
+    handle = coll.allreduce_init(x, mesh, "x", algorithm="ring", chunks=2)
+    for mul in (2.0, 3.0):
+        out = handle.start(x * mul).wait(timeout=60)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(native) * mul, atol=1e-4)
+    print(f"persistent collectives: {handle.starts} starts re-bound one "
+          f"schedule (round_batch={handle.round_batch}, "
+          f"{handle.dispatches_per_start} dispatch(es)/start), "
+          f"each matching psum")
+    handle.close()
+    coll.close()
 
 
 if __name__ == "__main__":

@@ -35,6 +35,25 @@ Chunking layouts keep outputs bit-identical to the native op:
 * all-gather — the inverse interleave on the output side;
 * all-to-all — acts on the leading block dim, so last-dim slices
   concatenate transparently.
+
+Two amortization layers close the small-payload gap (per-round
+dispatch+sync cost dominating when the wire time is microseconds):
+
+* **round batching** — ``round_batch=K`` fuses K consecutive rounds of
+  a chunk into ONE jitted dispatch (``schedules.fuse_rounds``: plain
+  composition, so outputs stay bit-identical to the unbatched rounds).
+  The default (``round_batch=None``) auto-picks from the payload size —
+  small payloads collapse to 1–2 dispatches per chunk, large payloads
+  keep per-round dispatch so chunks still pipeline.
+* **persistent schedules** — ``allreduce_init``/... return a
+  :class:`PersistentCollective` (MPI ``MPI_Allreduce_init`` + ``Start``
+  semantics, Schafer et al.'s user-level persistent schedules): the
+  plan (validation, chunk layout, join) and every fused round program
+  are fixed and compiled once, and ``start(payload)`` re-binds a new
+  payload to the same schedule paying only split+dispatch.  Carries are
+  double-buffered through jit donation: each round program donates its
+  carry input, so a steady-state start cycles two pre-warmed buffer
+  generations per chunk instead of allocating per round.
 """
 from __future__ import annotations
 
@@ -52,7 +71,7 @@ from repro.collectives import schedules as S
 from repro.core.continuations import DEFERRED, INLINE, ContinuationQueue
 from repro.core.engine import ProgressEngine, Stream, global_engine
 from repro.core.futures import jax_future
-from repro.core.request import Request
+from repro.core.request import CancelledError, Request
 
 
 # ---------------------------------------------------------------------------
@@ -86,6 +105,29 @@ def _concat_last(parts):
     if len(parts) == 1:
         return parts[0]
     return jnp.concatenate(parts, axis=-1)
+
+
+def _first(parts):
+    """Single-chunk passthrough join — plain Python, no jit dispatch."""
+    return parts[0]
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _stack_last(x, k: int, width: int):
+    """[..., k*width] -> [..., k, width]: contiguous chunks as a batch
+    dim.  Every round body is written in terms of the last dim (and the
+    [..., n, m] block view just before it), so the extra axis rides
+    through the schedule untouched — K chunks share ONE program and its
+    in-program collectives instead of K separate programs."""
+    return jnp.reshape(x, x.shape[:-1] + (k, width))
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _unstack_last(y, total: int):
+    """Inverse of ``_stack_last`` (+ drop padding): [..., k, w] ->
+    [..., total]."""
+    flat = jnp.reshape(y, y.shape[:-2] + (y.shape[-2] * y.shape[-1],))
+    return flat[..., :total] if flat.shape[-1] != total else flat
 
 
 @functools.partial(jax.jit, static_argnums=(1, 2))
@@ -146,19 +188,14 @@ def _put_block(out, cur, pos):
     return jax.lax.dynamic_update_slice(out, cur[..., None, :], start)
 
 class _Schedule:
-    """One chunk's compiled pipeline: optional init, per-round step
-    functions, optional finish — every entry a jitted shard_map program
-    carrying a pytree of arrays sharded on the leading dim."""
+    """One chunk's compiled pipeline: a tuple of jitted shard_map
+    programs (init/rounds/finish, possibly fused by round batching),
+    every entry carrying a pytree of arrays sharded on the leading
+    dim."""
 
     __slots__ = ("stages",)
 
-    def __init__(self, init, rounds, finish):
-        stages = []
-        if init is not None:
-            stages.append(init)
-        stages.extend(rounds)
-        if finish is not None:
-            stages.append(finish)
+    def __init__(self, stages=()):
         self.stages = tuple(stages)
 
     @property
@@ -166,22 +203,74 @@ class _Schedule:
         return len(self.stages)
 
 
+class _RoundStage:
+    """One raw (unjitted) round body plus whether a program *starting*
+    with it may donate its carry input.  ``donate=False`` exactly when
+    the input is the caller's payload: if padding/splitting is a no-op,
+    jit may forward the caller's buffer straight through, and donating
+    it would delete the user's array."""
+
+    __slots__ = ("fn", "donate")
+
+    def __init__(self, fn, donate: bool = True):
+        self.fn = fn
+        self.donate = donate
+
+
 def _jit_smap(fn, mesh, axis, *, donate: bool = True):
-    # donate the carry: stage inputs past the first are intermediate
+    # donate the carry: program inputs past the first are intermediate
     # buffers the pipeline owns (the previous round's outputs), so XLA
     # aliases the through-flowing arrays instead of copying the full
-    # payload once per round.  The FIRST stage of a schedule never
-    # donates: when padding/splitting is a no-op, jit may forward the
-    # caller's buffer straight through, and donating it would delete the
-    # user's input array.
+    # payload once per round — with every program donating, a running
+    # chunk cycles two live carry generations (the donated input being
+    # read, the output being written): double-buffering via aliasing.
     return jax.jit(compat.shard_map(fn, mesh=mesh, in_specs=P(axis),
                                     out_specs=P(axis)),
                    donate_argnums=(0,) if donate else ())
 
 
-# cache: (kind, algorithm-ish key, mesh, axis, n, extras) -> _Schedule.
-# jit itself caches per payload shape; this cache keeps the *function
-# objects* stable so re-issuing a collective never re-traces.
+class _RoundSchedule:
+    """Round-decomposed schedule in raw form.
+
+    ``compiled(round_batch)`` groups consecutive rounds by the batch
+    factor, fuses each group into one program body
+    (``schedules.fuse_rounds`` — plain composition, so the op sequence
+    and chunk layouts are bit-identical to the unbatched rounds) and
+    jits it as a single shard_map dispatch.  Compiled views are cached
+    per batch factor, and the _RoundSchedule itself is cached per
+    (algorithm, mesh, axis, n), so re-issuing never re-traces."""
+
+    __slots__ = ("mesh", "axis", "stages", "_compiled")
+
+    def __init__(self, mesh, axis, stages):
+        self.mesh = mesh
+        self.axis = axis
+        self.stages = tuple(stages)
+        self._compiled: dict[int, _Schedule] = {}
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.stages)
+
+    def compiled(self, round_batch: int = 1) -> _Schedule:
+        b = max(1, min(int(round_batch), len(self.stages) or 1))
+        sched = self._compiled.get(b)
+        if sched is None:
+            progs = []
+            for i in range(0, len(self.stages), b):
+                group = self.stages[i:i + b]
+                progs.append(_jit_smap(
+                    S.fuse_rounds([st.fn for st in group]),
+                    self.mesh, self.axis, donate=group[0].donate))
+            sched = _Schedule(progs)
+            self._compiled[b] = sched
+        return sched
+
+
+# cache: (kind, algorithm-ish key, mesh, axis, n, extras) ->
+# _RoundSchedule.  jit itself caches per payload shape; this cache keeps
+# the *function objects* stable so re-issuing a collective never
+# re-traces.
 _schedule_cache: dict = {}
 
 
@@ -195,12 +284,12 @@ def _cached(key, build):
 
 def _identity_schedule(mesh, axis):
     return _cached(("identity", mesh, axis),
-                   lambda: _Schedule(None, (), None))
+                   lambda: _RoundSchedule(mesh, axis, ()))
 
 
 def _recursive_doubling_schedule(mesh, axis, n):
     def build():
-        rounds = []
+        stages = []
         mask = 1
         while mask < n:
             perm = [(i, i ^ mask) for i in range(n)]
@@ -208,14 +297,14 @@ def _recursive_doubling_schedule(mesh, axis, n):
             def step(v, perm=perm):
                 return v + jax.lax.ppermute(v, axis, perm)
 
-            rounds.append(_jit_smap(step, mesh, axis, donate=mask > 1))
+            stages.append(_RoundStage(step, donate=mask > 1))
             mask <<= 1
-        return _Schedule(None, tuple(rounds), None)
+        return _RoundSchedule(mesh, axis, stages)
 
     return _cached(("rd", mesh, axis, n), build)
 
 
-def _ring_rs_init(mesh, axis, n, d):
+def _ring_rs_init(axis, n, d):
     """carry = (chunks [..., n, W/n], acc [..., W/n]) with acc = own
     starting chunk (rank r starts from chunk (r - d) mod n)."""
     def init(x):
@@ -225,10 +314,10 @@ def _ring_rs_init(mesh, axis, n, d):
         acc = _take_block(chunks, (idx - d) % n)
         return chunks, acc
 
-    return _jit_smap(init, mesh, axis, donate=False)
+    return init
 
 
-def _ring_rs_round(mesh, axis, n, d, step):
+def _ring_rs_round(axis, n, d, step):
     perm = [(i, (i + d) % n) for i in range(n)]
 
     def rnd(carry):
@@ -238,10 +327,10 @@ def _ring_rs_round(mesh, axis, n, d, step):
         acc = acc + _take_block(chunks, (idx - d * (1 + step)) % n)
         return chunks, acc
 
-    return _jit_smap(rnd, mesh, axis)
+    return rnd
 
 
-def _ring_ag_start(mesh, axis, n):
+def _ring_ag_start(axis, n):
     """AG step 0: place the (fully reduced) resident chunk at slot idx."""
     def start(carry):
         _, acc = carry
@@ -250,10 +339,10 @@ def _ring_ag_start(mesh, axis, n):
         out = _put_block(out, acc, idx)
         return out, acc
 
-    return _jit_smap(start, mesh, axis)
+    return start
 
 
-def _ring_ag_round(mesh, axis, n, d, step):
+def _ring_ag_round(axis, n, d, step):
     perm = [(i, (i + d) % n) for i in range(n)]
 
     def rnd(carry):
@@ -264,33 +353,36 @@ def _ring_ag_round(mesh, axis, n, d, step):
         out = _put_block(out, cur, pos)
         return out, cur
 
-    return _jit_smap(rnd, mesh, axis)
+    return rnd
 
 
-def _ring_finish(mesh, axis):
+def _ring_finish():
     def finish(carry):
         out, _ = carry
         return jnp.reshape(out, out.shape[:-2] + (out.shape[-2] * out.shape[-1],))
 
-    return _jit_smap(finish, mesh, axis)
+    return finish
 
 
 def _ring_allreduce_schedule(mesh, axis, n, reverse):
     """2n-1 rounds: n-1 reduce-scatter, 1 AG placement, n-1 all-gather."""
     def build():
         d = -1 if reverse else 1
-        rounds = [_ring_rs_round(mesh, axis, n, d, s) for s in range(1, n)]
-        rounds.append(_ring_ag_start(mesh, axis, n))
-        rounds.extend(_ring_ag_round(mesh, axis, n, d, s) for s in range(1, n))
-        return _Schedule(_ring_rs_init(mesh, axis, n, d), tuple(rounds),
-                         _ring_finish(mesh, axis))
+        stages = [_RoundStage(_ring_rs_init(axis, n, d), donate=False)]
+        stages += [_RoundStage(_ring_rs_round(axis, n, d, s))
+                   for s in range(1, n)]
+        stages.append(_RoundStage(_ring_ag_start(axis, n)))
+        stages += [_RoundStage(_ring_ag_round(axis, n, d, s))
+                   for s in range(1, n)]
+        stages.append(_RoundStage(_ring_finish()))
+        return _RoundSchedule(mesh, axis, stages)
 
     return _cached(("ring", mesh, axis, n, reverse), build)
 
 
 def _halving_doubling_schedule(mesh, axis, n):
     def build():
-        rounds = []
+        stages = []
         first = True
         mask = n >> 1
         while mask >= 1:                      # reduce-scatter by halving
@@ -306,7 +398,7 @@ def _halving_doubling_schedule(mesh, axis, n):
                 mine = jnp.where(keep_hi, hi, lo)
                 return mine + recv
 
-            rounds.append(_jit_smap(halve, mesh, axis, donate=not first))
+            stages.append(_RoundStage(halve, donate=not first))
             first = False
             mask >>= 1
         mask = 1
@@ -321,22 +413,23 @@ def _halving_doubling_schedule(mesh, axis, n):
                 hi = jnp.where(keep_hi, cur, recv)
                 return jnp.concatenate([lo, hi], axis=-1)
 
-            rounds.append(_jit_smap(double, mesh, axis))
+            stages.append(_RoundStage(double))
             mask <<= 1
-        return _Schedule(None, tuple(rounds), None)
+        return _RoundSchedule(mesh, axis, stages)
 
     return _cached(("hd", mesh, axis, n), build)
 
 
 def _ring_reduce_scatter_schedule(mesh, axis, n):
     def build():
-        rounds = [_ring_rs_round(mesh, axis, n, 1, s) for s in range(1, n)]
-
         def finish(carry):
             return carry[1]
 
-        return _Schedule(_ring_rs_init(mesh, axis, n, 1), tuple(rounds),
-                         _jit_smap(finish, mesh, axis))
+        stages = [_RoundStage(_ring_rs_init(axis, n, 1), donate=False)]
+        stages += [_RoundStage(_ring_rs_round(axis, n, 1, s))
+                   for s in range(1, n)]
+        stages.append(_RoundStage(finish))
+        return _RoundSchedule(mesh, axis, stages)
 
     return _cached(("rs", mesh, axis, n), build)
 
@@ -348,10 +441,11 @@ def _ring_all_gather_schedule(mesh, axis, n):
             out = jnp.zeros(x.shape[:-1] + (n, x.shape[-1]), x.dtype)
             return _put_block(out, x, idx), x
 
-        rounds = [_ring_ag_round(mesh, axis, n, 1, s) for s in range(1, n)]
-        return _Schedule(_jit_smap(init, mesh, axis, donate=False),
-                         tuple(rounds),
-                         _ring_finish(mesh, axis))
+        stages = [_RoundStage(init, donate=False)]
+        stages += [_RoundStage(_ring_ag_round(axis, n, 1, s))
+                   for s in range(1, n)]
+        stages.append(_RoundStage(_ring_finish()))
+        return _RoundSchedule(mesh, axis, stages)
 
     return _cached(("ag", mesh, axis, n), build)
 
@@ -362,7 +456,7 @@ def _bruck_alltoall_schedule(mesh, axis, n):
             idx = S._axis_index(axis)
             return jnp.take(x, (jnp.arange(n) + idx) % n, axis=0)
 
-        rounds = []
+        stages = [_RoundStage(init, donate=False)]
         step = 1
         while step < n:
             perm = [(i, (i + step) % n) for i in range(n)]
@@ -373,15 +467,15 @@ def _bruck_alltoall_schedule(mesh, axis, n):
                 sel = jnp.asarray(move).reshape((n,) + (1,) * (x.ndim - 1))
                 return jnp.where(sel, moved, x)
 
-            rounds.append(_jit_smap(rnd, mesh, axis))
+            stages.append(_RoundStage(rnd))
             step <<= 1
 
         def finish(x):
             idx = S._axis_index(axis)
             return jnp.take(x, (idx - jnp.arange(n)) % n, axis=0)
 
-        return _Schedule(_jit_smap(init, mesh, axis, donate=False),
-                         tuple(rounds), _jit_smap(finish, mesh, axis))
+        stages.append(_RoundStage(finish))
+        return _RoundSchedule(mesh, axis, stages)
 
     return _cached(("bruck", mesh, axis, n), build)
 
@@ -395,45 +489,99 @@ class CollectiveRequest(Request):
 
     Carries the collective stream so ``wait()`` (and ``engine.wait``
     callers who pass ``req.stream``) progress the right serial context;
-    ``rounds_done``/``rounds_total`` expose pipeline position for stats
-    and tests."""
+    ``rounds_done``/``rounds_total`` expose pipeline position (in
+    *dispatches* — with round batching one dispatch covers several
+    algorithm rounds) for stats and tests."""
 
-    __slots__ = ("engine", "stream", "queue", "op", "algorithm",
-                 "num_chunks", "rounds_total", "rounds_done", "_fail_lock")
+    __slots__ = ("engine", "stream", "queue", "ctx", "op", "algorithm",
+                 "num_chunks", "rounds_total", "rounds_done", "_fail_lock",
+                 "_cancelled")
 
     def __init__(self, engine: ProgressEngine, stream: Stream, queue,
                  op: str, algorithm: str, num_chunks: int,
-                 rounds_total: int):
+                 rounds_total: int, ctx=None):
         super().__init__(tag=f"i{op}")
         self.engine = engine
         self.stream = stream
         self.queue = queue
+        self.ctx = ctx
         self.op = op
         self.algorithm = algorithm
         self.num_chunks = num_chunks
         self.rounds_total = rounds_total
         self.rounds_done = 0
         self._fail_lock = threading.Lock()
+        self._cancelled = False
+
+    @property
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+    def cancel(self) -> None:
+        """MPI_Cancel + MPI_Wait semantics: complete the request with
+        ``CancelledError`` so waiters return instead of spinning.
+        Already-dispatched round programs retire harmlessly — their
+        completion continuations observe the completed request and
+        abandon the chunk instead of dispatching further rounds.  A
+        persistent handle whose active start was cancelled is
+        restartable (fail-then-restart safe)."""
+        with self._fail_lock:
+            if self._complete:
+                return
+            self._cancelled = True
+            self.fail(CancelledError(f"{self.tag} cancelled"))
+        if self.ctx is not None:
+            self.ctx.cancelled += 1
 
     def wait(self, engine=None, stream=None, timeout: float | None = None):
         """MPI_Wait: drive the collective's stream until complete.
 
-        A DEFERRED queue needs its ready list drained by an owner; when
-        no executor worker does that, the waiter must — otherwise the
-        round chain stalls forever with everything 'ready'."""
+        Two refinements over the generic ``engine.wait`` loop: a
+        DEFERRED queue is drained by the waiter (the queue is
+        exactly-once under concurrent drains, so this is safe even with
+        an executor attached — and without one the round chain would
+        stall with everything 'ready'), and when a progress sweep finds
+        nothing to complete — the in-flight round program is still
+        executing on the devices — the waiter *parks* on the oldest
+        not-yet-ready round's device arrays (a GIL-free blocking wait)
+        instead of re-polling.  On oversubscribed CPU hosts the busy
+        spin competes for cores with the very device threads running the
+        collective; parking returns them.  Parking is bounded by one
+        in-flight round program, so ``timeout`` is checked between
+        rounds (it can overshoot by at most one round's runtime); tasks
+        whose state isn't device arrays fall back to the poll loop."""
+        import time
+
+        from repro.core.futures import _arrays_ready
         eng = engine if engine is not None else self.engine
         s = stream if stream is not None else self.stream
         q = self.queue
-        if q is not None and q.policy == DEFERRED:
-            import time
-            t0 = time.monotonic()
-            while not self.is_complete:
-                eng._advance(s)
-                q.drain()
-                if timeout is not None and time.monotonic() - t0 > timeout:
-                    raise TimeoutError(f"wait timed out after {timeout}s")
-            return self.value()
-        return eng.wait(self, stream=s, timeout=timeout)
+        deferred = q is not None and q.policy == DEFERRED
+        ex = eng.executor
+        t0 = time.monotonic()
+        while not self.is_complete:
+            owned = ex is not None and ex.running and ex.owns(s)
+            made = 0 if owned else eng.progress(s)
+            if deferred:
+                made += q.drain()
+            if timeout is not None and not self.is_complete \
+                    and time.monotonic() - t0 > timeout:
+                # completion is re-checked first: a request that finished
+                # during this very sweep returns its result, never a
+                # spurious TimeoutError
+                raise TimeoutError(f"wait timed out after {timeout}s")
+            if made or self.is_complete:
+                continue
+            with s._lock:
+                states = [t.state for t in s._tasks if t.state is not None]
+            busy = next((st for st in states if not _arrays_ready(st)), None)
+            if busy is not None:
+                jax.block_until_ready(busy)
+            elif owned:
+                # everything ready but not yet retired: the workers'
+                # next sweep will do it — yield instead of hot-spinning
+                time.sleep(20e-6)
+        return self.value()
 
     def __repr__(self):
         return (f"CollectiveRequest({self.op}/{self.algorithm}, "
@@ -518,8 +666,9 @@ class _ChunkPipeline:
             self._fail(exc)
             return
         with self.req._fail_lock:
-            if not self.req.is_complete:
-                self.req.complete(result)
+            if self.req.is_complete:
+                return                # lost the race to cancel()/fail()
+            self.req.complete(result)
         self.ctx.completed += 1
 
 
@@ -547,6 +696,201 @@ def _check_payload(x, op: str) -> None:
             f"i{op}: payload must be at least 2-D ([sharded_dim, ..., "
             f"payload_dim]), got shape {tuple(x.shape)}; reshape(-1, 1) "
             f"scalars-per-rank or add a trailing payload dim")
+
+
+# ---------------------------------------------------------------------------
+# Issue plans (everything about a collective that does NOT depend on the
+# payload *values* — so persistent handles can fix it once)
+# ---------------------------------------------------------------------------
+
+class _Plan:
+    """Issue-invariant description of one collective for one payload
+    signature (shape, dtype, mesh, axis): the chunk split, the raw
+    per-chunk round schedules (compiled per the resolved round-batch
+    factor at issue/init time) and the join.  All validation and
+    heuristics happen when the plan is built; issuing against a plan is
+    pure split + dispatch."""
+
+    __slots__ = ("op", "algorithm", "shape", "dtype", "mesh", "axis",
+                 "schedules", "split", "join", "payload_bytes",
+                 "round_batch")
+
+    def __init__(self, op, algorithm, shape, dtype, mesh, axis,
+                 schedules, split, join, payload_bytes, round_batch):
+        self.op = op
+        self.algorithm = algorithm
+        self.shape = shape
+        self.dtype = dtype
+        self.mesh = mesh
+        self.axis = axis
+        self.schedules = schedules
+        self.split = split
+        self.join = join
+        self.payload_bytes = payload_bytes
+        self.round_batch = round_batch
+
+    @property
+    def num_rounds(self) -> int:
+        return max((s.num_rounds for s in self.schedules), default=0)
+
+
+def _payload_bytes(shape, dtype) -> int:
+    size = 1
+    for s in shape:
+        size *= int(s)
+    try:
+        return size * jnp.dtype(dtype).itemsize
+    except TypeError:
+        return size * 4
+
+
+def _resolve_round_batch(round_batch, payload_bytes: int,
+                         num_rounds: int) -> int:
+    """None / <=0 means auto: pick from the payload size (small payloads
+    collapse to 1–2 dispatches per chunk, large keep per-round)."""
+    if round_batch is None or int(round_batch) <= 0:
+        return S.auto_round_batch(payload_bytes, num_rounds)
+    return int(round_batch)
+
+
+def _plan_allreduce(mesh, axis: str, shape, dtype, algorithm: str,
+                    chunks: int, round_batch=None) -> _Plan:
+    n = _axis_len(mesh, axis)
+    algorithm = S.resolve_algorithm(algorithm, n)
+    chunks = max(1, int(chunks))
+    D = shape[-1]
+    nbytes = _payload_bytes(shape, dtype)
+    if n == 1:
+        return _Plan("allreduce", algorithm, tuple(shape), dtype, mesh,
+                     axis, [_identity_schedule(mesh, axis)],
+                     lambda x: [x], _first, nbytes, 1)
+    if algorithm == "recursive_doubling":
+        base = _recursive_doubling_schedule(mesh, axis, n)
+        per = -(-D // chunks)        # rd has no per-rank block structure
+    else:
+        # ring family (+ halving/doubling): chunk width a multiple of n
+        # so every chunk splits evenly into per-rank blocks
+        per = -(-D // (n * chunks)) * n
+        if algorithm == "halving_doubling":
+            base = _halving_doubling_schedule(mesh, axis, n)
+        else:
+            base = _ring_allreduce_schedule(mesh, axis, n, False)
+    pad_to = per * chunks
+    batch = _resolve_round_batch(round_batch, nbytes, base.num_rounds)
+    if chunks == 1:
+        if pad_to == D:
+            split = lambda x: [x]                               # noqa: E731
+            join = _first
+        else:
+            split = lambda x: [_pad_last_to(x, pad_to)]         # noqa: E731
+            join = lambda parts: _slice_last(parts[0], D)       # noqa: E731
+        scheds = [base]
+    elif algorithm != "bidir" and batch >= base.num_rounds:
+        # chunk fusion for the fully-batched (small payload) regime: all
+        # K chunks ride ONE program as a stacked batch dim, cutting the
+        # in-program collective count K×.  Bit-identical to the
+        # per-chunk issue: every element's cross-rank summation order
+        # depends only on ring position / partner masks, never on which
+        # chunk the element landed in.
+        split = lambda x: [_stack_last(                         # noqa: E731
+            _pad_last_to(x, pad_to), chunks, per)]
+        join = lambda parts: _unstack_last(parts[0], D)         # noqa: E731
+        scheds = [base]
+    elif algorithm == "recursive_doubling":
+        # no divisibility constraint: contiguous near-equal slices
+        widths = [len(r) for r in _split_ranges(D, min(chunks, D))]
+        split = lambda x: _contiguous_chunks(x, widths)         # noqa: E731
+        scheds = [base] * len(widths)
+        join = _concat_last
+    else:
+        split = lambda x: list(_split_last(                     # noqa: E731
+            _pad_last_to(x, pad_to), chunks, per))
+        if algorithm == "bidir":
+            # both ICI directions at once: alternate ring direction
+            # per chunk (chunks=1 degenerates to a forward ring)
+            scheds = [_ring_allreduce_schedule(mesh, axis, n, bool(c % 2))
+                      for c in range(chunks)]
+        else:
+            scheds = [base] * chunks
+        join = lambda parts: _slice_last(                       # noqa: E731
+            _concat_last(tuple(parts)), D)
+    return _Plan("allreduce", algorithm, tuple(shape), dtype, mesh, axis,
+                 scheds, split, join, nbytes, batch)
+
+
+def _plan_reduce_scatter(mesh, axis: str, shape, dtype, chunks: int,
+                         round_batch=None) -> _Plan:
+    n = _axis_len(mesh, axis)
+    D = shape[-1]
+    if D % n:
+        raise ValueError(
+            f"ireduce_scatter: last dim {D} not divisible by "
+            f"axis size {n}")
+    nbytes = _payload_bytes(shape, dtype)
+    if n == 1:
+        return _Plan("reduce_scatter", "ring", tuple(shape), dtype, mesh,
+                     axis, [_identity_schedule(mesh, axis)],
+                     lambda x: [x], _first, nbytes, 1)
+    k = _largest_divisor_leq(D // n, max(1, int(chunks)))
+    base = _ring_reduce_scatter_schedule(mesh, axis, n)
+    batch = _resolve_round_batch(round_batch, nbytes, base.num_rounds)
+    if k == 1:
+        split = lambda x: [x]                                   # noqa: E731
+        join = _first
+    else:
+        split = lambda x: list(_rs_split(x, n, k))              # noqa: E731
+        join = lambda parts: _rs_join(tuple(parts))             # noqa: E731
+    return _Plan("reduce_scatter", "ring", tuple(shape), dtype, mesh, axis,
+                 [base] * k, split, join, nbytes, batch)
+
+
+def _plan_allgather(mesh, axis: str, shape, dtype, chunks: int,
+                    round_batch=None) -> _Plan:
+    n = _axis_len(mesh, axis)
+    nbytes = _payload_bytes(shape, dtype)
+    if n == 1:
+        return _Plan("allgather", "ring", tuple(shape), dtype, mesh, axis,
+                     [_identity_schedule(mesh, axis)],
+                     lambda x: [x], _first, nbytes, 1)
+    d = shape[-1]
+    k = _largest_divisor_leq(d, max(1, int(chunks)))
+    base = _ring_all_gather_schedule(mesh, axis, n)
+    batch = _resolve_round_batch(round_batch, nbytes, base.num_rounds)
+    if k == 1:
+        split = lambda x: [x]                                   # noqa: E731
+        join = _first
+    else:
+        split = lambda x: list(_split_last(x, k, d // k))       # noqa: E731
+        join = lambda parts: _ag_join(tuple(parts), n)          # noqa: E731
+    return _Plan("allgather", "ring", tuple(shape), dtype, mesh, axis,
+                 [base] * k, split, join, nbytes, batch)
+
+
+def _plan_alltoall(mesh, axis: str, shape, dtype, chunks: int,
+                   round_batch=None) -> _Plan:
+    n = _axis_len(mesh, axis)
+    lead = shape[0]
+    if lead % n:
+        raise ValueError(
+            f"ialltoall: leading dim {lead} not divisible by "
+            f"axis size {n}")
+    nbytes = _payload_bytes(shape, dtype)
+    if n == 1:
+        return _Plan("alltoall", "bruck", tuple(shape), dtype, mesh, axis,
+                     [_identity_schedule(mesh, axis)],
+                     lambda x: [x], _first, nbytes, 1)
+    D = shape[-1]
+    widths = [len(r) for r in _split_ranges(D, min(max(1, int(chunks)), D))]
+    base = _bruck_alltoall_schedule(mesh, axis, n)
+    batch = _resolve_round_batch(round_batch, nbytes, base.num_rounds)
+    if len(widths) == 1:
+        split = lambda x: [x]                                   # noqa: E731
+        join = _first
+    else:
+        split = lambda x: _contiguous_chunks(x, widths)         # noqa: E731
+        join = _concat_last
+    return _Plan("alltoall", "bruck", tuple(shape), dtype, mesh, axis,
+                 [base] * len(widths), split, join, nbytes, batch)
 
 
 class UserCollectives:
@@ -585,119 +929,120 @@ class UserCollectives:
         self.issued = 0
         self.completed = 0
         self.failed = 0
+        self.cancelled = 0
         self._closed = False
 
     # -- the collectives ---------------------------------------------------
     def iallreduce(self, x, mesh, axis: str, *, algorithm: str = "ring",
-                   chunks: int = 1) -> CollectiveRequest:
+                   chunks: int = 1,
+                   round_batch: int | None = None) -> CollectiveRequest:
         """Nonblocking allreduce of ``x`` (leading dim sharded on
         ``axis``), bit-identical to ``psum`` under the same shard_map
         layout.  ``algorithm`` is any ``schedules.ALGORITHMS`` key;
         power-of-two-only algorithms fall back to ring with a warning on
-        other axis sizes (eager — nothing raises from inside jit)."""
+        other axis sizes (eager — nothing raises from inside jit).
+        ``round_batch`` fuses that many consecutive rounds into one
+        jitted dispatch per chunk (None/0: auto from payload size)."""
         self._check_open()
         _check_payload(x, "allreduce")
-        n = _axis_len(mesh, axis)
-        algorithm = S.resolve_algorithm(algorithm, n)
-        chunks = max(1, int(chunks))
-        D = x.shape[-1]
-        if n == 1:
-            scheds = [_identity_schedule(mesh, axis)]
-            payloads = [x]
-            join = _concat_last
-        elif algorithm == "recursive_doubling":
-            # no divisibility constraint: contiguous near-equal slices
-            widths = [len(r) for r in _split_ranges(D, min(chunks, D))]
-            payloads = _contiguous_chunks(x, widths)
-            scheds = [_recursive_doubling_schedule(mesh, axis, n)] * len(payloads)
-            join = _concat_last
-        else:
-            # ring family (+ halving/doubling): pad to a multiple of n*K
-            # so every chunk splits evenly into per-rank blocks
-            per = -(-D // (n * chunks)) * n          # chunk width
-            xp = _pad_last_to(x, per * chunks)
-            payloads = list(_split_last(xp, chunks, per))
-            if algorithm == "bidir":
-                # both ICI directions at once: alternate ring direction
-                # per chunk (chunks=1 degenerates to a forward ring)
-                scheds = [_ring_allreduce_schedule(mesh, axis, n, bool(c % 2))
-                          for c in range(chunks)]
-            elif algorithm == "halving_doubling":
-                scheds = [_halving_doubling_schedule(mesh, axis, n)] * chunks
-            else:
-                scheds = [_ring_allreduce_schedule(mesh, axis, n, False)] * chunks
-            join = lambda parts: _slice_last(_concat_last(tuple(parts)), D)  # noqa: E731
-        return self._issue("allreduce", algorithm, scheds, payloads, join)
+        plan = _plan_allreduce(mesh, axis, tuple(x.shape),
+                               getattr(x, "dtype", jnp.float32),
+                               algorithm, chunks, round_batch)
+        return self._issue_plan(plan, x)
 
-    def ireduce_scatter(self, x, mesh, axis: str, *,
-                        chunks: int = 1) -> CollectiveRequest:
+    def ireduce_scatter(self, x, mesh, axis: str, *, chunks: int = 1,
+                        round_batch: int | None = None) -> CollectiveRequest:
         """Nonblocking ring reduce-scatter (matches tiled
         ``psum_scatter`` on the last dim).  Requires the last dim
         divisible by the axis size (validated eagerly)."""
         self._check_open()
         _check_payload(x, "reduce_scatter")
-        n = _axis_len(mesh, axis)
-        D = x.shape[-1]
-        if D % n:
-            raise ValueError(
-                f"ireduce_scatter: last dim {D} not divisible by "
-                f"axis size {n}")
-        if n == 1:
-            return self._issue("reduce_scatter", "ring",
-                               [_identity_schedule(mesh, axis)], [x],
-                               _concat_last)
-        k = _largest_divisor_leq(D // n, max(1, int(chunks)))
-        payloads = list(_rs_split(x, n, k))
-        scheds = [_ring_reduce_scatter_schedule(mesh, axis, n)] * k
-        return self._issue("reduce_scatter", "ring", scheds, payloads,
-                           lambda parts: _rs_join(tuple(parts)))
+        plan = _plan_reduce_scatter(mesh, axis, tuple(x.shape),
+                                    getattr(x, "dtype", jnp.float32),
+                                    chunks, round_batch)
+        return self._issue_plan(plan, x)
 
-    def iallgather(self, x, mesh, axis: str, *,
-                   chunks: int = 1) -> CollectiveRequest:
+    def iallgather(self, x, mesh, axis: str, *, chunks: int = 1,
+                   round_batch: int | None = None) -> CollectiveRequest:
         """Nonblocking ring all-gather (matches tiled ``all_gather`` on
         the last dim)."""
         self._check_open()
         _check_payload(x, "allgather")
-        n = _axis_len(mesh, axis)
-        if n == 1:
-            return self._issue("allgather", "ring",
-                               [_identity_schedule(mesh, axis)], [x],
-                               _concat_last)
-        d = x.shape[-1]
-        k = _largest_divisor_leq(d, max(1, int(chunks)))
-        payloads = list(_split_last(x, k, d // k))
-        scheds = [_ring_all_gather_schedule(mesh, axis, n)] * k
-        return self._issue("allgather", "ring", scheds, payloads,
-                           lambda parts: _ag_join(tuple(parts), n))
+        plan = _plan_allgather(mesh, axis, tuple(x.shape),
+                               getattr(x, "dtype", jnp.float32),
+                               chunks, round_batch)
+        return self._issue_plan(plan, x)
 
-    def ialltoall(self, x, mesh, axis: str, *,
-                  chunks: int = 1) -> CollectiveRequest:
+    def ialltoall(self, x, mesh, axis: str, *, chunks: int = 1,
+                  round_batch: int | None = None) -> CollectiveRequest:
         """Nonblocking Bruck all-to-all over the leading block dim
         (matches ``bruck_alltoall`` / native ``all_to_all``).  The
         global leading dim must be n·n blocks (n per device)."""
         self._check_open()
         _check_payload(x, "alltoall")
-        n = _axis_len(mesh, axis)
-        lead = x.shape[0]
-        if lead % n:
-            raise ValueError(
-                f"ialltoall: leading dim {lead} not divisible by "
-                f"axis size {n}")
-        if n == 1:
-            return self._issue("alltoall", "bruck",
-                               [_identity_schedule(mesh, axis)], [x],
-                               _concat_last)
-        D = x.shape[-1]
-        widths = [len(r) for r in _split_ranges(D, min(max(1, int(chunks)), D))]
-        payloads = _contiguous_chunks(x, widths)
-        scheds = [_bruck_alltoall_schedule(mesh, axis, n)] * len(payloads)
-        return self._issue("alltoall", "bruck", scheds, payloads, _concat_last)
+        plan = _plan_alltoall(mesh, axis, tuple(x.shape),
+                              getattr(x, "dtype", jnp.float32),
+                              chunks, round_batch)
+        return self._issue_plan(plan, x)
+
+    # -- persistent handles (MPI *_init / MPI_Start) -----------------------
+    def allreduce_init(self, x, mesh, axis: str, *,
+                       algorithm: str = "ring", chunks: int = 1,
+                       round_batch: int | None = None,
+                       warmup: bool = True) -> "PersistentCollective":
+        """MPI_Allreduce_init: build a persistent schedule for payloads
+        shaped like ``x`` (an array or ShapeDtypeStruct — only
+        shape/dtype are read).  ``start(payload)`` re-issues the
+        pre-compiled schedule; see :class:`PersistentCollective`.  Two
+        handles with the same signature share round programs through the
+        schedule cache, so a second init is cheap."""
+        self._check_open()
+        _check_payload(x, "allreduce")
+        plan = _plan_allreduce(mesh, axis, tuple(x.shape),
+                               getattr(x, "dtype", jnp.float32),
+                               algorithm, chunks, round_batch)
+        return PersistentCollective(self, plan, warmup=warmup)
+
+    def reduce_scatter_init(self, x, mesh, axis: str, *, chunks: int = 1,
+                            round_batch: int | None = None,
+                            warmup: bool = True) -> "PersistentCollective":
+        self._check_open()
+        _check_payload(x, "reduce_scatter")
+        plan = _plan_reduce_scatter(mesh, axis, tuple(x.shape),
+                                    getattr(x, "dtype", jnp.float32),
+                                    chunks, round_batch)
+        return PersistentCollective(self, plan, warmup=warmup)
+
+    def allgather_init(self, x, mesh, axis: str, *, chunks: int = 1,
+                       round_batch: int | None = None,
+                       warmup: bool = True) -> "PersistentCollective":
+        self._check_open()
+        _check_payload(x, "allgather")
+        plan = _plan_allgather(mesh, axis, tuple(x.shape),
+                               getattr(x, "dtype", jnp.float32),
+                               chunks, round_batch)
+        return PersistentCollective(self, plan, warmup=warmup)
+
+    def alltoall_init(self, x, mesh, axis: str, *, chunks: int = 1,
+                      round_batch: int | None = None,
+                      warmup: bool = True) -> "PersistentCollective":
+        self._check_open()
+        _check_payload(x, "alltoall")
+        plan = _plan_alltoall(mesh, axis, tuple(x.shape),
+                              getattr(x, "dtype", jnp.float32),
+                              chunks, round_batch)
+        return PersistentCollective(self, plan, warmup=warmup)
 
     # -- machinery ---------------------------------------------------------
+    def _issue_plan(self, plan: _Plan, x) -> CollectiveRequest:
+        scheds = [rs.compiled(plan.round_batch) for rs in plan.schedules]
+        return self._issue(plan.op, plan.algorithm, scheds, plan.split(x),
+                           plan.join)
+
     def _issue(self, op, algorithm, scheds, payloads, join) -> CollectiveRequest:
         req = CollectiveRequest(self.engine, self.stream, self.queue, op,
                                 algorithm, len(payloads),
-                                sum(s.num_rounds for s in scheds))
+                                sum(s.num_rounds for s in scheds), ctx=self)
         self.issued += 1
         _ChunkPipeline(self, req, scheds, payloads, join)
         return req
@@ -709,7 +1054,7 @@ class UserCollectives:
     # -- lifecycle ---------------------------------------------------------
     @property
     def in_flight(self) -> int:
-        return self.issued - self.completed - self.failed
+        return self.issued - self.completed - self.failed - self.cancelled
 
     def close(self, *, drain: bool = True, timeout: float | None = 30.0) -> None:
         """Drain in-flight collectives, then release the stream/queue.
@@ -759,7 +1104,115 @@ class UserCollectives:
 
     def __repr__(self):
         return (f"UserCollectives({self.name!r}, issued={self.issued}, "
-                f"completed={self.completed}, failed={self.failed})")
+                f"completed={self.completed}, failed={self.failed}, "
+                f"cancelled={self.cancelled})")
+
+
+class PersistentCollective:
+    """Persistent collective schedule: MPI ``*_init`` + ``MPI_Start``
+    semantics on the progress engine (Schafer et al.'s user-level
+    persistent schedules).
+
+    Built once per (op, payload shape, dtype, algorithm, chunks,
+    round-batch, mesh, axis): the plan — validation, chunk-split layout,
+    join — is fixed, the fused round programs are instantiated, and with
+    ``warmup=True`` compiled by one throwaway start on zeros, so the
+    first *real* start never traces or compiles.  The warm-up also
+    cycles each chunk's donated carry chain once, materializing the two
+    buffer generations per chunk (donated input being read, output being
+    written) that every subsequent start re-uses from XLA's pool — the
+    pre-allocated double-buffered carries.
+
+    Lifecycle: at most ONE outstanding start (MPI semantics — starting
+    an active persistent request is erroneous and raises);
+    ``cancel()`` cancels the active request; a handle whose last start
+    failed or was cancelled is restartable with the next ``start``
+    (fail-then-restart safe: abandoned round tasks retire on later
+    progress sweeps and never touch the new start's chunks)."""
+
+    __slots__ = ("ctx", "plan", "round_batch", "schedules", "active",
+                 "starts", "_closed")
+
+    def __init__(self, ctx: UserCollectives, plan: _Plan, *,
+                 warmup: bool = True):
+        self.ctx = ctx
+        self.plan = plan
+        self.round_batch = plan.round_batch
+        self.schedules = [rs.compiled(self.round_batch)
+                          for rs in plan.schedules]
+        self.active: CollectiveRequest | None = None
+        self.starts = 0
+        self._closed = False
+        if warmup:
+            self.start(jnp.zeros(plan.shape, plan.dtype)).wait(timeout=600)
+            self.starts = 0          # the warm-up doesn't count
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def op(self) -> str:
+        return self.plan.op
+
+    @property
+    def algorithm(self) -> str:
+        return self.plan.algorithm
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self.schedules)
+
+    @property
+    def dispatches_per_start(self) -> int:
+        """Jitted dispatches one start costs (rounds after fusion)."""
+        return sum(s.num_rounds for s in self.schedules)
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self, payload) -> CollectiveRequest:
+        """MPI_Start: re-bind ``payload`` to the persistent schedule and
+        issue.  Raises while the previous start is still in flight (a
+        failed or cancelled one is complete, hence restartable)."""
+        if self._closed:
+            raise RuntimeError(f"{self!r} is closed")
+        self.ctx._check_open()
+        active = self.active
+        if active is not None and not active.is_complete:
+            raise RuntimeError(
+                f"persistent {self.plan.op} already has an active start "
+                f"(MPI semantics: complete or cancel it before restarting)")
+        if self.plan.shape is not None and hasattr(payload, "shape") \
+                and tuple(payload.shape) != self.plan.shape:
+            raise ValueError(
+                f"persistent {self.plan.op} built for shape "
+                f"{self.plan.shape}, got {tuple(payload.shape)}")
+        if self.plan.dtype is not None and hasattr(payload, "dtype") \
+                and jnp.dtype(payload.dtype) != jnp.dtype(self.plan.dtype):
+            raise ValueError(
+                f"persistent {self.plan.op} built for dtype "
+                f"{jnp.dtype(self.plan.dtype)}, got "
+                f"{jnp.dtype(payload.dtype)}")
+        req = self.ctx._issue(self.plan.op, self.plan.algorithm,
+                              self.schedules, self.plan.split(payload),
+                              self.plan.join)
+        self.active = req
+        self.starts += 1
+        return req
+
+    def cancel(self) -> None:
+        """MPI_Cancel on the active start (no-op when idle/complete)."""
+        if self.active is not None:
+            self.active.cancel()
+
+    def close(self) -> None:
+        """Release the handle: further starts raise.  The underlying
+        round programs stay in the shared schedule cache (other handles
+        with the same signature keep using them)."""
+        self._closed = True
+        self.active = None
+
+    def __repr__(self):
+        return (f"PersistentCollective({self.plan.op}/"
+                f"{self.plan.algorithm}, shape={self.plan.shape}, "
+                f"chunks={self.num_chunks}, "
+                f"round_batch={self.round_batch}, starts={self.starts})")
 
 
 def _split_ranges(total: int, k: int):
@@ -811,25 +1264,42 @@ def default_collectives(engine: Optional[ProgressEngine] = None,
 
 
 def iallreduce(x, mesh, axis: str, *, engine: Optional[ProgressEngine] = None,
-               algorithm: str = "ring", chunks: int = 1) -> CollectiveRequest:
+               algorithm: str = "ring", chunks: int = 1,
+               round_batch: int | None = None) -> CollectiveRequest:
     return default_collectives(engine).iallreduce(
-        x, mesh, axis, algorithm=algorithm, chunks=chunks)
+        x, mesh, axis, algorithm=algorithm, chunks=chunks,
+        round_batch=round_batch)
 
 
 def ireduce_scatter(x, mesh, axis: str, *,
                     engine: Optional[ProgressEngine] = None,
-                    chunks: int = 1) -> CollectiveRequest:
-    return default_collectives(engine).ireduce_scatter(x, mesh, axis,
-                                                       chunks=chunks)
+                    chunks: int = 1,
+                    round_batch: int | None = None) -> CollectiveRequest:
+    return default_collectives(engine).ireduce_scatter(
+        x, mesh, axis, chunks=chunks, round_batch=round_batch)
 
 
 def iallgather(x, mesh, axis: str, *,
                engine: Optional[ProgressEngine] = None,
-               chunks: int = 1) -> CollectiveRequest:
-    return default_collectives(engine).iallgather(x, mesh, axis, chunks=chunks)
+               chunks: int = 1,
+               round_batch: int | None = None) -> CollectiveRequest:
+    return default_collectives(engine).iallgather(
+        x, mesh, axis, chunks=chunks, round_batch=round_batch)
 
 
 def ialltoall(x, mesh, axis: str, *,
               engine: Optional[ProgressEngine] = None,
-              chunks: int = 1) -> CollectiveRequest:
-    return default_collectives(engine).ialltoall(x, mesh, axis, chunks=chunks)
+              chunks: int = 1,
+              round_batch: int | None = None) -> CollectiveRequest:
+    return default_collectives(engine).ialltoall(
+        x, mesh, axis, chunks=chunks, round_batch=round_batch)
+
+
+def allreduce_init(x, mesh, axis: str, *,
+                   engine: Optional[ProgressEngine] = None,
+                   algorithm: str = "ring", chunks: int = 1,
+                   round_batch: int | None = None,
+                   warmup: bool = True) -> PersistentCollective:
+    return default_collectives(engine).allreduce_init(
+        x, mesh, axis, algorithm=algorithm, chunks=chunks,
+        round_batch=round_batch, warmup=warmup)

@@ -161,10 +161,17 @@ class TreeReduction:
 
     def wait(self, timeout: float | None = None):
         """Drive the engine until every bucket reduced; returns the
-        reduced gradient pytree (leaves deduplicated back to one copy)."""
-        coll = self.reducer.coll
-        coll.engine.wait_all(self.requests, stream=coll.stream,
-                             timeout=timeout)
+        reduced gradient pytree (leaves deduplicated back to one copy).
+        Waits per-request (``CollectiveRequest.wait``) so the waiter can
+        park on in-flight round programs instead of busy-polling; order
+        doesn't matter — every bucket must finish.  ``timeout`` is one
+        overall deadline across the whole set, not per bucket."""
+        import time
+        deadline = None if timeout is None else time.monotonic() + timeout
+        for req in self.requests:
+            remaining = None if deadline is None else \
+                max(0.0, deadline - time.monotonic())
+            req.wait(timeout=remaining)
         n = self.reducer.axis_size
         scale = (1.0 / n) if self.reducer.mean else 1.0
         red = [None] * self._num_leaves
@@ -189,12 +196,22 @@ class EngineGradReducer:
     the caller keeps computing (backward of the next microbatch, the
     optimizer of the previous step, prefetch fills...).  ``mean=True``
     scales by 1/axis_size on reassembly — the data-parallel gradient
-    mean."""
+    mean.
+
+    Buckets reduce through **persistent schedules**: the first
+    ``iallreduce_tree`` builds one :class:`~repro.collectives.
+    nonblocking.PersistentCollective` per (bucket ordinal, shape, dtype)
+    and every later step re-``start``s the cached handle — plan,
+    validation, round programs and donated carries are all reused, so a
+    training step pays only split+dispatch per bucket (MPI
+    ``Allreduce_init``/``Start`` across the step loop).  ``round_batch``
+    (None = auto from bucket size) fuses consecutive schedule rounds
+    per dispatch."""
 
     def __init__(self, mesh, axis: str, *, engine=None, collectives=None,
                  algorithm: str = "ring", chunks: int = 4,
                  bucket_bytes: int = 1 << 25, mean: bool = True,
-                 executor=None):
+                 executor=None, round_batch: int | None = None):
         from repro.collectives import nonblocking as NB
         self.mesh = mesh
         self.axis = axis
@@ -203,9 +220,27 @@ class EngineGradReducer:
         self.chunks = chunks
         self.bucket_bytes = bucket_bytes
         self.mean = mean
+        self.round_batch = round_batch
         self._own_coll = collectives is None
         self.coll = collectives if collectives is not None else \
             NB.UserCollectives(engine, executor=executor, name="gradreduce")
+        # (bucket ordinal, payload shape, dtype) -> PersistentCollective.
+        # Keyed per ordinal: two same-shaped buckets in one step need two
+        # handles (a persistent handle allows one outstanding start).
+        self._persistent: dict = {}
+
+    def _handle(self, ordinal: int, flat):
+        key = (ordinal, tuple(flat.shape), str(flat.dtype))
+        handle = self._persistent.get(key)
+        if handle is None:
+            # warmup=False: the first start compiles (same cost the old
+            # one-shot path paid); later starts hit the warm programs
+            handle = self.coll.allreduce_init(
+                flat, self.mesh, self.axis, algorithm=self.algorithm,
+                chunks=self.chunks, round_batch=self.round_batch,
+                warmup=False)
+            self._persistent[key] = handle
+        return handle
 
     def iallreduce_tree(self, stacked_grads) -> TreeReduction:
         """Issue the bucketed reduction; returns immediately."""
@@ -224,11 +259,18 @@ class EngineGradReducer:
         if cur:
             buckets.append(cur)
         requests = []
-        for bucket in buckets:
+        for bi, bucket in enumerate(buckets):
             flat = _flatten_bucket(tuple(leaves[i] for i in bucket), n)
-            requests.append(self.coll.iallreduce(
-                flat, self.mesh, self.axis, algorithm=self.algorithm,
-                chunks=self.chunks))
+            handle = self._handle(bi, flat)
+            if handle.active is not None and not handle.active.is_complete:
+                # overlapping tree reductions (caller didn't wait the
+                # previous one): fall back to a one-shot issue rather
+                # than violating the handle's single-start invariant
+                requests.append(self.coll.iallreduce(
+                    flat, self.mesh, self.axis, algorithm=self.algorithm,
+                    chunks=self.chunks, round_batch=self.round_batch))
+            else:
+                requests.append(handle.start(flat))
         return TreeReduction(self, requests, buckets, shapes, dtypes,
                              treedef, len(leaves))
 
@@ -237,6 +279,9 @@ class EngineGradReducer:
         return self.iallreduce_tree(stacked_grads).wait(timeout=timeout)
 
     def close(self) -> None:
+        for handle in self._persistent.values():
+            handle.close()
+        self._persistent.clear()
         if self._own_coll:
             self.coll.close()
 

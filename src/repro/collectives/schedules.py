@@ -261,6 +261,58 @@ def resolve_algorithm(algorithm: str, axis_size: int, *,
     return algorithm
 
 
+# ---------------------------------------------------------------------------
+# Round batching (persistent schedules; see collectives/nonblocking.py)
+# ---------------------------------------------------------------------------
+
+# Payload-size breakpoints for the automatic round-batch factor.  Below
+# SMALL the per-dispatch latency dominates total time (the fig-14 small-
+# payload gap), so every round of a chunk fuses into ONE program; up to
+# LARGE two dispatches keep a little pipelining; above it the bandwidth
+# regime needs per-round dispatch so chunk c+1's round r can overlap
+# chunk c's round r+1 on the collective stream.
+ROUND_BATCH_SMALL_BYTES = 4 << 20        # <= 4 MiB: fuse everything
+ROUND_BATCH_LARGE_BYTES = 64 << 20       # <= 64 MiB: two dispatches
+
+
+def fuse_rounds(fns):
+    """Compose consecutive round bodies into one program body.
+
+    Each ``fn`` is a carry -> carry function written to run inside
+    ``shard_map``; the fusion is plain sequential composition, so the
+    fused program executes the exact same op sequence in the exact same
+    order as the unfused rounds — per-algorithm chunk layouts (and float
+    summation order) are preserved bit-identically, only the dispatch
+    count changes."""
+    fns = tuple(fns)
+    if not fns:
+        raise ValueError("fuse_rounds on empty round list")
+    if len(fns) == 1:
+        return fns[0]
+
+    def fused(carry):
+        for fn in fns:
+            carry = fn(carry)
+        return carry
+
+    return fused
+
+
+def auto_round_batch(payload_bytes: int, num_rounds: int) -> int:
+    """Pick the round-batch factor from the payload size.
+
+    Small payloads collapse to 1–2 dispatches per chunk (per-operation
+    setup cost is the whole story); large payloads keep per-round
+    dispatch so the chunk pipeline can overlap rounds across chunks."""
+    if num_rounds <= 1:
+        return 1
+    if payload_bytes <= ROUND_BATCH_SMALL_BYTES:
+        return num_rounds                       # one dispatch per chunk
+    if payload_bytes <= ROUND_BATCH_LARGE_BYTES:
+        return -(-num_rounds // 2)              # two dispatches per chunk
+    return 1                                    # full per-round pipelining
+
+
 def allreduce_under_shard_map(x, mesh, axis: str, algorithm: str = "ring"):
     """Allreduce `x` (sharded on `axis`'s data dim) with a user schedule;
     output is the allreduced value, still sharded the same way — directly

@@ -31,6 +31,9 @@ def jax_future(engine: ProgressEngine, arrays: Any,
 
     Non-blocking: uses ``Array.is_ready()`` (never ``block_until_ready``)
     so the engine can interleave other subsystems while the device runs.
+    The watched arrays ride along as the task's ``state`` so waiters that
+    *choose* to block (e.g. ``CollectiveRequest.wait`` parking on an
+    in-flight round instead of burning a core polling) can reach them.
     """
     req = Request(tag="jax")
 
@@ -42,7 +45,7 @@ def jax_future(engine: ProgressEngine, arrays: Any,
             return DONE
         return NOPROGRESS
 
-    engine.async_start(poll, None, stream)
+    engine.async_start(poll, arrays, stream)
     return req
 
 

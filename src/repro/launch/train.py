@@ -39,6 +39,9 @@ def main():
     ap.add_argument("--collective-algorithm", default="ring",
                     help="user-backend allreduce schedule "
                          "(ring/bidir/recursive_doubling/halving_doubling)")
+    ap.add_argument("--collective-round-batch", type=int, default=0,
+                    help="rounds fused per jitted dispatch in the user "
+                         "backend (0 = auto from bucket size)")
     args = ap.parse_args()
 
     if args.devices:
@@ -171,17 +174,21 @@ def main():
         reducer = EngineGradReducer(
             mesh, "data", engine=eng,
             algorithm=args.collective_algorithm,
-            chunks=args.collective_chunks, mean=True)
+            chunks=args.collective_chunks, mean=True,
+            round_batch=args.collective_round_batch or None)
         split = UserCollectiveStep(grad_fn, apply_fn, reducer)
         print(f"collective backend: user "
-              f"({reducer.algorithm}, chunks={args.collective_chunks})")
+              f"({reducer.algorithm}, chunks={args.collective_chunks}, "
+              f"round_batch={args.collective_round_batch or 'auto'}, "
+              f"persistent schedules per bucket)")
 
     loop_cfg = TrainLoopConfig(
         total_steps=args.steps, checkpoint_every=10,
         checkpoint_dir=os.path.join(args.ckpt_dir, args.arch),
         log_every=5, collective_backend=args.collective_backend,
         collective_algorithm=args.collective_algorithm,
-        collective_chunks=args.collective_chunks)
+        collective_chunks=args.collective_chunks,
+        collective_round_batch=args.collective_round_batch)
     trainer = Trainer(
         step_fn, params, opt_state, pipe, loop_cfg,
         engine=eng, split_step=split,

@@ -48,6 +48,11 @@ class TrainLoopConfig:
     collective_backend: str = "native"
     collective_algorithm: str = "ring"
     collective_chunks: int = 4
+    # rounds fused per jitted dispatch in the user backend's schedules;
+    # 0 = auto from bucket size (small buckets collapse to one dispatch,
+    # large keep per-round pipelining).  The reducer caches one
+    # persistent schedule per grad bucket either way.
+    collective_round_batch: int = 0
 
 
 @dataclasses.dataclass
