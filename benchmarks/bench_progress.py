@@ -1,7 +1,13 @@
-"""Paper Figs 7–12 (+ continuation-delivery rows): progress-engine
-microbenchmarks."""
+"""Paper Figs 7–12 (+ continuation-delivery rows) progress-engine
+microbenchmarks, and the serve-decode latency family (fig-14-style:
+user-space serve collectives vs the native-sharded and unsharded decode
+paths, in a forced-multi-device child process)."""
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
+import textwrap
 import threading
 import time
 
@@ -262,6 +268,89 @@ def fig13_continuation_vs_waitset():
     return rows
 
 
+_SERVE_SNIPPET = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import time
+import jax, numpy as np
+from repro import compat
+from repro.configs import get_config
+from repro.core import ProgressEngine
+from repro.models import registry
+from repro.serve.engine import GenRequest, ServeEngine
+
+cfg = get_config("qwen2-0.5b").with_overrides(
+    num_layers=2, d_model=64, d_ff=128, vocab_size=256, num_heads=4,
+    num_kv_heads=2, head_dim=16, remat_policy="none")
+params = registry.init_params(cfg, jax.random.PRNGKey(0))
+mesh = compat.make_mesh((2,), ("model",))
+
+def serve_once(mesh, backend, max_new=16, n_req=4):
+    eng = ProgressEngine()
+    srv = ServeEngine(cfg, params, eng, batch_slots=4, max_seq=128,
+                      mesh=mesh, collective_backend=backend)
+    # warm THIS engine's programs before timing (a fresh ServeEngine
+    # means fresh jit closures: the user gather compiles at
+    # construction, but decode — and the native gather — compile on
+    # first use, and an unwarmed first step would bill XLA compiles to
+    # the timed window, skewing the native-vs-user comparison)
+    warm = GenRequest("warm", np.array([1, 2], np.int32), max_new_tokens=2)
+    srv.submit(warm)
+    srv.run_until_idle(timeout=600)
+    warm_steps = srv.steps
+    reqs = [GenRequest(f"r{i}", np.array([i + 1, i + 2], np.int32),
+                       max_new_tokens=max_new) for i in range(n_req)]
+    for r in reqs:
+        srv.submit(r)
+    t0 = time.perf_counter()
+    srv.run_until_idle(timeout=600)
+    wall = time.perf_counter() - t0
+    steps = srv.steps - warm_steps
+    toks = sum(len(r.out_tokens) for r in reqs)
+    lat = srv.latency_snapshot()
+    srv.close(timeout=60)
+    return wall / max(steps, 1) * 1e6, toks, lat
+
+rows = {}
+for name, m, backend in (("unsharded", None, "native"),
+                         ("native_m2", mesh, "native"),
+                         ("user_m2", mesh, "user")):
+    us, toks, lat = serve_once(m, backend)
+    rows[name] = us
+    print(f"serve_decode_{name},{us:.3f},per fused decode step; "
+          f"{toks} tokens, ttft_p50={lat.ttft_ms_p50:.1f}ms")
+print(f"serve_gain_user_vs_native_m2,{rows['native_m2'] / rows['user_m2']:.3f},"
+      f"user {rows['user_m2']:.0f}us vs native in-program gather "
+      f"{rows['native_m2']:.0f}us per step")
+"""
+
+
+def serve_collectives():
+    """Serve-decode latency family (fig-14 style, 2 host devices in a
+    child): per-step latency of the fused decode chain — unsharded,
+    model-axis-sharded with the native in-program all-gather, and with
+    the persistent user-space all-gather on the serve-collective
+    stream.  ``serve_gain_*`` holds the user/native ratio (excluded
+    from the trend gate by prefix)."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(_SERVE_SNIPPET)],
+            capture_output=True, text=True, timeout=1200, env=env)
+        stdout, rc, err = proc.stdout, proc.returncode, proc.stderr or ""
+    except subprocess.TimeoutExpired as e:
+        stdout, rc, err = e.stdout or "", -1, "timeout after 1200s"
+    # salvage completed rows: a dead sweep must not hide earlier rows
+    rows = [l for l in stdout.splitlines() if l.startswith("serve_")]
+    if rc != 0:
+        rows.append(f"serve_decode,nan,FAILED(rc={rc}): {err[-200:]}")
+    return rows
+
+
 def run():
     rows = []
     rows += fig7_latency_vs_pending()
@@ -272,4 +361,5 @@ def run():
     rows += fig11_streams()
     rows += fig12_request_query()
     rows += fig13_continuation_vs_waitset()
+    rows += serve_collectives()
     return rows

@@ -26,10 +26,14 @@ import os
 import sys
 
 # Row-name prefixes tracked by the gate: the progress-engine
-# microbenchmarks (fig7), callback-vs-waitset delivery (fig13) and the
-# user-collective sweep (fig14).  fig14_persistent_gain rows hold a
-# ratio, not a latency — excluded.
-DEFAULT_PREFIXES = ("fig7", "fig13", "fig14_native", "fig14_user")
+# microbenchmarks (fig7), callback-vs-waitset delivery (fig13), the
+# user-collective sweep (fig14) and the serve-decode latency family
+# (serve_decode — unsharded / native-sharded / user-collective rows;
+# the existing fig* names are untouched so artifact history stays
+# comparable across runs).  fig14_persistent_gain and serve_gain rows
+# hold a ratio, not a latency — excluded.
+DEFAULT_PREFIXES = ("fig7", "fig13", "fig14_native", "fig14_user",
+                    "serve_decode")
 DEFAULT_THRESHOLD = 0.20
 
 

@@ -245,6 +245,67 @@ def nonblocking_collectives():
     coll.close()
 
 
+def serve_collectives():
+    """Serve-side persistent collectives + executor-driven starts.
+
+    Decode is the ideal persistent-collective consumer: fixed shapes,
+    one step per token.  With a model mesh axis the ServeEngine splits
+    decode into a shared partial-logits program (decode_hidden + each
+    rank's vocab-slice unembed) and gathers the full logits either
+    in-program (native) or by re-binding ONE persistent user-space
+    all-gather per step:
+
+        1. init  — ServeEngine(..., mesh=mesh, collective_backend="user")
+                   builds allgather_init((n, slots, V/n)) once; the plan
+                   and fused round programs compile at construction
+        2. step  — each fused decode step does handle.start(partial);
+                   the gather rounds run on the serve-collective stream
+                   while the host admits/prefills concurrent arrivals
+        3. chain — the gather's completion (a continuation) feeds the
+                   SAME detokenize stage as the native path, which
+                   launches the next step
+
+    With a ProgressExecutor the start itself is executor-driven: the
+    caller enqueues a one-shot issue task and the worker owning the
+    collective stream dispatches round 0 (start() is O(µs)).  Greedy
+    token streams are identical across unsharded / native / user paths
+    (both sharded paths consume the same partial-logits program)."""
+    import jax
+    import numpy as np
+
+    from repro import compat
+    from repro.configs import get_config
+    from repro.models import registry
+    from repro.serve.engine import GenRequest, ServeEngine
+
+    cfg = get_config("qwen2-0.5b").with_overrides(
+        num_layers=2, d_model=32, d_ff=64, vocab_size=64, num_heads=4,
+        num_kv_heads=2, head_dim=16, remat_policy="none")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    n = len(jax.devices())
+    mesh = compat.make_mesh((n,), ("model",))
+
+    def serve(backend):
+        eng = ProgressEngine()
+        srv = ServeEngine(cfg, params, eng, batch_slots=2, max_seq=32,
+                          mesh=mesh, collective_backend=backend)
+        done = srv.submit(GenRequest("tour", np.array([3, 4], np.int32),
+                                     max_new_tokens=4))
+        srv.run_until_idle(timeout=240)
+        toks = done.value()
+        starts = srv._ag_handle.starts if srv._ag_handle is not None else 0
+        lat = srv.latency_snapshot()
+        srv.close(timeout=60)
+        return toks, starts, lat
+
+    nat, _, _ = serve("native")
+    usr, starts, lat = serve("user")
+    assert nat == usr, (nat, usr)
+    print(f"serve collectives: {len(usr)} tokens over a {n}-way model "
+          f"axis, user == native stream, {starts} persistent all-gather "
+          f"start(s); {lat.format()}")
+
+
 if __name__ == "__main__":
     eng = ProgressEngine()
     listing_1_1_collated_subsystems(eng)
@@ -256,4 +317,5 @@ if __name__ == "__main__":
     progress_workers()
     continuations_post_attach_drain()
     nonblocking_collectives()
+    serve_collectives()
     print("tour OK")

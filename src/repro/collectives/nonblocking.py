@@ -54,6 +54,19 @@ dispatch+sync cost dominating when the wire time is microseconds):
   double-buffered through jit donation: each round program donates its
   carry input, so a steady-state start cycles two pre-warmed buffer
   generations per chunk instead of allocating per round.
+
+A third layer makes ``start`` itself O(µs): **executor-driven starts**.
+When the handle's collective stream is adopted by a *running*
+``ProgressExecutor``, ``start(payload)`` only validates, creates the
+request and enqueues a one-shot *issue task* on the stream; the
+adopting worker runs the chunk split and dispatches round 0 on its next
+sweep (the paper's progress-thread offload, applied to issue).  The
+caller — a training step, the serve decode chain — pays an enqueue
+(one lock-protected list append), not a jitted dispatch.  Without an
+executor (or with it stopped) ``start`` falls back to caller-thread
+dispatch, bit-identical semantics either way; the dispatching thread is
+recorded on ``CollectiveRequest.issue_thread`` so tests can assert the
+handoff happened.
 """
 from __future__ import annotations
 
@@ -69,7 +82,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.collectives import schedules as S
 from repro.core.continuations import DEFERRED, INLINE, ContinuationQueue
-from repro.core.engine import ProgressEngine, Stream, global_engine
+from repro.core.engine import DONE, ProgressEngine, Stream, global_engine
 from repro.core.futures import jax_future
 from repro.core.request import CancelledError, Request
 
@@ -491,11 +504,14 @@ class CollectiveRequest(Request):
     callers who pass ``req.stream``) progress the right serial context;
     ``rounds_done``/``rounds_total`` expose pipeline position (in
     *dispatches* — with round batching one dispatch covers several
-    algorithm rounds) for stats and tests."""
+    algorithm rounds) for stats and tests.  ``issue_thread`` is the
+    ident of the thread that dispatched round 0 (None until it has):
+    with an executor-driven start this is an executor worker, not the
+    ``start()`` caller."""
 
     __slots__ = ("engine", "stream", "queue", "ctx", "op", "algorithm",
                  "num_chunks", "rounds_total", "rounds_done", "_fail_lock",
-                 "_cancelled")
+                 "_cancelled", "issue_thread")
 
     def __init__(self, engine: ProgressEngine, stream: Stream, queue,
                  op: str, algorithm: str, num_chunks: int,
@@ -512,6 +528,7 @@ class CollectiveRequest(Request):
         self.rounds_done = 0
         self._fail_lock = threading.Lock()
         self._cancelled = False
+        self.issue_thread: int | None = None
 
     @property
     def cancelled(self) -> bool:
@@ -597,22 +614,45 @@ class CollectiveRequest(Request):
 class _ChunkPipeline:
     """Drives K chunks through their round schedules via continuations.
 
-    Every stage dispatch happens inside a continuation callback (or at
-    issue time for round 0): run stage r, register a ``jax_future`` for
+    Every stage dispatch happens inside a continuation callback (or in
+    ``launch`` for round 0): run stage r, register a ``jax_future`` for
     its outputs on the collective stream, attach the next continuation.
     A stage that raises — or a future that fails — fails the collective
     request exactly once; remaining chunks are abandoned (their pending
-    futures complete harmlessly)."""
+    futures complete harmlessly).
+
+    ``defer=True`` (executor-driven start) skips the inline ``launch``:
+    the caller enqueues a one-shot issue task on the collective stream
+    instead, and the stream's adopting worker runs ``launch`` — the
+    chunk split and every round-0 dispatch — on its next sweep."""
 
     def __init__(self, ctx: "UserCollectives", req: CollectiveRequest,
-                 schedules, payloads, join: Callable[[list], Any]):
+                 schedules, payloads_fn: Callable[[], list],
+                 join: Callable[[list], Any], defer: bool = False):
         self.ctx = ctx
         self.req = req
         self.schedules = schedules
         self.join = join
         self._lock = threading.Lock()
-        self._results: list = [None] * len(payloads)
-        self._remaining = len(payloads)
+        self._results: list = [None] * len(schedules)
+        self._remaining = len(schedules)
+        self._payloads_fn = payloads_fn
+        if not defer:
+            self.launch()
+
+    def launch(self) -> None:
+        """Split the payload and dispatch round 0 of every chunk on the
+        *calling* thread (the start() caller, or — deferred — the
+        executor worker that owns the collective stream)."""
+        if self.req.is_complete:
+            return                    # cancelled before the issue task ran
+        self.req.issue_thread = threading.get_ident()
+        fn, self._payloads_fn = self._payloads_fn, None
+        try:
+            payloads = fn()
+        except BaseException as exc:  # noqa: BLE001
+            self._fail(exc)
+            return
         for c, payload in enumerate(payloads):
             self._advance(c, 0, payload)
 
@@ -1036,15 +1076,39 @@ class UserCollectives:
     # -- machinery ---------------------------------------------------------
     def _issue_plan(self, plan: _Plan, x) -> CollectiveRequest:
         scheds = [rs.compiled(plan.round_batch) for rs in plan.schedules]
-        return self._issue(plan.op, plan.algorithm, scheds, plan.split(x),
-                           plan.join)
+        return self._issue(plan.op, plan.algorithm, scheds,
+                           lambda: plan.split(x), plan.join)
 
-    def _issue(self, op, algorithm, scheds, payloads, join) -> CollectiveRequest:
+    def _adopting_executor(self):
+        """The running executor whose worker owns this context's stream,
+        or None — the gate for executor-driven starts."""
+        ex = self.executor if self.executor is not None \
+            else self.engine.executor
+        if ex is not None and ex.running and ex.owns(self.stream):
+            return ex
+        return None
+
+    def _issue(self, op, algorithm, scheds, payloads, join, *,
+               defer: bool = False) -> CollectiveRequest:
+        """``payloads`` is the chunk list, or a thunk producing it — the
+        deferred (executor-driven) path passes a thunk so the split too
+        runs on the worker, not the start() caller."""
+        payloads_fn = payloads if callable(payloads) else lambda: payloads
         req = CollectiveRequest(self.engine, self.stream, self.queue, op,
-                                algorithm, len(payloads),
+                                algorithm, len(scheds),
                                 sum(s.num_rounds for s in scheds), ctx=self)
         self.issued += 1
-        _ChunkPipeline(self, req, scheds, payloads, join)
+        pipe = _ChunkPipeline(self, req, scheds, payloads_fn, join,
+                              defer=defer)
+        if defer:
+            # one-shot issue task: the worker that owns the collective
+            # stream splits + dispatches round 0 on its next sweep, so
+            # the start() caller paid only this enqueue
+            def issue_task(thing, pipe=pipe) -> str:
+                pipe.launch()
+                return DONE
+
+            self.engine.async_start(issue_task, None, self.stream)
         return req
 
     def _check_open(self):
@@ -1169,7 +1233,13 @@ class PersistentCollective:
     def start(self, payload) -> CollectiveRequest:
         """MPI_Start: re-bind ``payload`` to the persistent schedule and
         issue.  Raises while the previous start is still in flight (a
-        failed or cancelled one is complete, hence restartable)."""
+        failed or cancelled one is complete, hence restartable).
+
+        When the collective stream is adopted by a running executor the
+        start is *executor-driven*: this call only validates and
+        enqueues a one-shot issue task (O(µs)), and the adopting worker
+        splits the payload and dispatches round 0; otherwise round 0
+        dispatches here, on the calling thread."""
         if self._closed:
             raise RuntimeError(f"{self!r} is closed")
         self.ctx._check_open()
@@ -1189,9 +1259,11 @@ class PersistentCollective:
                 f"persistent {self.plan.op} built for dtype "
                 f"{jnp.dtype(self.plan.dtype)}, got "
                 f"{jnp.dtype(payload.dtype)}")
+        defer = self.ctx._adopting_executor() is not None
         req = self.ctx._issue(self.plan.op, self.plan.algorithm,
-                              self.schedules, self.plan.split(payload),
-                              self.plan.join)
+                              self.schedules,
+                              lambda: self.plan.split(payload),
+                              self.plan.join, defer=defer)
         self.active = req
         self.starts += 1
         return req

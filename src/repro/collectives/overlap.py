@@ -37,18 +37,37 @@ def bucket_tree(tree, bucket_bytes: int = 1 << 25):
     """Partition tree leaves into buckets of ~bucket_bytes (DDP-style).
 
     Returns list of lists of leaf indices (ordered as tree_leaves).
+    Buckets are **per-dtype**: the bucketed reduction concatenates a
+    bucket's leaves into one payload, and a mixed-dtype concat would
+    promote (bf16 leaves reduced — and shipped — as f32, results
+    diverging from the per-leaf native reduction).  Non-array leaves
+    (no ``size``/``dtype``) are rejected eagerly: they cannot be
+    byte-counted or concatenated, and counting them as 0 used to let
+    them accumulate into one unbounded bucket.
     """
     leaves = jax.tree.leaves(tree)
-    buckets, cur, cur_bytes = [], [], 0
+    buckets = []
+    open_buckets: dict = {}          # dtype -> [indices, byte count]
+    order: list = []                 # dtypes in first-seen order
     for i, leaf in enumerate(leaves):
-        nb = leaf.size * leaf.dtype.itemsize if hasattr(leaf, "size") else 0
-        cur.append(i)
-        cur_bytes += nb
-        if cur_bytes >= bucket_bytes:
-            buckets.append(cur)
-            cur, cur_bytes = [], 0
-    if cur:
-        buckets.append(cur)
+        if not hasattr(leaf, "size") or not hasattr(leaf, "dtype"):
+            raise TypeError(
+                f"bucket_tree: leaf {i} is {type(leaf).__name__}, not an "
+                f"array; bucketed reduction needs array leaves (wrap "
+                f"scalars in jnp.asarray)")
+        dt = jnp.dtype(leaf.dtype)
+        if dt not in open_buckets:
+            open_buckets[dt] = [[], 0]
+            order.append(dt)
+        cur = open_buckets[dt]
+        cur[0].append(i)
+        cur[1] += leaf.size * dt.itemsize
+        if cur[1] >= bucket_bytes:
+            buckets.append(cur[0])
+            open_buckets[dt] = [[], 0]
+    for dt in order:
+        if open_buckets[dt][0]:
+            buckets.append(open_buckets[dt][0])
     return buckets
 
 
@@ -59,7 +78,10 @@ def allreduce_tree(grads, axis: str, algorithm: str = "psum",
     algorithm "psum" uses the native op; others use the user-level
     schedules from :mod:`schedules` — the Fig-13 comparison at scale.
     Buckets exist to give the scheduler independent collectives it can
-    overlap with backward compute.
+    overlap with backward compute; they are single-dtype (see
+    :func:`bucket_tree`), so each bucket reduces in its leaves' native
+    dtype — bit-comparable to the per-leaf native op, and bf16 buckets
+    ship bf16 bytes instead of silently upcasting the wire format.
     """
     leaves, treedef = jax.tree.flatten(grads)
     if algorithm == "psum":
@@ -74,7 +96,7 @@ def allreduce_tree(grads, axis: str, algorithm: str = "psum",
         off = 0
         for i in bucket:
             n = leaves[i].size
-            red[i] = flat[off:off + n].reshape(leaves[i].shape).astype(leaves[i].dtype)
+            red[i] = flat[off:off + n].reshape(leaves[i].shape)
             off += n
     return jax.tree.unflatten(treedef, red)
 
@@ -248,16 +270,28 @@ class EngineGradReducer:
         n = self.axis_size
         shapes = [tuple(g.shape[1:]) for g in leaves]
         dtypes = [g.dtype for g in leaves]
-        buckets, cur, cur_bytes = [], [], 0
+        # single-dtype buckets: _flatten_bucket concatenates, and a
+        # mixed bucket would promote (reduce bf16 as f32).  Same rule —
+        # and same one-open-bucket-per-dtype grouping — as bucket_tree,
+        # so interleaved-dtype trees (bf16 weights between f32 norm
+        # scales) still coalesce instead of fragmenting per leaf.
+        buckets = []
+        open_buckets: dict = {}      # dtype -> [indices, per-device bytes]
+        order: list = []
         for i, g in enumerate(leaves):
-            per_device = (g.size // max(1, g.shape[0])) * g.dtype.itemsize
-            cur.append(i)
-            cur_bytes += per_device
-            if cur_bytes >= self.bucket_bytes:
-                buckets.append(cur)
-                cur, cur_bytes = [], 0
-        if cur:
-            buckets.append(cur)
+            dt = jnp.dtype(g.dtype)
+            if dt not in open_buckets:
+                open_buckets[dt] = [[], 0]
+                order.append(dt)
+            cur = open_buckets[dt]
+            cur[0].append(i)
+            cur[1] += (g.size // max(1, g.shape[0])) * dt.itemsize
+            if cur[1] >= self.bucket_bytes:
+                buckets.append(cur[0])
+                open_buckets[dt] = [[], 0]
+        for dt in order:
+            if open_buckets[dt][0]:
+                buckets.append(open_buckets[dt][0])
         requests = []
         for bi, bucket in enumerate(buckets):
             flat = _flatten_bucket(tuple(leaves[i] for i in bucket), n)

@@ -44,6 +44,7 @@ class _Worker:
         self.streams: list[Stream] = []
         self.queues: list = []          # adopted ContinuationQueues
         self.thread: threading.Thread | None = None
+        self.thread_ident: int | None = None   # set by the worker loop
         self.sweeps = 0
         self.idle_spins = 0
         self.steals = 0
@@ -128,6 +129,13 @@ class ProgressExecutor:
     def owns(self, stream: Stream) -> bool:
         with self._assign_lock:
             return any(stream in w.streams for w in self._workers)
+
+    def worker_thread_idents(self) -> set[int]:
+        """Thread idents of the live worker loops.  Lets callers (and
+        the executor-driven-start tests) distinguish "dispatched by a
+        progress worker" from "dispatched on the caller's thread"."""
+        return {w.thread_ident for w in self._workers
+                if w.thread_ident is not None}
 
     # -- continuation-queue assignment -------------------------------------
     def adopt_queue(self, queue, worker: Optional[int] = None) -> int:
@@ -239,6 +247,7 @@ class ProgressExecutor:
 
     # -- worker loop -------------------------------------------------------
     def _worker_loop(self, w: _Worker) -> None:
+        w.thread_ident = threading.get_ident()
         while not self._stop.is_set():
             with self._assign_lock:
                 streams = list(w.streams)

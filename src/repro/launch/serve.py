@@ -2,8 +2,16 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
         --scale tiny --requests 8 --slots 4
+
+Model-axis-sharded decode (vocab-parallel unembed) with the per-step
+logits all-gather either in-program (native) or as persistent user-space
+collectives on the serve-collective stream:
+
+    PYTHONPATH=src python -m repro.launch.serve --devices 2 \
+        --model-shards 2 --collective-backend user
 """
 import argparse
+import os
 import sys
 
 import numpy as np
@@ -17,6 +25,21 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (CPU rehearsal)")
+    ap.add_argument("--model-shards", type=int, default=0,
+                    help="shard decode over a 'model' mesh axis of this "
+                         "size (0 = unsharded)")
+    ap.add_argument("--collective-backend", default="native",
+                    choices=["native", "user"],
+                    help="per-step logits all-gather: native in-program "
+                         "lax.all_gather, or persistent user-space "
+                         "allgather on the serve-collective stream")
+    ap.add_argument("--collective-chunks", type=int, default=1,
+                    help="chunk pipelining factor for the user backend")
+    ap.add_argument("--collective-round-batch", type=int, default=0,
+                    help="rounds fused per dispatch in the user backend "
+                         "(0 = auto from payload size)")
     ap.add_argument("--progress-workers", type=int, default=0,
                     help="N background progress threads (0 = caller-driven)")
     ap.add_argument("--continuation-policy", default="deferred",
@@ -29,6 +52,11 @@ def main():
     ap.add_argument("--stats", action="store_true",
                     help="print progress statistics after serving")
     args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
 
     import jax
 
@@ -64,10 +92,25 @@ def main():
         executor = ProgressExecutor(
             eng, args.progress_workers,
             continuation_max_drain=args.continuation_max_drain)
+    mesh = None
+    if args.model_shards > 0:
+        from repro.launch.mesh import make_mesh
+        if args.model_shards > len(jax.devices()):
+            raise SystemExit(f"--model-shards {args.model_shards} > "
+                             f"{len(jax.devices())} devices (use --devices)")
+        mesh = make_mesh((args.model_shards,), ("model",))
+    elif args.collective_backend == "user":
+        raise SystemExit("--collective-backend user requires --model-shards "
+                         ">= 1 (the user backend is the sharded decode's "
+                         "logits all-gather)")
     srv = ServeEngine(cfg, params, eng, batch_slots=args.slots,
                       max_seq=args.max_seq, executor=executor,
                       continuation_policy=args.continuation_policy,
-                      continuation_max_drain=args.continuation_max_drain)
+                      continuation_max_drain=args.continuation_max_drain,
+                      mesh=mesh, collective_backend=args.collective_backend,
+                      collective_chunks=args.collective_chunks,
+                      collective_round_batch=args.collective_round_batch
+                      or None)
     if executor is not None:
         executor.start()
     rng = np.random.RandomState(1)
@@ -80,17 +123,23 @@ def main():
         reqs.append(r)
     srv.run_until_idle(timeout=600)
     snap = stats_mod.collect(eng, executor)   # before close drops the queue
+    lat = srv.latency_snapshot()              # before close, too
     srv.close(timeout=60)
     if executor is not None:
         executor.shutdown(drain=True, timeout=60)
 
     gen = sum(len(r.out_tokens) for r in reqs)
-    ttfts = [(r.first_token_at - r.submitted_at) for r in reqs]
     mode = (f"{args.progress_workers} progress workers"
             if args.progress_workers > 0 else "caller-driven progress")
+    shard = (f"model-shards={args.model_shards} "
+             f"backend={args.collective_backend}, "
+             if args.model_shards > 0 else "")
     print(f"served {len(reqs)} requests, {gen} tokens in {srv.steps} fused "
-          f"decode steps (batching factor {gen / max(srv.steps, 1):.2f}x); "
-          f"mean TTFT {np.mean(ttfts) * 1e3:.0f} ms [{mode}]")
+          f"decode steps (batching factor {gen / max(srv.steps, 1):.2f}x) "
+          f"[{shard}{mode}]")
+    # null-safe latency report: requests that failed before their first
+    # token are counted, not subtracted from everyone else's TTFT
+    print(lat.format())
     if args.stats:
         print(stats_mod.format_stats(snap))
     return 0

@@ -180,7 +180,13 @@ def init_cache(cfg, batch, max_seq):
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
-    from repro.models.transformer import embed_tokens, unembed
+    from repro.models.transformer import unembed
+    x, new_cache = decode_hidden(params, cfg, cache, tokens, pos)
+    return unembed(params, cfg, x), new_cache
+
+
+def decode_hidden(params, cfg: ModelConfig, cache, tokens, pos):
+    from repro.models.transformer import embed_tokens
     x = embed_tokens(params, cfg, tokens)
     n_groups, k, tail = group_layout(cfg)
 
@@ -224,7 +230,7 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
             tail_sts.append(st)
         new_cache["tail_ssm"] = jax.tree.map(lambda *a: jnp.stack(a), *tail_sts)
     x = L.rmsnorm(x, params["final_norm"], cfg.rms_norm_eps)
-    return unembed(params, cfg, x), new_cache
+    return x, new_cache
 
 
 def loss_fn(params, cfg: ModelConfig, batch):

@@ -306,7 +306,13 @@ def init_cache(cfg, batch, max_seq):
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
-    from repro.models.transformer import embed_tokens, unembed
+    from repro.models.transformer import unembed
+    x, new_state = decode_hidden(params, cfg, cache, tokens, pos)
+    return unembed(params, cfg, x), new_state
+
+
+def decode_hidden(params, cfg: ModelConfig, cache, tokens, pos):
+    from repro.models.transformer import embed_tokens
     x = embed_tokens(params, cfg, tokens)
 
     def body(x, scanned):
@@ -318,7 +324,7 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
     x, new_state = jax.lax.scan(
         body, x, (params["blocks"], params["block_norms"], cache))
     x = L.rmsnorm(x, params["final_norm"], cfg.rms_norm_eps)
-    return unembed(params, cfg, x), new_state
+    return x, new_state
 
 
 def loss_fn(params, cfg: ModelConfig, batch):

@@ -48,6 +48,24 @@ def decode_step(params, cfg, cache, tokens, pos):
     return module_for(cfg).decode_step(params, cfg, cache, tokens, pos)
 
 
+def decode_hidden(params, cfg, cache, tokens, pos):
+    """Decode up to the final norm (no unembed) — the split point for
+    vocab-parallel serving.  Raises for families whose decode step does
+    not factor this way (encoder-decoder has a bespoke unembed)."""
+    m = module_for(cfg)
+    if not hasattr(m, "decode_hidden"):
+        raise NotImplementedError(
+            f"decode_hidden not supported for family {cfg.family!r}")
+    return m.decode_hidden(params, cfg, cache, tokens, pos)
+
+
+def unembed_partial(params, cfg, x, vocab_start, vocab_len):
+    """Vocab-parallel unembed slice (see transformer.unembed_partial)."""
+    from repro.models import transformer
+    return transformer.unembed_partial(params, cfg, x, vocab_start,
+                                       vocab_len)
+
+
 def init_params(cfg, rng):
     return module_for(cfg).init_params(cfg, rng)
 

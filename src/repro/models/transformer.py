@@ -160,6 +160,25 @@ def unembed(params, cfg: ModelConfig, x):
     return shard_hint(logits, "batch", "act_seq", "act_vocab")
 
 
+def unembed_partial(params, cfg: ModelConfig, x, vocab_start, vocab_len: int):
+    """Vocab-parallel unembed: logits for ``vocab_len`` vocabulary rows
+    starting at (traced) ``vocab_start`` — the tensor-parallel output
+    projection.  Inside a model-axis ``shard_map`` each rank computes its
+    slice and the full logits are the rank-order concatenation (gathered
+    natively in-program, or by a user-space all-gather on the serve
+    collective stream).  Softcap is elementwise, so slicing before it is
+    exact."""
+    if cfg.tie_embeddings:
+        w = jax.lax.dynamic_slice_in_dim(params["embed"], vocab_start,
+                                         vocab_len, axis=0)
+        logits = jnp.einsum("bsd,vd->bsv", x, w.astype(x.dtype))
+    else:
+        w = jax.lax.dynamic_slice_in_dim(params["lm_head"], vocab_start,
+                                         vocab_len, axis=1)
+        logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    return L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
 # ---------------------------------------------------------------------------
 # KV cache + decode
 # ---------------------------------------------------------------------------
@@ -237,6 +256,14 @@ def _layer_decode(cfg: ModelConfig, x, lp, kc, vc, pos, ks=None, vs=None):
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
     """tokens [B,1], pos [B] -> (logits [B,1,V], updated cache)."""
+    x, new_cache = decode_hidden(params, cfg, cache, tokens, pos)
+    return unembed(params, cfg, x), new_cache
+
+
+def decode_hidden(params, cfg: ModelConfig, cache, tokens, pos):
+    """Decode step up to (and including) the final norm: tokens [B,1],
+    pos [B] -> (hidden [B,1,D], updated cache).  The unembed is split
+    out so vocab-parallel serving can project per-rank slices."""
     x = embed_tokens(params, cfg, tokens)
     int8 = cfg.kv_cache_dtype == "int8"
 
@@ -260,8 +287,7 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
             body, x, (params["layers"], cache["k"], cache["v"]))
         new_cache = {"k": k_new, "v": v_new}
     x = L.rmsnorm(x, params["final_norm"], cfg.rms_norm_eps)
-    logits = unembed(params, cfg, x)
-    return logits, new_cache
+    return x, new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -33,11 +33,36 @@ deferred queue is drained by them between polls; without one, a cheap
 subsystem bridges streams + continuation drain into every
 ``engine.progress()`` call, so the classic ``while: engine.progress()``
 loop still serves traffic.
+
+**Model-axis sharding + serve-side collectives.**  With a ``mesh`` the
+decode step is tensor-parallel on the output projection: one shared
+``shard_map`` program runs ``decode_hidden`` and each model-axis rank's
+vocab-slice unembed (``unembed_partial``), producing the per-rank
+partial logits ``[n, B, V/n]`` plus the updated cache.  The full logits
+are then the rank-order all-gather of that activation, two ways:
+
+* ``collective_backend="native"`` — a second jitted ``shard_map``
+  program with an in-program ``lax.all_gather`` (the GSPMD baseline);
+* ``collective_backend="user"``  — a **persistent user-space
+  all-gather** (``allgather_init``/``start``) on a dedicated
+  serve-collective stream.  Decode's shapes are fixed, so the plan and
+  fused round programs compile exactly once at engine construction;
+  every step is a ``start(partial)`` re-bind whose completion feeds the
+  existing detokenize continuation.  The gather rounds are driven by
+  the progress engine while the host stays free for admission/prefill
+  of concurrent arrivals — and with an executor the ``start`` itself is
+  executor-driven (the worker owning the collective stream dispatches
+  round 0, the decode chain pays an enqueue).
+
+Both sharded paths consume bit-identical partial logits from the same
+program, so their greedy token streams are identical — the serve-side
+analogue of the fig-14 user-vs-native comparison.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import statistics
 import threading
 import time
 from typing import Optional
@@ -45,7 +70,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import DEFERRED, DONE, NOPROGRESS, ProgressEngine, Request
 from repro.core.continuations import POLICIES, ContinuationQueue
 from repro.core.executor import ProgressExecutor
@@ -63,8 +90,51 @@ class GenRequest:
     slot_index: int = -1
     next_input: int = 0            # next token to feed the fused decode
     submitted_at: float = dataclasses.field(default_factory=time.monotonic)
+    # stamped exactly once, by the detokenize continuation of the first
+    # decode step that produced a token for this request; stays None for
+    # requests that fail before their first token (TTFT must not count
+    # them — see ServeLatencyStats.no_first_token)
     first_token_at: float | None = None
     finished_at: float | None = None
+
+
+def _quantiles(samples_ms: list[float]) -> tuple[float, float, float]:
+    mean = statistics.fmean(samples_ms)
+    s = sorted(samples_ms)
+    p50 = s[len(s) // 2]
+    p99 = s[min(int(0.99 * len(s)), len(s) - 1)]
+    return mean, p50, p99
+
+
+@dataclasses.dataclass
+class ServeLatencyStats:
+    """Request-latency snapshot (``ServeEngine.latency_snapshot``).
+
+    TTFT aggregates cover only requests that produced a first token;
+    ``no_first_token`` counts the ones that finished (failed) without —
+    they are excluded from TTFT rather than silently dropped from the
+    ledger.  Latency aggregates cover every finished request."""
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    no_first_token: int = 0          # finished without a first token
+    ttft_ms_mean: float | None = None
+    ttft_ms_p50: float | None = None
+    ttft_ms_p99: float | None = None
+    latency_ms_mean: float | None = None
+    latency_ms_p50: float | None = None
+    latency_ms_p99: float | None = None
+
+    def format(self) -> str:
+        def f(v):
+            return f"{v:.1f}" if v is not None else "n/a"
+        return (f"requests: {self.submitted} submitted, "
+                f"{self.completed} completed, {self.failed} failed "
+                f"({self.no_first_token} without first token); "
+                f"TTFT ms mean/p50/p99 {f(self.ttft_ms_mean)}/"
+                f"{f(self.ttft_ms_p50)}/{f(self.ttft_ms_p99)}; "
+                f"latency ms mean/p50/p99 {f(self.latency_ms_mean)}/"
+                f"{f(self.latency_ms_p50)}/{f(self.latency_ms_p99)}")
 
 
 class ServeEngine:
@@ -73,29 +143,60 @@ class ServeEngine:
                  greedy: bool = True,
                  executor: Optional[ProgressExecutor] = None,
                  continuation_policy: str = DEFERRED,
-                 continuation_max_drain: int = 64):
+                 continuation_max_drain: int = 64,
+                 mesh=None, model_axis: str = "model",
+                 collective_backend: str = "native",
+                 collective_chunks: int = 1,
+                 collective_round_batch: int | None = None):
         if continuation_policy not in POLICIES:
             raise ValueError(f"continuation_policy must be one of {POLICIES}")
+        if collective_backend not in ("native", "user"):
+            raise ValueError("collective_backend must be 'native' or 'user'")
+        if collective_backend == "user" and mesh is None:
+            # silently serving the plain native path while the operator
+            # believes they exercised user-space collectives is worse
+            # than an eager error
+            raise ValueError("collective_backend='user' requires a mesh "
+                             "(model-axis-sharded decode)")
         self.cfg = cfg
         self.params = params
         self.engine = engine
         self.executor = executor
-        self.slots = SlotCache(cfg, batch_slots, max_seq)
+        self.mesh = mesh
+        self.model_axis = model_axis
+        self.collective_backend = collective_backend
+        self._sharded = mesh is not None
+        self.slots = SlotCache(cfg, batch_slots, max_seq, mesh=mesh)
         self.batch_slots = batch_slots
         self.max_seq = max_seq
         self._arrivals: collections.deque[GenRequest] = collections.deque()
         self._active: dict[int, GenRequest] = {}
         # one lock serialises admission/prefill against detokenize: the
         # stages may run on different executor workers, but KV cache and
-        # slot state are shared
+        # slot state are shared.  Prefill itself runs OUTSIDE the lock
+        # (staged cache, published atomically) so submit() and the
+        # detokenize path never block behind a token-by-token prompt loop.
         self._lock = threading.Lock()
         self._decode_inflight = None
         self._current_step = None      # the step whose continuation owns state
         self._admit_scheduled = False
+        self._prefill_active = False
         self._stopping = False
         self._closed = False
-        self._jit_decode = jax.jit(
-            lambda p, c, t, q: registry.decode_step(p, cfg, c, t, q))
+        # finished-request ledger for latency_snapshot (bounded: a
+        # long-lived server must not grow per-request records forever)
+        self._submitted = 0
+        self._finished: collections.deque[tuple] = collections.deque(
+            maxlen=4096)
+        if self._sharded:
+            self._build_sharded_decode(collective_chunks,
+                                       collective_round_batch)
+        else:
+            self.coll = None
+            self._ag_handle = None
+            self._jit_gather = None
+            self._jit_decode = jax.jit(
+                lambda p, c, t, q: registry.decode_step(p, cfg, c, t, q))
         self.admit_stream = engine.stream("serve-admit")
         self.decode_stream = engine.stream("serve-decode")
         # decode completions are delivered through this queue; its
@@ -106,6 +207,15 @@ class ServeEngine:
             name="serve-cont")
         self.continuation_max_drain = continuation_max_drain
         self._queue_adopted = False
+        # streams the caller-driven bridge must poll: the serve pair
+        # plus (user backend) the collective stream — without an
+        # executor nobody else progresses the all-gather rounds, and
+        # with one that is NOT running the run_until_idle fallback
+        # drives these same streams inline (a running executor never
+        # routes through _poll_streams, so there is no contention)
+        self._bridge_streams = [self.admit_stream, self.decode_stream]
+        if self.coll is not None:
+            self._bridge_streams.append(self.coll.stream)
         if executor is not None:
             executor.adopt(self.admit_stream)
             executor.adopt(self.decode_stream)
@@ -125,19 +235,78 @@ class ServeEngine:
         self.decode_errors: collections.deque[BaseException] = \
             collections.deque(maxlen=256)
 
+    # -- sharded decode construction --------------------------------------
+    def _build_sharded_decode(self, chunks: int,
+                              round_batch: int | None) -> None:
+        """Compile the model-axis decode pair: ONE shared partial-logits
+        program (hidden + per-rank vocab-slice unembed) and the gather —
+        in-program ``all_gather`` (native) or a persistent user-space
+        ``allgather_init`` handle on a dedicated serve-collective stream
+        (built and warmed once: decode shapes are fixed)."""
+        cfg, mesh, axis = self.cfg, self.mesh, self.model_axis
+        from repro.collectives import nonblocking as NB
+        if axis not in dict(mesh.shape):
+            raise ValueError(f"mesh has no axis {axis!r}: {dict(mesh.shape)}")
+        n = dict(mesh.shape)[axis]
+        V = cfg.vocab_size
+        if V % n:
+            raise ValueError(
+                f"sharded serving needs vocab_size ({V}) divisible by the "
+                f"{axis!r} axis size ({n})")
+        vloc = V // n
+        self._model_shards = n
+        if not hasattr(registry.module_for(cfg), "decode_hidden"):
+            raise ValueError(
+                f"sharded serving not supported for family {cfg.family!r}")
+
+        def local_step(params, cache, toks, pos):
+            hid, new_cache = registry.decode_hidden(params, cfg, cache,
+                                                    toks, pos)
+            r = jax.lax.axis_index(axis)
+            part = registry.unembed_partial(params, cfg, hid,
+                                            r * vloc, vloc)
+            # [B, 1, vloc] -> [1, B, vloc]: leading dim carries the rank
+            # (the user-collective payload layout)
+            return part[:, 0][None], new_cache
+
+        self._jit_decode = jax.jit(compat.shard_map(
+            local_step, mesh=mesh, in_specs=(P(), P(), P(), P()),
+            out_specs=(P(axis), P())))
+
+        def local_gather(part):                  # local [1, B, vloc]
+            return jax.lax.all_gather(part, axis, axis=2, tiled=True)
+
+        if self.collective_backend == "native":
+            self._jit_gather = jax.jit(compat.shard_map(
+                local_gather, mesh=mesh, in_specs=P(axis),
+                out_specs=P(axis)))              # global [n, B, V]
+            self.coll = None
+            self._ag_handle = None
+        else:
+            self._jit_gather = None
+            self.coll = NB.UserCollectives(self.engine,
+                                           executor=self.executor,
+                                           name="serve-coll")
+            self._ag_handle = self.coll.allgather_init(
+                jax.ShapeDtypeStruct((n, self.batch_slots, vloc),
+                                     jnp.float32),
+                mesh, axis, chunks=chunks, round_batch=round_batch,
+                warmup=True)
+
     # -- client API -------------------------------------------------------
     def submit(self, request: GenRequest) -> Request:
         with self._lock:
             if self._stopping:
                 raise RuntimeError("serve engine is stopping")
             self._arrivals.append(request)
+            self._submitted += 1
         self._schedule_admit()               # the arrival event
         return request.done_req
 
     # -- caller-driven bridge ---------------------------------------------
     def _poll_streams(self) -> bool:
         made = 0
-        for s in (self.admit_stream, self.decode_stream):
+        for s in self._bridge_streams:
             try:
                 made += s._poll_once()
             except Exception:
@@ -147,6 +316,9 @@ class ServeEngine:
                 # and silently halt all serving
                 pass
         made += self.continuations.drain(self.continuation_max_drain)
+        coll = self.coll                 # close() nulls the attr concurrently
+        if coll is not None:
+            made += coll.queue.drain(self.continuation_max_drain)
         return made > 0
 
     # -- admission (event-scheduled, one-shot) ------------------------------
@@ -165,42 +337,65 @@ class ServeEngine:
         return DONE                          # one-shot: nothing left to poll
 
     def _admit(self) -> bool:
+        """Admit arrivals into free slots.  Slot assignment happens under
+        the lock; the token-by-token prefill stages a LOCAL cache outside
+        it (so ``submit``/detokenize/stats never block behind a prompt
+        loop) and the lock is retaken only to publish cache + active set
+        atomically.
+
+        Safe because prefill runs only when no decode step is in flight
+        (the step's continuation would overwrite ``slots.cache``) and
+        ``_prefill_active`` excludes concurrent admissions — the staged
+        cache is therefore the only writer until it is published."""
         with self._lock:
-            # prefill mutates slots.cache, which the in-flight step's
-            # continuation will overwrite with the step's output cache —
-            # admitting mid-step would silently discard the prompt KV.
-            # Defer: _on_step_done admits between steps instead.
-            if self._decode_inflight is not None:
+            if self._decode_inflight is not None or self._prefill_active:
                 return False
-            return self._admit_locked()
+            batch: list[tuple[GenRequest, object]] = []
+            while self._arrivals and self.slots.free_slots():
+                req = self._arrivals.popleft()
+                slot = self.slots.assign(req.request_id)
+                req.slot_index = slot.index
+                batch.append((req, slot))
+            if not batch:
+                return False
+            self._prefill_active = True
+            cache = self.slots.cache
+        try:
+            for req, slot in batch:
+                cache = self._prefill(req, slot, cache)
+        except BaseException as exc:  # noqa: BLE001
+            # prefill failure: fail the batch (finished_at + ledger so
+            # TTFT/latency accounting stays consistent), free the slots,
+            # and do NOT publish the staged cache
+            self.decode_errors.append(exc)
+            with self._lock:
+                self._prefill_active = False
+                for req, slot in batch:
+                    self.slots.release(slot)
+                    req.finished_at = time.monotonic()
+                    self._record_locked(req, failed=True)
+                    req.done_req.fail(exc)
+            self._schedule_admit()           # remaining arrivals, if any
+            return False
+        with self._lock:
+            self._prefill_active = False
+            self.slots.cache = cache
+            for req, slot in batch:
+                self._active[slot.index] = req
+        return True
 
-    def _admit_locked(self) -> bool:
-        """Admit arrivals into free slots; caller holds ``self._lock``
-        and guarantees no decode step is in flight."""
-        made = False
-        while self._arrivals and self.slots.free_slots():
-            req = self._arrivals.popleft()
-            slot = self.slots.assign(req.request_id)
-            req.slot_index = slot.index
-            # sequential prefill: feed prompt tokens through decode
-            # steps (token-by-token prefill keeps one compiled shape;
-            # a chunked prefill path is the serving hillclimb)
-            self._prefill(req, slot)
-            self._active[slot.index] = req
-            made = True
-        return made
-
-    def _prefill(self, req: GenRequest, slot) -> None:
-        # writes the prompt into the slot's cache; last logits start decode
-        cache = self.slots.cache
+    def _prefill(self, req: GenRequest, slot, cache):
+        """Token-by-token prefill into a STAGED cache (returned, not
+        published) — one compiled shape; a chunked prefill path is the
+        serving hillclimb.  Caller holds no lock; see ``_admit``."""
         for tok in req.prompt[:-1]:
             tokens = self._token_batch(slot.index, int(tok))
             pos = self.slots.positions()
             _, cache = self._jit_decode(self.params, cache, tokens, pos)
             slot.pos += 1
-        self.slots.cache = cache
         req.out_tokens = []
         req.next_input = int(req.prompt[-1])
+        return cache
 
     def _token_batch(self, slot_index: int, token: int):
         toks = np.zeros((self.batch_slots, 1), np.int32)
@@ -210,21 +405,33 @@ class ServeEngine:
     # -- fused decode (continuation-chained steps) ---------------------------
     def _schedule_decode(self) -> None:
         with self._lock:
-            if self._decode_inflight is not None or not self._active:
+            # defer while a prefill is staging: a step launched off the
+            # pre-prefill cache would have its continuation overwrite the
+            # published prompt KV.  The admitting thread always calls
+            # _schedule_decode after publishing, so nothing starves.
+            if (self._decode_inflight is not None or self._prefill_active
+                    or not self._active):
                 return
-            step = self._launch_decode_locked()
-        self._attach_step(step)
+            step, agreq, cache = self._launch_decode_locked()
+        self._attach_step(step, agreq, cache)
 
-    def _launch_decode_locked(self) -> Request:
+    def _launch_decode_locked(self):
         """Dispatch one fused decode step; caller holds ``self._lock``.
+        Returns ``(step, agreq, cache)``.
 
-        Completion is watched by a one-shot readiness task on the decode
-        stream that completes the returned ``step`` request — the only
-        place the device is polled.  Dispatch failure fails the request
-        instead of wedging the stream (the failure continuation cleans
-        up).  The caller attaches the continuation AFTER releasing the
-        lock: an already-failed step fires inline immediately, and that
-        must not happen while the serve lock is held.
+        Unsharded / native-sharded: completion is watched by a one-shot
+        readiness task on the decode stream that completes ``step`` —
+        the only place the device is polled.  User backend: the step's
+        partial logits are re-bound into the persistent all-gather
+        (``start``), and ``agreq``'s completion (bridged by a
+        continuation) completes ``step`` with the gathered logits — the
+        engine drives the gather rounds while the device runs.
+
+        Dispatch failure fails the request instead of wedging the stream
+        (the failure continuation cleans up).  The caller attaches the
+        continuations AFTER releasing the lock: an already-failed step
+        fires inline immediately, and that must not happen while the
+        serve lock is held.
         """
         step = Request(tag="decode-step")
         self._current_step = step
@@ -233,25 +440,48 @@ class ServeEngine:
             for idx, req in self._active.items():
                 toks[idx, 0] = req.next_input
             pos = self.slots.positions()
-            logits, cache = self._jit_decode(
+            out, cache = self._jit_decode(
                 self.params, self.slots.cache, jnp.asarray(toks), pos)
+            if self._jit_gather is not None:     # native-sharded gather
+                out = self._jit_gather(out)
+            agreq = None
+            if self._ag_handle is not None:      # user-space gather
+                agreq = self._ag_handle.start(out)
         except BaseException as exc:  # noqa: BLE001
             step.fail(exc)
-            return step
-        self._decode_inflight = (logits, cache)
+            return step, None, None
+        self._decode_inflight = (out, cache)
+        if agreq is None:
+            def ready_poll(thing, out=out, cache=cache, step=step) -> str:
+                if not out.is_ready():       # device still busy — no block
+                    return NOPROGRESS
+                step.complete((out, cache))
+                return DONE
 
-        def ready_poll(thing, logits=logits, cache=cache, step=step) -> str:
-            if not logits.is_ready():        # device still busy — no block
-                return NOPROGRESS
-            step.complete((logits, cache))
-            return DONE
+            self.engine.async_start(ready_poll, None, self.decode_stream)
+        return step, agreq, cache
 
-        self.engine.async_start(ready_poll, None, self.decode_stream)
-        return step
-
-    def _attach_step(self, step: Request) -> None:
+    def _attach_step(self, step: Request, agreq=None, cache=None) -> None:
+        if agreq is not None:
+            # bridge the persistent all-gather into the step request:
+            # detokenize (below) stays identical across backends
+            self.continuations.attach(
+                agreq,
+                lambda rq, step=step, cache=cache:
+                    step.complete((rq.value(), cache)),
+                on_error=lambda rq, step=step: step.fail(
+                    rq.exception
+                    or RuntimeError("serve all-gather failed")))
         self.continuations.attach(step, self._on_step_done,
                                   on_error=self._on_step_failed)
+
+    def _next_ids(self, logits) -> np.ndarray:
+        """Greedy ids [B] from the step output: unsharded logits are
+        [B, 1, V]; sharded (gathered) logits are [n, B, V] with every
+        row the full vocab in rank order — row 0 is the whole answer."""
+        if self._sharded:
+            return np.asarray(jnp.argmax(logits[0], axis=-1))
+        return np.asarray(jnp.argmax(logits[:, -1], axis=-1))
 
     def _on_step_done(self, step: Request) -> None:
         """Detokenize stage (a continuation): harvest the fused step,
@@ -262,12 +492,11 @@ class ServeEngine:
             # errors surface (not at dispatch) — a raise here must take
             # the failure path, not wedge the server with _active full
             # and no task on any stream
-            next_ids = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            next_ids = self._next_ids(logits)
         except BaseException as exc:  # noqa: BLE001
             self._fail_step(step, exc)
             return
         freed = False
-        next_step = None
         with self._lock:
             if self._current_step is not step:
                 return                         # stale: a newer step owns state
@@ -279,6 +508,7 @@ class ServeEngine:
             for idx, req in list(self._active.items()):
                 tok = int(next_ids[idx])
                 if req.first_token_at is None:
+                    # TTFT stamp: exactly once, on the first produced token
                     req.first_token_at = time.monotonic()
                 req.out_tokens.append(tok)
                 req.next_input = tok
@@ -290,17 +520,16 @@ class ServeEngine:
                 req = self._active.pop(idx)
                 req.finished_at = time.monotonic()
                 self.slots.release(self.slots.slots[idx])
+                self._record_locked(req, failed=False)
                 req.done_req.complete(req.out_tokens)
                 freed = True
-            # admit between steps: arrivals that landed while this step
-            # was in flight (their admission was deferred — prefill and
-            # an in-flight step must not both write slots.cache) join
-            # the batch before the next launch
-            self._admit_locked()
-            if self._active:
-                next_step = self._launch_decode_locked()  # chain the next step
-        if next_step is not None:
-            self._attach_step(next_step)
+        # admit between steps: arrivals that landed while this step was
+        # in flight (their admission was deferred — prefill and an
+        # in-flight step must not both write slots.cache) join the batch
+        # before the next launch.  Prefill stages outside the lock, so
+        # releasing it first keeps submit() responsive during admission.
+        self._admit()
+        self._schedule_decode()                # chain the next step
         if freed:
             self._schedule_admit()             # the slot-free event
 
@@ -322,16 +551,56 @@ class ServeEngine:
             self._decode_inflight = None
             for idx, req in list(self._active.items()):
                 self._active.pop(idx)
+                # first_token_at stays as-is: a request that failed
+                # before its first token keeps None (null-propagated —
+                # counted by the snapshot, never faked into TTFT)
                 req.finished_at = time.monotonic()
                 self.slots.release(self.slots.slots[idx])
+                self._record_locked(req, failed=True)
                 req.done_req.fail(exc)
         self._schedule_admit()
+
+    # -- latency accounting ------------------------------------------------
+    def _record_locked(self, req: GenRequest, failed: bool) -> None:
+        """Append one finished request to the ledger (caller holds the
+        serve lock — or owns the request exclusively, as prefill does)."""
+        self._finished.append((req.submitted_at, req.first_token_at,
+                               req.finished_at, failed))
+
+    def latency_snapshot(self) -> ServeLatencyStats:
+        """TTFT / completion-latency aggregates over the (bounded) ledger
+        of finished requests.  Requests that failed before producing a
+        first token are counted (``no_first_token``) and excluded from
+        the TTFT aggregates instead of silently skewing them."""
+        with self._lock:
+            records = list(self._finished)
+            submitted = self._submitted
+        snap = ServeLatencyStats(submitted=submitted)
+        ttfts, lats = [], []
+        for sub, first, fin, failed in records:
+            if failed:
+                snap.failed += 1
+            else:
+                snap.completed += 1
+            if first is None:
+                snap.no_first_token += 1
+            else:
+                ttfts.append((first - sub) * 1e3)
+            if fin is not None:
+                lats.append((fin - sub) * 1e3)
+        if ttfts:
+            (snap.ttft_ms_mean, snap.ttft_ms_p50,
+             snap.ttft_ms_p99) = _quantiles(ttfts)
+        if lats:
+            (snap.latency_ms_mean, snap.latency_ms_p50,
+             snap.latency_ms_p99) = _quantiles(lats)
+        return snap
 
     # -- lifecycle ------------------------------------------------------------
     @property
     def idle(self) -> bool:
         with self._lock:
-            busy = (self._active or self._arrivals
+            busy = (self._active or self._arrivals or self._prefill_active
                     or self._decode_inflight is not None)
         return not busy and self.continuations.ready == 0
 
@@ -388,6 +657,14 @@ class ServeEngine:
             self.executor.release_queue(self.continuations)
             self._queue_adopted = False
         self.continuations.close()
+        if self._ag_handle is not None:
+            self._ag_handle.close()
+            self._ag_handle = None
+        if self.coll is not None:
+            # drains the serve-collective stream and hands it back
+            self.coll.close(timeout=timeout)
+            self.coll = None
+            self._bridge_streams = [self.admit_stream, self.decode_stream]
         if self._sub is not None:
             self.engine.unregister_subsystem(self._sub)
             self._sub = None

@@ -4,6 +4,11 @@ Fixed pool of B slots, each a row of the model cache (batch dim).  The
 serving engine assigns arriving requests to free slots; decode steps run
 over all active slots with per-slot positions (ragged lengths handled by
 the masked decode attention).
+
+With a ``mesh`` the cache is placed replicated across the mesh devices
+at init (model-axis-sharded serving): every decode step donates and
+returns the cache in place, so fixing the layout once keeps the steady
+state free of per-step host→device transfers and resharding.
 """
 from __future__ import annotations
 
@@ -13,6 +18,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.models import registry
 
@@ -26,10 +33,14 @@ class Slot:
 
 
 class SlotCache:
-    def __init__(self, cfg, batch_slots: int, max_seq: int):
+    def __init__(self, cfg, batch_slots: int, max_seq: int, mesh=None):
         self.cfg = cfg
         self.max_seq = max_seq
+        self.mesh = mesh
         self.cache = registry.init_cache(cfg, batch_slots, max_seq)
+        if mesh is not None:
+            self.cache = jax.device_put(self.cache,
+                                        NamedSharding(mesh, P()))
         self.slots = [Slot(i) for i in range(batch_slots)]
 
     def free_slots(self) -> list[Slot]:
@@ -55,3 +66,6 @@ class SlotCache:
 
     def active_mask(self) -> np.ndarray:
         return np.array([not s.done for s in self.slots])
+
+    def active_count(self) -> int:
+        return sum(1 for s in self.slots if not s.done)
