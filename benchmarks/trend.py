@@ -27,13 +27,16 @@ import sys
 
 # Row-name prefixes tracked by the gate: the progress-engine
 # microbenchmarks (fig7), callback-vs-waitset delivery (fig13), the
-# user-collective sweep (fig14) and the serve-decode latency family
-# (serve_decode — unsharded / native-sharded / user-collective rows;
-# the existing fig* names are untouched so artifact history stays
-# comparable across runs).  fig14_persistent_gain and serve_gain rows
-# hold a ratio, not a latency — excluded.
+# user-collective sweep (fig14), the serve-decode latency family
+# (serve_decode — unsharded / native-sharded / user-collective rows)
+# and the continuous-batching arrival-trace family (serve_cb —
+# TTFT/p99 under a paged KV cache vs the fixed-slot baseline; the
+# existing fig* names are untouched so artifact history stays
+# comparable across runs).  fig14_persistent_gain, serve_gain and
+# cb_gain rows hold a ratio, not a latency — their names deliberately
+# fall outside the tracked prefixes.
 DEFAULT_PREFIXES = ("fig7", "fig13", "fig14_native", "fig14_user",
-                    "serve_decode")
+                    "serve_decode", "serve_cb")
 DEFAULT_THRESHOLD = 0.20
 
 

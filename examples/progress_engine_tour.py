@@ -306,6 +306,70 @@ def serve_collectives():
           f"start(s); {lat.format()}")
 
 
+def continuous_batching():
+    """Continuous batching on a paged KV cache.
+
+    The fixed-slot serve engine reserves ``max_seq`` cache positions per
+    lane for the whole residency of a request — short requests pay for
+    space they never touch.  ``cache_mode="paged"`` replaces the
+    monolithic slots with a pool of fixed-size KV blocks and turns the
+    engine into a continuous-batching scheduler:
+
+        1. admit    — arrivals land in a length-bucketed backlog; a
+                      request is admitted when a lane AND enough blocks
+                      for its prompt are free (claimed atomically)
+        2. prefill  — admitted prompts replay in fused chunks that
+                      interleave with decode steps of already-resident
+                      requests (the ``fed`` mask isolates recurrent
+                      state in SSM/hybrid families)
+        3. decode   — one fused step per token over the block tables;
+                      a lane that outgrows its blocks extends lazily
+        4. preempt  — under block pressure the YOUNGEST resident is
+                      evicted (blocks freed, request re-queued with its
+                      generated prefix); the oldest resident is never
+                      preempted, so progress is guaranteed and greedy
+                      streams stay bit-identical to the fixed-slot path
+
+    At equal cache bytes the paged pool sustains strictly more resident
+    requests because blocks are granted per-position, not per-max_seq."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import registry
+    from repro.serve.engine import GenRequest, ServeEngine
+
+    cfg = get_config("qwen2-0.5b").with_overrides(
+        num_layers=2, d_model=32, d_ff=64, vocab_size=64, num_heads=4,
+        num_kv_heads=2, head_dim=16, remat_policy="none")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, 63, size=rng.randint(2, 10)).astype(np.int32)
+               for _ in range(12)]
+
+    def serve(**kw):
+        eng = ProgressEngine()
+        srv = ServeEngine(cfg, params, eng, max_seq=32, **kw)
+        reqs = [GenRequest(f"cb{i}", p, max_new_tokens=6)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            srv.submit(r)
+        srv.run_until_idle(timeout=240)
+        lat, sched = srv.latency_snapshot(), srv.scheduler_snapshot()
+        srv.close(timeout=60)
+        return [list(r.out_tokens) for r in reqs], lat, sched
+
+    slot_toks, _, _ = serve(batch_slots=3)
+    # same cache bytes as 3 slots x 32 positions: 24 blocks of 4 — but
+    # 8 lanes, and a pool tight enough to exercise preemption
+    paged_toks, lat, sched = serve(batch_slots=8, cache_mode="paged",
+                                   kv_block_size=4, kv_blocks=25,
+                                   prefill_chunk=4)
+    assert paged_toks == slot_toks      # scheduling is invisible in output
+    print(f"continuous batching: 12 requests, paged == slots bit-exact; "
+          f"{sched.format()}; queued ms p50 {lat.queued_ms_p50:.1f}")
+
+
 if __name__ == "__main__":
     eng = ProgressEngine()
     listing_1_1_collated_subsystems(eng)
@@ -318,4 +382,5 @@ if __name__ == "__main__":
     continuations_post_attach_drain()
     nonblocking_collectives()
     serve_collectives()
+    continuous_batching()
     print("tour OK")

@@ -68,6 +68,29 @@ class ContinuationStats:
 
 
 @dataclasses.dataclass
+class SchedulerStats:
+    """Continuous-batching scheduler counters (paged serve engine).
+
+    ``admitted`` counts admissions *including re-admissions* of preempted
+    requests, so ``admitted - preemptions`` is the number of distinct
+    residencies that ran to completion/failure.  ``prefill_calls`` is the
+    number of fused chunked-prefill dispatches (each feeds every
+    mid-prefill lane one token) — the interleaving knob's observable."""
+    admitted: int = 0          # (re-)admissions into a lane
+    preemptions: int = 0       # evictions under block pressure
+    prefill_calls: int = 0     # fused chunked-prefill dispatches
+    peak_resident: int = 0     # max lanes occupied at once
+    peak_backlog: int = 0      # max requests waiting for lanes/blocks
+
+    def format(self) -> str:
+        return (f"scheduler: {self.admitted} admitted "
+                f"({self.preemptions} preemptions), "
+                f"{self.prefill_calls} prefill chunks; peaks: "
+                f"{self.peak_resident} resident, "
+                f"{self.peak_backlog} backlogged")
+
+
+@dataclasses.dataclass
 class EngineStats:
     streams: list[StreamStats]
     subsystems: list[SubsystemStats]

@@ -9,6 +9,13 @@ collectives on the serve-collective stream:
 
     PYTHONPATH=src python -m repro.launch.serve --devices 2 \
         --model-shards 2 --collective-backend user
+
+Continuous batching on a paged KV cache (length-bucketed admission,
+chunked prefill interleaved with decode, preemption under block
+pressure) replaces the fixed-slot cache with ``--cache-mode paged``:
+
+    PYTHONPATH=src python -m repro.launch.serve --cache-mode paged \
+        --slots 12 --kv-block-size 16 --kv-blocks 65 --requests 64
 """
 import argparse
 import os
@@ -25,6 +32,20 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--cache-mode", default="slots",
+                    choices=["slots", "paged"],
+                    help="KV cache layout: monolithic per-slot buffers, or "
+                         "a paged block pool with continuous batching "
+                         "(backlog admission, chunked prefill, preemption)")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="positions per KV block (paged mode)")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="total pool blocks incl. the reserved scratch "
+                         "block (0 = slots*ceil(max_seq/block)+1, i.e. "
+                         "the fixed-slot capacity)")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="fused prefill calls interleaved per admission "
+                         "round before decode resumes (paged mode)")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (CPU rehearsal)")
     ap.add_argument("--model-shards", type=int, default=0,
@@ -110,7 +131,11 @@ def main():
                       mesh=mesh, collective_backend=args.collective_backend,
                       collective_chunks=args.collective_chunks,
                       collective_round_batch=args.collective_round_batch
-                      or None)
+                      or None,
+                      cache_mode=args.cache_mode,
+                      kv_block_size=args.kv_block_size,
+                      kv_blocks=args.kv_blocks or None,
+                      prefill_chunk=args.prefill_chunk)
     if executor is not None:
         executor.start()
     rng = np.random.RandomState(1)
@@ -124,6 +149,7 @@ def main():
     srv.run_until_idle(timeout=600)
     snap = stats_mod.collect(eng, executor)   # before close drops the queue
     lat = srv.latency_snapshot()              # before close, too
+    sched = srv.scheduler_snapshot() if args.cache_mode == "paged" else None
     srv.close(timeout=60)
     if executor is not None:
         executor.shutdown(drain=True, timeout=60)
@@ -140,6 +166,8 @@ def main():
     # null-safe latency report: requests that failed before their first
     # token are counted, not subtracted from everyone else's TTFT
     print(lat.format())
+    if sched is not None:
+        print(sched.format())
     if args.stats:
         print(stats_mod.format_stats(snap))
     return 0

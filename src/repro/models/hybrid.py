@@ -240,3 +240,125 @@ def loss_fn(params, cfg: ModelConfig, batch):
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
     nll = jnp.mean(lse - gold)
     return nll + aux, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Paged decode: block-table-indexed KV at each shared-attention site,
+# fed-masked recurrent state for the SSM layers (see mamba.py notes)
+# ---------------------------------------------------------------------------
+
+PAGED_HAS_BLOCKS = True     # the attention sites cache KV per position
+
+
+def paged_cache_spec(cfg: ModelConfig, lanes: int, num_blocks: int,
+                     block_size: int):
+    n_groups, k, tail = group_layout(cfg)
+    KVH, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+    kv_shape = (n_groups, num_blocks, block_size, KVH, hd)
+    kv_axes = ("layers", None, "cache_seq", "act_kv_heads", "head_dim")
+    spec = {
+        "ssm": M.state_spec(cfg, cfg.num_layers - tail, lanes),
+        "attn_k": L.PSpec(kv_shape, kv_axes, init="zeros",
+                          dtype=jnp.dtype(cfg.dtype)),
+        "attn_v": L.PSpec(kv_shape, kv_axes, init="zeros",
+                          dtype=jnp.dtype(cfg.dtype)),
+    }
+    if tail:
+        spec["tail_ssm"] = M.state_spec(cfg, tail, lanes)
+    return spec
+
+
+def init_paged_cache(cfg: ModelConfig, lanes: int, num_blocks: int,
+                     block_size: int):
+    return L.init_tree(paged_cache_spec(cfg, lanes, num_blocks, block_size),
+                       jax.random.PRNGKey(0))
+
+
+def reset_paged_lane(cfg: ModelConfig, cache, lane_index: int):
+    """Zero one lane's SSM state; the attention block pools need no
+    reset (block discipline: stale bytes are never gathered unmasked)."""
+    new = dict(cache)
+    new["ssm"] = jax.tree.map(lambda a: a.at[:, lane_index].set(0),
+                              cache["ssm"])
+    if "tail_ssm" in cache:
+        new["tail_ssm"] = jax.tree.map(lambda a: a.at[:, lane_index].set(0),
+                                       cache["tail_ssm"])
+    return new
+
+
+def _shared_attn_paged(cfg, sp, lora, x, kc, vc, pos, tables):
+    """Shared attention + MLP block against the paged KV pool of one
+    site.  kc/vc: [num_blocks, bs, KVH, hd]; tables: [B, max_blocks]."""
+    from repro.models.transformer import _paged_view, paged_scatter
+    ap = dict(sp["attn"])
+    ap.update(lora)
+    h = L.rmsnorm(x, sp["ln1"], cfg.rms_norm_eps)
+    q, k, v = L.attn_qkv(ap, h, pos[:, None], cfg)
+    kc, vc = paged_scatter(kc, vc, k[:, 0], v[:, 0], tables, pos)
+    o = L.decode_attention(q, _paged_view(kc, tables),
+                           _paged_view(vc, tables), pos)
+    x = x + L.attn_out(ap, o)
+    h = L.rmsnorm(x, sp["ln2"], cfg.rms_norm_eps)
+    x = x + L.mlp_apply(sp["mlp"], h)
+    return shard_hint(x, "batch", "act_seq", "act_embed"), kc, vc
+
+
+def decode_step_paged(params, cfg: ModelConfig, cache, tokens, pos, tables,
+                      fed=None):
+    from repro.models.transformer import unembed
+    x, new_cache = decode_hidden_paged(params, cfg, cache, tokens, pos,
+                                       tables, fed)
+    return unembed(params, cfg, x), new_cache
+
+
+def decode_hidden_paged(params, cfg: ModelConfig, cache, tokens, pos, tables,
+                        fed=None):
+    from repro.models.transformer import embed_tokens
+    x = embed_tokens(params, cfg, tokens)
+    n_groups, k, tail = group_layout(cfg)
+
+    grouped = jax.tree.map(lambda a: a.reshape((n_groups, k) + a.shape[1:]),
+                           params["blocks"])
+    gnorms = params["block_norms"].reshape(n_groups, k, -1)
+    gssm = jax.tree.map(lambda a: a.reshape((n_groups, k) + a.shape[1:]),
+                        cache["ssm"])
+
+    def group_body(x, scanned):
+        gblocks, gn, lora, sts, kc, vc = scanned
+        new_sts = []
+        for i in range(k):
+            bp = _stack_index(gblocks, i)
+            st = _stack_index(sts, i)
+            h = L.rmsnorm(x, gn[i], cfg.rms_norm_eps)
+            y, new_st = M.block_decode(bp, cfg, st, h)
+            if fed is not None:
+                new_st = M.masked_state(fed, new_st, st)
+            x = x + y
+            new_sts.append(new_st)
+        sts = jax.tree.map(lambda *a: jnp.stack(a), *new_sts)
+        x, kc, vc = _shared_attn_paged(cfg, params["shared"], lora, x,
+                                       kc, vc, pos, tables)
+        return x, (sts, kc, vc)
+
+    x, (new_ssm, new_k, new_v) = jax.lax.scan(
+        group_body, x,
+        (grouped, gnorms, params["site_lora"], gssm,
+         cache["attn_k"], cache["attn_v"]))
+    new_cache = {
+        "ssm": jax.tree.map(lambda a: a.reshape((n_groups * k,) + a.shape[2:]), new_ssm),
+        "attn_k": new_k, "attn_v": new_v,
+    }
+    if tail:
+        tail_sts = []
+        for i in range(tail):
+            bp = _stack_index(params["tail_blocks"], i)
+            st = _stack_index(cache["tail_ssm"], i)
+            h = L.rmsnorm(x, params["tail_norms"][i], cfg.rms_norm_eps)
+            y, new_st = M.block_decode(bp, cfg, st, h)
+            if fed is not None:
+                new_st = M.masked_state(fed, new_st, st)
+            x = x + y
+            tail_sts.append(new_st)
+        new_cache["tail_ssm"] = jax.tree.map(lambda *a: jnp.stack(a), *tail_sts)
+    x = L.rmsnorm(x, params["final_norm"], cfg.rms_norm_eps)
+    return x, new_cache

@@ -334,3 +334,71 @@ def loss_fn(params, cfg: ModelConfig, batch):
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
     nll = jnp.mean(lse - gold)
     return nll + aux, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Paged decode: O(1) recurrent state has no sequence blocks to page —
+# the "paged" cache is simply per-lane state.  What the continuous-
+# batching engine DOES need from an SSM family is fed-masking: the
+# recurrent state is a running reduction, so a lane that is not fed a
+# real token this call (idle, or mid-prefill of a different lane) must
+# keep its state bit-frozen — attention caches survive garbage at the
+# next write position because it is overwritten before the mask exposes
+# it, but an SSM update is irreversible.
+# ---------------------------------------------------------------------------
+
+PAGED_HAS_BLOCKS = False    # O(1) state: no per-position pool blocks
+
+
+def paged_cache_spec(cfg: ModelConfig, lanes: int, num_blocks: int,
+                     block_size: int):
+    return state_spec(cfg, cfg.num_layers, lanes)
+
+
+def init_paged_cache(cfg: ModelConfig, lanes: int, num_blocks: int,
+                     block_size: int):
+    return L.init_tree(paged_cache_spec(cfg, lanes, num_blocks, block_size),
+                       jax.random.PRNGKey(0))
+
+
+def reset_paged_lane(cfg: ModelConfig, cache, lane_index: int):
+    """Zero one lane's recurrent state (leaves are [NL, lanes, ...]):
+    unlike KV blocks, state is never overwritten-before-read, so a
+    recycled lane would otherwise leak its previous occupant's state."""
+    return jax.tree.map(lambda a: a.at[:, lane_index].set(0), cache)
+
+
+def masked_state(fed, new_state, old_state):
+    """Per-lane select: advanced state where ``fed`` [B], frozen
+    elsewhere."""
+    def sel(new, old):
+        m = fed.reshape((fed.shape[0],) + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old)
+    return jax.tree.map(sel, new_state, old_state)
+
+
+def decode_step_paged(params, cfg: ModelConfig, cache, tokens, pos, tables,
+                      fed=None):
+    from repro.models.transformer import unembed
+    x, new_state = decode_hidden_paged(params, cfg, cache, tokens, pos,
+                                       tables, fed)
+    return unembed(params, cfg, x), new_state
+
+
+def decode_hidden_paged(params, cfg: ModelConfig, cache, tokens, pos, tables,
+                        fed=None):
+    from repro.models.transformer import embed_tokens
+    x = embed_tokens(params, cfg, tokens)
+
+    def body(x, scanned):
+        bp, nrm, st = scanned
+        h = L.rmsnorm(x, nrm, cfg.rms_norm_eps)
+        y, new_st = block_decode(bp, cfg, st, h)
+        if fed is not None:
+            new_st = masked_state(fed, new_st, st)
+        return x + y, new_st
+
+    x, new_state = jax.lax.scan(
+        body, x, (params["blocks"], params["block_norms"], cache))
+    x = L.rmsnorm(x, params["final_norm"], cfg.rms_norm_eps)
+    return x, new_state

@@ -91,6 +91,47 @@ def init_cache(cfg, batch, max_seq):
 
 
 # ---------------------------------------------------------------------------
+# Paged decode (block-table-indexed KV cache; see serve/kvcache.py)
+# ---------------------------------------------------------------------------
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """True iff the family implements the paged decode entry points."""
+    return hasattr(module_for(cfg), "decode_step_paged")
+
+
+def paged_has_blocks(cfg: ModelConfig) -> bool:
+    """True iff the paged cache actually pages KV by position (attention
+    families).  SSM families keep lane-indexed recurrent state instead —
+    the block allocator is bypassed but the lane/fed machinery applies."""
+    return bool(getattr(module_for(cfg), "PAGED_HAS_BLOCKS", False))
+
+
+def init_paged_cache(cfg, lanes, num_blocks, block_size):
+    m = module_for(cfg)
+    if not hasattr(m, "init_paged_cache"):
+        raise NotImplementedError(
+            f"paged decode not supported for family {cfg.family!r}")
+    return m.init_paged_cache(cfg, lanes, num_blocks, block_size)
+
+
+def decode_step_paged(params, cfg, cache, tokens, pos, tables, fed=None):
+    return module_for(cfg).decode_step_paged(params, cfg, cache, tokens,
+                                             pos, tables, fed)
+
+
+def decode_hidden_paged(params, cfg, cache, tokens, pos, tables, fed=None):
+    m = module_for(cfg)
+    if not hasattr(m, "decode_hidden_paged"):
+        raise NotImplementedError(
+            f"decode_hidden_paged not supported for family {cfg.family!r}")
+    return m.decode_hidden_paged(params, cfg, cache, tokens, pos, tables, fed)
+
+
+def reset_paged_lane(cfg, cache, lane_index):
+    return module_for(cfg).reset_paged_lane(cfg, cache, lane_index)
+
+
+# ---------------------------------------------------------------------------
 # Analytical counts (roofline MODEL_FLOPS)
 # ---------------------------------------------------------------------------
 

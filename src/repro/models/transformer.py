@@ -291,6 +291,149 @@ def decode_hidden(params, cfg: ModelConfig, cache, tokens, pos):
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache + decode (block-table-indexed attention)
+# ---------------------------------------------------------------------------
+#
+# The paged layout replaces the per-slot [B, max_seq] cache rows with a
+# shared pool of fixed-size blocks [num_blocks, block_size]; each decode
+# lane carries a block *table* [max_blocks] of physical pool indices.
+# Per step, the new token's K/V is scattered into (table[pos//bs],
+# pos%bs) and attention runs over the table-gathered view
+# [B, max_blocks*block_size, KVH, hd] through the SAME masked
+# decode_attention as the monolithic path — positions > pos are masked
+# to exact zeros, so stale bytes in recycled blocks (and the shared
+# scratch block 0 behind unallocated table entries) are unreachable and
+# the gathered view is value-identical to a monolithic cache row.
+
+PAGED_HAS_BLOCKS = True     # per-position KV: sequences occupy pool blocks
+
+
+def paged_cache_spec(cfg: ModelConfig, lanes: int, num_blocks: int,
+                     block_size: int):
+    NL, KVH = cfg.num_layers, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim()
+    axes = ("layers", None, "cache_seq", "act_kv_heads", "head_dim")
+    shape = (NL, num_blocks, block_size, KVH, hd)
+    if cfg.kv_cache_dtype == "int8":
+        s_axes = ("layers", None, "cache_seq", "act_kv_heads", None)
+        s_shape = (NL, num_blocks, block_size, KVH, 1)
+        return {
+            "k": L.PSpec(shape, axes, init="zeros", dtype=jnp.int8),
+            "v": L.PSpec(shape, axes, init="zeros", dtype=jnp.int8),
+            "k_scale": L.PSpec(s_shape, s_axes, init="zeros", dtype=jnp.float32),
+            "v_scale": L.PSpec(s_shape, s_axes, init="zeros", dtype=jnp.float32),
+        }
+    return {
+        "k": L.PSpec(shape, axes, init="zeros", dtype=jnp.dtype(cfg.dtype)),
+        "v": L.PSpec(shape, axes, init="zeros", dtype=jnp.dtype(cfg.dtype)),
+    }
+
+
+def init_paged_cache(cfg: ModelConfig, lanes: int, num_blocks: int,
+                     block_size: int):
+    return L.init_tree(paged_cache_spec(cfg, lanes, num_blocks, block_size),
+                       jax.random.PRNGKey(0))
+
+
+def reset_paged_lane(cfg: ModelConfig, cache, lane_index: int):
+    # nothing lane-indexed to clear: blocks are scatter-overwritten
+    # before the masked attention can reach them
+    return cache
+
+
+def paged_scatter(kc, vc, k_new, v_new, tables, pos):
+    """Scatter one token's K/V [B, KVH, hd] into the pool at
+    (table[pos//bs], pos%bs).  Lanes whose table entry is the scratch
+    block (idle lanes) land at physical block 0 — never gathered by a
+    live table, so the duplicate writes are harmless."""
+    B = k_new.shape[0]
+    bs = kc.shape[1]
+    phys = tables[jnp.arange(B), pos // bs]
+    off = pos % bs
+    return kc.at[phys, off].set(k_new), vc.at[phys, off].set(v_new)
+
+
+def _paged_view(pool, tables):
+    """Gather [num_blocks, bs, ...] through tables [B, max_blocks] into
+    the per-lane contiguous view [B, max_blocks*bs, ...]."""
+    B, nb = tables.shape
+    v = pool[tables]
+    return v.reshape((B, nb * v.shape[2]) + v.shape[3:])
+
+
+def _layer_decode_paged(cfg: ModelConfig, x, lp, kc, vc, pos, tables,
+                        ks=None, vs=None):
+    """One decoded token through one layer against the paged pool.
+    x: [B,1,D]; kc/vc: [num_blocks, bs, KVH, hd] (int8 with ks/vs scale
+    pools when cfg.kv_cache_dtype == "int8"); tables: [B, max_blocks]."""
+    h = L.rmsnorm(x, lp["ln1"], cfg.rms_norm_eps)
+    q, k_new, v_new = L.attn_qkv(lp["attn"], h, pos[:, None], cfg)
+    if ks is not None:
+        kq, ksc = _quantize_kv(k_new[:, 0])
+        vq, vsc = _quantize_kv(v_new[:, 0])
+        kc, vc = paged_scatter(kc, vc, kq, vq, tables, pos)
+        ks, vs = paged_scatter(ks, vs, ksc, vsc, tables, pos)
+        k_use = (_paged_view(kc, tables).astype(jnp.float32)
+                 * _paged_view(ks, tables)).astype(cfg.dtype)
+        v_use = (_paged_view(vc, tables).astype(jnp.float32)
+                 * _paged_view(vs, tables)).astype(cfg.dtype)
+    else:
+        kc, vc = paged_scatter(kc, vc, k_new[:, 0], v_new[:, 0], tables, pos)
+        k_use = _paged_view(kc, tables)
+        v_use = _paged_view(vc, tables)
+    o = L.decode_attention(q, k_use, v_use, pos, logit_cap=cfg.logit_softcap)
+    x = x + L.attn_out(lp["attn"], o)
+    h = L.rmsnorm(x, lp["ln2"], cfg.rms_norm_eps)
+    if cfg.moe is not None:
+        y, _ = L.moe_apply(lp["moe"], h, cfg)
+    else:
+        y = L.mlp_apply(lp["mlp"], h)
+    return x + y, kc, vc, ks, vs
+
+
+def decode_step_paged(params, cfg: ModelConfig, cache, tokens, pos, tables,
+                      fed=None):
+    """tokens [B,1], pos [B], tables [B,max_blocks] -> (logits [B,1,V],
+    updated pool cache).  ``fed`` ([B] bool, which lanes carry a real
+    token this call) is unused here: attention KV at a non-fed lane's
+    next-write position is overwritten by its next real token before the
+    mask ever exposes it."""
+    x, new_cache = decode_hidden_paged(params, cfg, cache, tokens, pos,
+                                       tables, fed)
+    return unembed(params, cfg, x), new_cache
+
+
+def decode_hidden_paged(params, cfg: ModelConfig, cache, tokens, pos, tables,
+                        fed=None):
+    """Paged decode step up to (and including) the final norm."""
+    x = embed_tokens(params, cfg, tokens)
+    int8 = cfg.kv_cache_dtype == "int8"
+
+    def body(x, scanned):
+        if int8:
+            lp, kc, vc, ks, vs = scanned
+        else:
+            lp, kc, vc = scanned
+            ks = vs = None
+        x, kc, vc, ks, vs = _layer_decode_paged(cfg, x, lp, kc, vc, pos,
+                                                tables, ks, vs)
+        return x, ((kc, vc, ks, vs) if int8 else (kc, vc))
+
+    if int8:
+        x, (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["k_scale"], cache["v_scale"]))
+        new_cache = {"k": k_new, "v": v_new,
+                     "k_scale": ks_new, "v_scale": vs_new}
+    else:
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": k_new, "v": v_new}
+    x = L.rmsnorm(x, params["final_norm"], cfg.rms_norm_eps)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
 # Loss
 # ---------------------------------------------------------------------------
 

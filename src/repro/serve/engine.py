@@ -76,8 +76,9 @@ from repro import compat
 from repro.core import DEFERRED, DONE, NOPROGRESS, ProgressEngine, Request
 from repro.core.continuations import POLICIES, ContinuationQueue
 from repro.core.executor import ProgressExecutor
+from repro.core.stats import SchedulerStats
 from repro.models import registry
-from repro.serve.kvcache import SlotCache
+from repro.serve.kvcache import PagedKVCache, SlotCache
 
 
 @dataclasses.dataclass
@@ -96,6 +97,73 @@ class GenRequest:
     # them — see ServeLatencyStats.no_first_token)
     first_token_at: float | None = None
     finished_at: float | None = None
+    # -- continuous-batching bookkeeping (paged cache mode) ----------------
+    # replay = prompt + generated prefix: what prefill must rebuild in the
+    # KV cache.  Set at first admission; recomputed at preemption so a
+    # re-admitted request resumes its exact token stream (greedy decode is
+    # per-lane deterministic — same replay ⇒ same continuation).
+    replay: Optional[np.ndarray] = None
+    prefill_pos: int = 0           # replay tokens already fed this residency
+    preemptions: int = 0           # times evicted under block pressure
+    seq: int = 0                   # submit order; the scheduler never
+    #                                preempts the oldest resident
+    queued_s: float = 0.0          # total backlog wait across (re)admissions
+    last_enqueued_at: float = 0.0
+
+
+class _BucketBacklog:
+    """Length-bucketed FIFO backlog (power-of-two length buckets).
+
+    Admission drains buckets in order of their oldest member, so requests
+    of similar length are admitted together (their prefills retire
+    together and lanes churn less — the classic bucket-by-length batching
+    idiom), while one bucket's over-long head cannot starve the others:
+    ``pop_fitting`` falls through to the next bucket when a head does not
+    fit the free pool.  Within a bucket order is by submit ``seq``, so a
+    preempted request re-enters ahead of younger arrivals and is retried
+    first once blocks free up.
+    """
+
+    def __init__(self):
+        self._buckets: dict[int, collections.deque] = {}
+
+    @staticmethod
+    def bucket_of(length: int) -> int:
+        return max(1, int(length)).bit_length()
+
+    def push(self, req: GenRequest) -> None:
+        dq = self._buckets.setdefault(self.bucket_of(len(req.replay)),
+                                      collections.deque())
+        if not dq or req.seq >= dq[-1].seq:
+            dq.append(req)
+        elif req.seq <= dq[0].seq:
+            dq.appendleft(req)
+        else:                       # rare: mid-deque re-admission
+            items = sorted([*dq, req], key=lambda r: r.seq)
+            dq.clear()
+            dq.extend(items)
+
+    def pop_fitting(self, fits):
+        """First (oldest-bucket-first) request for which ``fits(req)``
+        returns a lane; ``(None, None)`` when nothing fits."""
+        order = sorted((dq for dq in self._buckets.values() if dq),
+                       key=lambda dq: dq[0].seq)
+        for dq in order:
+            lane = fits(dq[0])
+            if lane is not None:
+                return dq.popleft(), lane
+        return None, None
+
+    def drain(self) -> list:
+        out = []
+        for dq in self._buckets.values():
+            out.extend(dq)
+            dq.clear()
+        out.sort(key=lambda r: r.seq)
+        return out
+
+    def __len__(self) -> int:
+        return sum(len(dq) for dq in self._buckets.values())
 
 
 def _quantiles(samples_ms: list[float]) -> tuple[float, float, float]:
@@ -113,28 +181,39 @@ class ServeLatencyStats:
     TTFT aggregates cover only requests that produced a first token;
     ``no_first_token`` counts the ones that finished (failed) without —
     they are excluded from TTFT rather than silently dropped from the
-    ledger.  Latency aggregates cover every finished request."""
+    ledger.  Latency aggregates cover every finished request.  Queue-time
+    aggregates cover time spent waiting in the backlog (summed across
+    re-admissions for preempted requests); ``preempted``/``preemptions``
+    count requests evicted under block pressure and total evictions."""
     submitted: int = 0
     completed: int = 0
     failed: int = 0
     no_first_token: int = 0          # finished without a first token
+    preempted: int = 0               # finished requests evicted >= once
+    preemptions: int = 0             # total evictions over those requests
     ttft_ms_mean: float | None = None
     ttft_ms_p50: float | None = None
     ttft_ms_p99: float | None = None
     latency_ms_mean: float | None = None
     latency_ms_p50: float | None = None
     latency_ms_p99: float | None = None
+    queued_ms_mean: float | None = None
+    queued_ms_p50: float | None = None
+    queued_ms_p99: float | None = None
 
     def format(self) -> str:
         def f(v):
             return f"{v:.1f}" if v is not None else "n/a"
         return (f"requests: {self.submitted} submitted, "
                 f"{self.completed} completed, {self.failed} failed "
-                f"({self.no_first_token} without first token); "
+                f"({self.no_first_token} without first token, "
+                f"{self.preempted} preempted {self.preemptions}x); "
                 f"TTFT ms mean/p50/p99 {f(self.ttft_ms_mean)}/"
                 f"{f(self.ttft_ms_p50)}/{f(self.ttft_ms_p99)}; "
                 f"latency ms mean/p50/p99 {f(self.latency_ms_mean)}/"
-                f"{f(self.latency_ms_p50)}/{f(self.latency_ms_p99)}")
+                f"{f(self.latency_ms_p50)}/{f(self.latency_ms_p99)}; "
+                f"queued ms mean/p50/p99 {f(self.queued_ms_mean)}/"
+                f"{f(self.queued_ms_p50)}/{f(self.queued_ms_p99)}")
 
 
 class ServeEngine:
@@ -147,7 +226,11 @@ class ServeEngine:
                  mesh=None, model_axis: str = "model",
                  collective_backend: str = "native",
                  collective_chunks: int = 1,
-                 collective_round_batch: int | None = None):
+                 collective_round_batch: int | None = None,
+                 cache_mode: str = "slots",
+                 kv_block_size: int = 16,
+                 kv_blocks: int | None = None,
+                 prefill_chunk: int = 8):
         if continuation_policy not in POLICIES:
             raise ValueError(f"continuation_policy must be one of {POLICIES}")
         if collective_backend not in ("native", "user"):
@@ -158,6 +241,11 @@ class ServeEngine:
             # than an eager error
             raise ValueError("collective_backend='user' requires a mesh "
                              "(model-axis-sharded decode)")
+        if cache_mode not in ("slots", "paged"):
+            raise ValueError("cache_mode must be 'slots' or 'paged'")
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got "
+                             f"{prefill_chunk}")
         self.cfg = cfg
         self.params = params
         self.engine = engine
@@ -166,11 +254,25 @@ class ServeEngine:
         self.model_axis = model_axis
         self.collective_backend = collective_backend
         self._sharded = mesh is not None
-        self.slots = SlotCache(cfg, batch_slots, max_seq, mesh=mesh)
+        self.paged = cache_mode == "paged"
+        if self.paged:
+            self.slots = PagedKVCache(cfg, batch_slots, max_seq,
+                                      block_size=kv_block_size,
+                                      num_blocks=kv_blocks, mesh=mesh)
+        else:
+            self.slots = SlotCache(cfg, batch_slots, max_seq, mesh=mesh)
         self.batch_slots = batch_slots
         self.max_seq = max_seq
+        self.prefill_chunk = prefill_chunk
         self._arrivals: collections.deque[GenRequest] = collections.deque()
         self._active: dict[int, GenRequest] = {}
+        # paged continuous batching: requests waiting for blocks/lanes,
+        # and lanes whose prompt replay is mid-prefill (chunked — prefill
+        # interleaves with decode steps instead of blocking them)
+        self._backlog = _BucketBacklog()
+        self._prefilling: dict[int, GenRequest] = {}
+        self._seq = 0                  # submit-order stamp (preemption policy)
+        self.sched = SchedulerStats()
         # one lock serialises admission/prefill against detokenize: the
         # stages may run on different executor workers, but KV cache and
         # slot state are shared.  Prefill itself runs OUTSIDE the lock
@@ -195,8 +297,13 @@ class ServeEngine:
             self.coll = None
             self._ag_handle = None
             self._jit_gather = None
-            self._jit_decode = jax.jit(
-                lambda p, c, t, q: registry.decode_step(p, cfg, c, t, q))
+            if self.paged:
+                self._jit_decode = jax.jit(
+                    lambda p, c, t, q, bt, fd: registry.decode_step_paged(
+                        p, cfg, c, t, q, bt, fd))
+            else:
+                self._jit_decode = jax.jit(
+                    lambda p, c, t, q: registry.decode_step(p, cfg, c, t, q))
         self.admit_stream = engine.stream("serve-admit")
         self.decode_stream = engine.stream("serve-decode")
         # decode completions are delivered through this queue; its
@@ -255,23 +362,38 @@ class ServeEngine:
                 f"{axis!r} axis size ({n})")
         vloc = V // n
         self._model_shards = n
-        if not hasattr(registry.module_for(cfg), "decode_hidden"):
+        hidden_fn = "decode_hidden_paged" if self.paged else "decode_hidden"
+        if not hasattr(registry.module_for(cfg), hidden_fn):
             raise ValueError(
                 f"sharded serving not supported for family {cfg.family!r}")
 
-        def local_step(params, cache, toks, pos):
-            hid, new_cache = registry.decode_hidden(params, cfg, cache,
-                                                    toks, pos)
-            r = jax.lax.axis_index(axis)
-            part = registry.unembed_partial(params, cfg, hid,
-                                            r * vloc, vloc)
-            # [B, 1, vloc] -> [1, B, vloc]: leading dim carries the rank
-            # (the user-collective payload layout)
-            return part[:, 0][None], new_cache
+        if self.paged:
+            def local_step(params, cache, toks, pos, tables, fed):
+                hid, new_cache = registry.decode_hidden_paged(
+                    params, cfg, cache, toks, pos, tables, fed)
+                r = jax.lax.axis_index(axis)
+                part = registry.unembed_partial(params, cfg, hid,
+                                                r * vloc, vloc)
+                return part[:, 0][None], new_cache
 
-        self._jit_decode = jax.jit(compat.shard_map(
-            local_step, mesh=mesh, in_specs=(P(), P(), P(), P()),
-            out_specs=(P(axis), P())))
+            self._jit_decode = jax.jit(compat.shard_map(
+                local_step, mesh=mesh,
+                in_specs=(P(), P(), P(), P(), P(), P()),
+                out_specs=(P(axis), P())))
+        else:
+            def local_step(params, cache, toks, pos):
+                hid, new_cache = registry.decode_hidden(params, cfg, cache,
+                                                        toks, pos)
+                r = jax.lax.axis_index(axis)
+                part = registry.unembed_partial(params, cfg, hid,
+                                                r * vloc, vloc)
+                # [B, 1, vloc] -> [1, B, vloc]: leading dim carries the
+                # rank (the user-collective payload layout)
+                return part[:, 0][None], new_cache
+
+            self._jit_decode = jax.jit(compat.shard_map(
+                local_step, mesh=mesh, in_specs=(P(), P(), P(), P()),
+                out_specs=(P(axis), P())))
 
         def local_gather(part):                  # local [1, B, vloc]
             return jax.lax.all_gather(part, axis, axis=2, tiled=True)
@@ -298,8 +420,13 @@ class ServeEngine:
         with self._lock:
             if self._stopping:
                 raise RuntimeError("serve engine is stopping")
+            request.seq = self._seq
+            self._seq += 1
+            request.last_enqueued_at = time.monotonic()
             self._arrivals.append(request)
             self._submitted += 1
+            waiting = len(self._arrivals) + len(self._backlog)
+            self.sched.peak_backlog = max(self.sched.peak_backlog, waiting)
         self._schedule_admit()               # the arrival event
         return request.done_req
 
@@ -324,7 +451,8 @@ class ServeEngine:
     # -- admission (event-scheduled, one-shot) ------------------------------
     def _schedule_admit(self) -> None:
         with self._lock:
-            if self._admit_scheduled or not self._arrivals:
+            pending = (self._arrivals or self._backlog or self._prefilling)
+            if self._admit_scheduled or not pending:
                 return
             self._admit_scheduled = True
         self.engine.async_start(self._admit_task, None, self.admit_stream)
@@ -337,6 +465,121 @@ class ServeEngine:
         return DONE                          # one-shot: nothing left to poll
 
     def _admit(self) -> bool:
+        """Admission + (paged) one prefill chunk; see the mode-specific
+        bodies.  Both stage cache writes outside the lock and publish
+        atomically."""
+        if self.paged:
+            return self._admit_paged()
+        return self._admit_slots()
+
+    def _admit_paged(self) -> bool:
+        """Continuous-batching admission: drain arrivals into the
+        length-bucketed backlog, admit whatever fits the free lanes AND
+        free blocks (lane + prefill blocks claimed atomically), then run
+        ONE chunk of batched prefill — at most ``prefill_chunk`` fused
+        calls, each feeding EVERY mid-prefill lane its next replay token.
+        Long prompts therefore interleave with decode steps instead of
+        blocking them: the caller (admit task / detokenize continuation)
+        re-schedules until every replay is rebuilt.
+
+        Runs the chunk on a STAGED cache outside the lock (same
+        discipline as slot-mode prefill: no decode step is in flight and
+        ``_prefill_active`` excludes concurrent admissions)."""
+        with self._lock:
+            if self._decode_inflight is not None or self._prefill_active:
+                return False
+            now = time.monotonic()
+            while self._arrivals:
+                req = self._arrivals.popleft()
+                if req.replay is None:
+                    req.replay = np.asarray(req.prompt, np.int32)
+                self._backlog.push(req)
+
+            def fits(req):
+                return self.slots.assign(req.request_id,
+                                         seq_len=len(req.replay))
+
+            admitted = []
+            while self.slots.free_count:
+                req, lane = self._backlog.pop_fitting(fits)
+                if req is None:
+                    break
+                req.slot_index = lane.index
+                req.prefill_pos = 0
+                req.queued_s += now - req.last_enqueued_at
+                self._prefilling[lane.index] = req
+                admitted.append(req)
+                self.sched.admitted += 1
+            if not self._prefilling:
+                return False
+            self.sched.peak_resident = max(
+                self.sched.peak_resident,
+                len(self._active) + len(self._prefilling))
+            self._prefill_active = True
+            cache = self.slots.cache
+            new_lanes = [r.slot_index for r in admitted]
+        try:
+            for idx in new_lanes:
+                # recycled lane: zero per-lane recurrent state (SSM) so
+                # the previous occupant cannot leak into this request
+                cache = self.slots.reset_lane(cache, idx)
+            cache, completed = self._prefill_chunk(cache)
+        except BaseException as exc:  # noqa: BLE001
+            # chunk failure: the staged cache is NOT published, so every
+            # mid-prefill replay is lost — fail those requests exactly
+            # once, return their lanes and blocks to the free lists
+            self.decode_errors.append(exc)
+            with self._lock:
+                self._prefill_active = False
+                for idx, req in list(self._prefilling.items()):
+                    self._prefilling.pop(idx)
+                    self.slots.release(self.slots.slots[idx])
+                    req.finished_at = time.monotonic()
+                    self._record_locked(req, failed=True)
+                    req.done_req.fail(exc)
+            self._schedule_admit()           # backlog remainder, if any
+            return False
+        with self._lock:
+            self._prefill_active = False
+            self.slots.cache = cache
+            for idx in completed:
+                self._active[idx] = self._prefilling.pop(idx)
+        return True
+
+    def _prefill_chunk(self, cache):
+        """Up to ``prefill_chunk`` fused paged calls over the staged
+        cache; logits are discarded (and in sharded mode no gather is
+        started) — prefill only needs the KV side effect.  Lanes not
+        being fed freeze their SSM state via the ``fed`` mask; their
+        attention scratch writes are overwritten before the causal mask
+        can expose them (see models/transformer.py).  Returns the staged
+        cache and the lanes whose replay completed."""
+        for _ in range(self.prefill_chunk):
+            feeding = [(idx, req) for idx, req in self._prefilling.items()
+                       if req.prefill_pos < len(req.replay) - 1]
+            if not feeding:
+                break
+            toks = np.zeros((self.batch_slots, 1), np.int32)
+            fed = np.zeros((self.batch_slots,), bool)
+            for idx, req in feeding:
+                toks[idx, 0] = int(req.replay[req.prefill_pos])
+                fed[idx] = True
+            _, cache = self._jit_decode(
+                self.params, cache, jnp.asarray(toks),
+                self.slots.positions(), self.slots.block_tables(),
+                jnp.asarray(fed))
+            for idx, req in feeding:
+                req.prefill_pos += 1
+                self.slots.slots[idx].pos += 1
+            self.sched.prefill_calls += 1
+        completed = []
+        for idx, req in self._prefilling.items():
+            if req.prefill_pos >= len(req.replay) - 1:
+                req.next_input = int(req.replay[-1])
+                completed.append(idx)
+        return cache, completed
+
+    def _admit_slots(self) -> bool:
         """Admit arrivals into free slots.  Slot assignment happens under
         the lock; the token-by-token prefill stages a LOCAL cache outside
         it (so ``submit``/detokenize/stats never block behind a prompt
@@ -351,10 +594,13 @@ class ServeEngine:
             if self._decode_inflight is not None or self._prefill_active:
                 return False
             batch: list[tuple[GenRequest, object]] = []
+            now = time.monotonic()
             while self._arrivals and self.slots.free_slots():
                 req = self._arrivals.popleft()
                 slot = self.slots.assign(req.request_id)
                 req.slot_index = slot.index
+                if req.last_enqueued_at:
+                    req.queued_s = now - req.last_enqueued_at
                 batch.append((req, slot))
             if not batch:
                 return False
@@ -409,11 +655,21 @@ class ServeEngine:
             # pre-prefill cache would have its continuation overwrite the
             # published prompt KV.  The admitting thread always calls
             # _schedule_decode after publishing, so nothing starves.
-            if (self._decode_inflight is not None or self._prefill_active
-                    or not self._active):
-                return
-            step, agreq, cache = self._launch_decode_locked()
-        self._attach_step(step, agreq, cache)
+            busy = (self._decode_inflight is not None
+                    or self._prefill_active)
+            launched = not busy and bool(self._active)
+            if launched:
+                step, agreq, cache = self._launch_decode_locked()
+            # paged: prompts may still be mid-replay with no lane decoding
+            # yet — keep the prefill chain alive (the admit task runs the
+            # next chunk; _admit_scheduled bounds this to one outstanding
+            # task)
+            reschedule = (self.paged and not busy and not self._active
+                          and bool(self._prefilling))
+        if launched:
+            self._attach_step(step, agreq, cache)
+        elif reschedule:
+            self._schedule_admit()
 
     def _launch_decode_locked(self):
         """Dispatch one fused decode step; caller holds ``self._lock``.
@@ -436,12 +692,22 @@ class ServeEngine:
         step = Request(tag="decode-step")
         self._current_step = step
         try:
+            if self.paged:
+                self._ensure_capacity_locked()
             toks = np.zeros((self.batch_slots, 1), np.int32)
             for idx, req in self._active.items():
                 toks[idx, 0] = req.next_input
             pos = self.slots.positions()
-            out, cache = self._jit_decode(
-                self.params, self.slots.cache, jnp.asarray(toks), pos)
+            if self.paged:
+                fed = np.zeros((self.batch_slots,), bool)
+                for idx in self._active:
+                    fed[idx] = True
+                out, cache = self._jit_decode(
+                    self.params, self.slots.cache, jnp.asarray(toks), pos,
+                    self.slots.block_tables(), jnp.asarray(fed))
+            else:
+                out, cache = self._jit_decode(
+                    self.params, self.slots.cache, jnp.asarray(toks), pos)
             if self._jit_gather is not None:     # native-sharded gather
                 out = self._jit_gather(out)
             agreq = None
@@ -460,6 +726,59 @@ class ServeEngine:
 
             self.engine.async_start(ready_poll, None, self.decode_stream)
         return step, agreq, cache
+
+    # -- block pressure: preemption / re-admission (paged mode) -------------
+    def _ensure_capacity_locked(self) -> None:
+        """Grow every decoding lane's block table to cover its next write
+        position, preempting victims under block pressure.  Caller holds
+        ``self._lock``.
+
+        Policy: the oldest resident (smallest submit ``seq``, across
+        decoding AND prefilling lanes) is never preempted, so it always
+        runs to completion — every preemption strictly reduces the set of
+        requests younger than it, which bounds total preemptions for a
+        finite workload (no livelock).  Victims are evicted
+        youngest-first; a lane may evict itself (it re-enters the backlog
+        ahead of younger arrivals and is retried once blocks free)."""
+        for idx in sorted(self._active, key=lambda i: self._active[i].seq):
+            while idx in self._active:
+                if self.slots.ensure(idx, self.slots.slots[idx].pos):
+                    break
+                victim = self._pick_victim_locked()
+                if victim is None:
+                    # sole resident: PagedKVCache guarantees the pool
+                    # holds one max_seq request, so ensure cannot fail
+                    raise RuntimeError(
+                        "block pool exhausted with no preemptible victim")
+                self._preempt_locked(victim)
+
+    def _pick_victim_locked(self) -> Optional[int]:
+        """Lane of the youngest resident, never the oldest; ``None`` when
+        fewer than two requests are resident."""
+        residents = {**self._prefilling, **self._active}
+        if len(residents) < 2:
+            return None
+        return max(residents, key=lambda i: residents[i].seq)
+
+    def _preempt_locked(self, idx: int) -> None:
+        """Evict one resident lane: return its blocks to the free list
+        and re-queue the request with its generated prefix folded into
+        ``replay``.  Greedy decode is per-lane deterministic, so the
+        rebuilt KV continues the exact same token stream — preemption is
+        invisible in the output."""
+        req = self._active.pop(idx, None)
+        if req is None:
+            req = self._prefilling.pop(idx)
+        self.slots.release(self.slots.slots[idx])
+        req.preemptions += 1
+        self.sched.preemptions += 1
+        req.replay = np.concatenate([
+            np.asarray(req.prompt, np.int32),
+            np.asarray(req.out_tokens, np.int32)])
+        req.prefill_pos = 0
+        req.slot_index = -1
+        req.last_enqueued_at = time.monotonic()
+        self._backlog.push(req)
 
     def _attach_step(self, step: Request, agreq=None, cache=None) -> None:
         if agreq is not None:
@@ -565,7 +884,8 @@ class ServeEngine:
         """Append one finished request to the ledger (caller holds the
         serve lock — or owns the request exclusively, as prefill does)."""
         self._finished.append((req.submitted_at, req.first_token_at,
-                               req.finished_at, failed))
+                               req.finished_at, failed, req.queued_s,
+                               req.preemptions))
 
     def latency_snapshot(self) -> ServeLatencyStats:
         """TTFT / completion-latency aggregates over the (bounded) ledger
@@ -576,8 +896,8 @@ class ServeEngine:
             records = list(self._finished)
             submitted = self._submitted
         snap = ServeLatencyStats(submitted=submitted)
-        ttfts, lats = [], []
-        for sub, first, fin, failed in records:
+        ttfts, lats, queued = [], [], []
+        for sub, first, fin, failed, q_s, npre in records:
             if failed:
                 snap.failed += 1
             else:
@@ -588,19 +908,32 @@ class ServeEngine:
                 ttfts.append((first - sub) * 1e3)
             if fin is not None:
                 lats.append((fin - sub) * 1e3)
+            queued.append(q_s * 1e3)
+            if npre:
+                snap.preempted += 1
+                snap.preemptions += npre
         if ttfts:
             (snap.ttft_ms_mean, snap.ttft_ms_p50,
              snap.ttft_ms_p99) = _quantiles(ttfts)
         if lats:
             (snap.latency_ms_mean, snap.latency_ms_p50,
              snap.latency_ms_p99) = _quantiles(lats)
+        if queued:
+            (snap.queued_ms_mean, snap.queued_ms_p50,
+             snap.queued_ms_p99) = _quantiles(queued)
         return snap
+
+    def scheduler_snapshot(self) -> SchedulerStats:
+        """Copy of the continuous-batching scheduler counters."""
+        with self._lock:
+            return dataclasses.replace(self.sched)
 
     # -- lifecycle ------------------------------------------------------------
     @property
     def idle(self) -> bool:
         with self._lock:
             busy = (self._active or self._arrivals or self._prefill_active
+                    or self._prefilling or len(self._backlog)
                     or self._decode_inflight is not None)
         return not busy and self.continuations.ready == 0
 

@@ -1,0 +1,242 @@
+"""BlockAllocator / PagedKVCache / SlotCache invariants.
+
+The core allocator invariants are property-tested twice: with hypothesis
+when it is installed (random alloc/extend/free interleavings), and with
+a seeded exhaustive-ish driver that always runs, so the invariants are
+exercised even in environments without the optional dependency.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serve.kvcache import (BlockAllocationError, BlockAllocator,
+                                 PagedKVCache, SlotCache)
+from conftest import reduce_cfg
+
+
+# ---------------------------------------------------------------------------
+# Allocator invariant checking (shared by both drivers)
+# ---------------------------------------------------------------------------
+
+def check_invariants(ba: BlockAllocator) -> None:
+    owned = {o: ba.blocks_of(o) for o in ba.owners()}
+    all_owned = [b for blocks in owned.values() for b in blocks]
+    # no block owned twice (tables of live requests never alias)
+    assert len(all_owned) == len(set(all_owned))
+    # the reserved scratch block is never handed out
+    assert 0 not in all_owned
+    # conservation: free + owned == usable pool, always
+    assert ba.free_count + len(all_owned) == ba.usable_blocks
+    # free list and owned sets are disjoint
+    assert not set(ba._free) & set(all_owned)
+
+
+def drive(ba: BlockAllocator, ops: list[tuple]) -> None:
+    """Apply (op, owner, n) steps, checking invariants after each."""
+    for op, owner, n in ops:
+        if op == "alloc":
+            if owner in ba.owners():
+                with pytest.raises(BlockAllocationError):
+                    ba.alloc(owner, n)
+            else:
+                got = ba.alloc(owner, n)
+                assert (got is None) == (n > ba.free_count + (len(got) if got else 0)) \
+                    or got is not None  # alloc returns None only on OOM
+        elif op == "extend":
+            if owner not in ba.owners():
+                with pytest.raises(BlockAllocationError):
+                    ba.extend(owner, n)
+            else:
+                ba.extend(owner, n)
+        elif op == "free":
+            if owner not in ba.owners():
+                with pytest.raises(BlockAllocationError):
+                    ba.free(owner)
+            else:
+                freed = ba.free(owner)
+                assert freed >= 1
+        check_invariants(ba)
+
+
+def test_allocator_invariants_seeded():
+    """Deterministic random interleavings (runs without hypothesis)."""
+    rng = np.random.RandomState(0)
+    for trial in range(50):
+        num_blocks = int(rng.randint(2, 40))
+        ba = BlockAllocator(num_blocks)
+        ops = []
+        for _ in range(rng.randint(1, 60)):
+            op = ["alloc", "extend", "free"][rng.randint(3)]
+            owner = f"r{rng.randint(6)}"
+            ops.append((op, owner, int(rng.randint(1, 8))))
+        drive(ba, ops)
+
+
+def test_allocator_basics():
+    ba = BlockAllocator(10)
+    a = ba.alloc("a", 3)
+    b = ba.alloc("b", 4)
+    assert set(a).isdisjoint(b)
+    assert ba.free_count == 9 - 7
+    assert ba.alloc("c", 3) is None           # OOM is a signal, not a raise
+    assert ba.extend("a", 5) is None
+    more = ba.extend("a", 2)
+    assert len(more) == 2 and ba.blocks_of("a") == a + more
+    assert ba.free("a") == 5
+    check_invariants(ba)
+    with pytest.raises(BlockAllocationError):
+        ba.free("a")
+    with pytest.raises(BlockAllocationError):
+        ba.alloc("b", 1)                      # duplicate owner raises
+
+
+def test_allocator_rejects_tiny_pool():
+    with pytest.raises(ValueError):
+        BlockAllocator(1)                     # only the scratch block
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis drivers (optional dependency)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                           # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    OPS = st.lists(
+        st.tuples(st.sampled_from(["alloc", "extend", "free"]),
+                  st.sampled_from(["a", "b", "c", "d"]),
+                  st.integers(min_value=1, max_value=6)),
+        min_size=1, max_size=40)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(min_value=2, max_value=32), OPS)
+    def test_allocator_invariants_hypothesis(num_blocks, ops):
+        drive(BlockAllocator(num_blocks), ops)
+
+
+# ---------------------------------------------------------------------------
+# SlotCache free-list behaviour (heap free list, duplicate guard)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return reduce_cfg(get_config("qwen2-0.5b"), dtype="float32")
+
+
+def test_slotcache_duplicate_request_raises(tiny_cfg):
+    sc = SlotCache(tiny_cfg, 4, 32)
+    sc.assign("r0")
+    with pytest.raises(ValueError):
+        sc.assign("r0")                       # would shadow + leak a slot
+
+
+def test_slotcache_free_list(tiny_cfg):
+    sc = SlotCache(tiny_cfg, 4, 32)
+    slots = [sc.assign(f"r{i}") for i in range(4)]
+    assert sc.assign("r4") is None
+    assert sc.free_count == 0 and sc.free_slots() == []
+    sc.release(slots[2])
+    sc.release(slots[0])
+    # lowest-index-first reuse, reported sorted
+    assert [s.index for s in sc.free_slots()] == [0, 2]
+    assert sc.assign("r5").index == 0
+    assert sc.assign("r6").index == 2
+    assert sc.active_count() == 4
+
+
+# ---------------------------------------------------------------------------
+# PagedKVCache: lane + block table behaviour
+# ---------------------------------------------------------------------------
+
+def test_paged_assign_claims_lane_and_blocks_atomically(tiny_cfg):
+    pc = PagedKVCache(tiny_cfg, lanes=2, max_seq=32, block_size=8,
+                      num_blocks=6)            # 5 usable
+    lane = pc.assign("a", seq_len=17)          # ceil(17/8) = 3 blocks
+    assert lane is not None
+    assert len(pc.allocator.blocks_of("a")) == 3
+    # 2 blocks left: a 17-token request needs 3 — neither lane nor
+    # blocks may be consumed by the failed attempt
+    free_lanes = pc.free_count
+    assert pc.assign("b", seq_len=17) is None
+    assert pc.free_count == free_lanes
+    assert pc.allocator.free_count == 2
+    # a short request still fits
+    assert pc.assign("c", seq_len=8) is not None
+
+
+def test_paged_tables_track_extension_and_release(tiny_cfg):
+    pc = PagedKVCache(tiny_cfg, lanes=2, max_seq=32, block_size=8,
+                      num_blocks=9)
+    lane = pc.assign("a", seq_len=4)
+    t = np.asarray(pc.block_tables())
+    assert t.shape == (2, 4)                   # [lanes, max_blocks]
+    assert t[lane.index, 0] != 0 and (t[lane.index, 1:] == 0).all()
+    assert pc.ensure(lane.index, 7)            # still block 0 of the lane
+    assert pc.ensure(lane.index, 8)            # extends into block 1
+    t = np.asarray(pc.block_tables())
+    assert t[lane.index, 1] != 0
+    # tables of concurrent lanes never alias
+    lane2 = pc.assign("b", seq_len=32)
+    t = np.asarray(pc.block_tables())
+    own_a = set(t[lane.index][t[lane.index] != 0])
+    own_b = set(t[lane2.index][t[lane2.index] != 0])
+    assert own_a.isdisjoint(own_b)
+    pc.release(lane)
+    t = np.asarray(pc.block_tables())
+    assert (t[lane.index] == 0).all()
+    assert "a" not in pc.allocator.owners()
+
+
+def test_paged_ensure_oom_signals_not_raises(tiny_cfg):
+    pc = PagedKVCache(tiny_cfg, lanes=2, max_seq=16, block_size=4,
+                      num_blocks=6)            # 5 usable, max_blocks=4
+    a = pc.assign("a", seq_len=12)             # 3 blocks
+    b = pc.assign("b", seq_len=8)              # 2 blocks -> 0 free
+    assert pc.allocator.free_count == 0
+    assert pc.ensure(a.index, 11)              # covered already
+    assert not pc.ensure(a.index, 12)          # OOM: preemption trigger
+    pc.release(b)
+    assert pc.ensure(a.index, 12)              # freed blocks recycle
+
+
+def test_paged_duplicate_request_raises(tiny_cfg):
+    pc = PagedKVCache(tiny_cfg, lanes=2, max_seq=16, block_size=4)
+    pc.assign("a", seq_len=4)
+    with pytest.raises(ValueError):
+        pc.assign("a", seq_len=4)
+
+
+def test_paged_pool_must_hold_one_max_seq_request(tiny_cfg):
+    with pytest.raises(ValueError):
+        # 3 usable blocks of 4 < max_seq 16: a lone request would wedge
+        PagedKVCache(tiny_cfg, lanes=2, max_seq=16, block_size=4,
+                     num_blocks=4)
+
+
+def test_paged_default_pool_matches_slot_capacity(tiny_cfg):
+    pc = PagedKVCache(tiny_cfg, lanes=3, max_seq=32, block_size=8)
+    # default pool: every lane can hold max_seq simultaneously
+    lanes = [pc.assign(f"r{i}", seq_len=32) for i in range(3)]
+    assert all(l is not None for l in lanes)
+    assert pc.allocator.free_count == 0
+
+
+def test_paged_ssm_family_has_no_blocks():
+    cfg = reduce_cfg(get_config("mamba2-1.3b"), dtype="float32")
+    pc = PagedKVCache(cfg, lanes=2, max_seq=16, block_size=4, num_blocks=2)
+    assert not pc.has_blocks
+    lane = pc.assign("a", seq_len=16)          # no blocks consumed
+    assert pc.allocator.free_count == pc.allocator.usable_blocks
+    assert pc.ensure(lane.index, 15)           # always satisfiable
+    # reset_lane zeroes the recurrent state of exactly that lane
+    pc.cache = jax.tree.map(lambda a: a + 1.0, pc.cache)
+    new = pc.reset_lane(pc.cache, lane.index)
+    flat = jax.tree_util.tree_leaves(new)
+    for leaf in flat:
+        assert float(abs(leaf[:, lane.index]).max()) == 0.0
+        assert float(abs(leaf[:, 1 - lane.index]).min()) == 1.0
