@@ -389,6 +389,165 @@ print(f"cb_gain_concurrency,{sched.peak_resident / 4:.3f},"
 """
 
 
+_RECOVERY_SNIPPET = """
+import time
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.collectives.nonblocking import MembershipEpoch
+from repro.core import ProgressEngine
+from repro.models import registry
+from repro.serve.engine import GenRequest, ServeEngine
+
+cfg = get_config("qwen2-0.5b").with_overrides(
+    num_layers=2, d_model=64, d_ff=128, vocab_size=256, num_heads=4,
+    num_kv_heads=2, head_dim=16, remat_policy="none")
+params = registry.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.RandomState(0)
+prompts = [rng.randint(1, 255, size=rng.randint(2, 9)).astype(np.int32)
+           for _ in range(8)]
+
+def recover(**kw):
+    # invalidate mid-decode; time invalidate -> drained, remeshed,
+    # re-admitted and idle (the full membership-change recovery path,
+    # including the rebuilt decode program's compile)
+    eng = ProgressEngine()
+    epoch = MembershipEpoch()
+    srv = ServeEngine(cfg, params, eng, batch_slots=4, max_seq=64,
+                      epoch=epoch, **kw)
+    reqs = [GenRequest(f"r{i}", p, max_new_tokens=8)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        srv.submit(r)
+    t0 = time.perf_counter()
+    while sum(len(r.out_tokens) for r in reqs) < 8 \\
+            and time.perf_counter() - t0 < 300:
+        eng.progress()
+    t0 = time.perf_counter()
+    epoch.invalidate(survivors=1, reason="bench")
+    srv.run_until_idle(timeout=600)
+    dt = time.perf_counter() - t0
+    lat = srv.latency_snapshot()
+    assert lat.failed == 0 and srv.remeshes == 1, (lat.failed, srv.remeshes)
+    srv.close(timeout=60)
+    return dt
+
+# slot mode FIRST so a paged-sweep crash still salvages this row
+dt = recover()
+print(f"recovery_serve_slots,{dt * 1e6:.0f},invalidate -> drained+"
+      f"remeshed+re-admitted+idle, 8 reqs, fixed slots")
+dt = recover(cache_mode="paged", kv_block_size=8)
+print(f"recovery_serve_paged,{dt * 1e6:.0f},invalidate -> idle with "
+      f"per-lane KV checkpoint/restore migration, paged pool")
+
+# trainer: remesh-and-retry step (catches MembershipError, rebuilds the
+# split step on the survivors, retries the same batch)
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro import compat
+from repro.collectives.overlap import EngineGradReducer
+from repro.data.pipeline import SyntheticLM
+from repro.distributed import elastic
+from repro.train import optimizer as opt_mod
+from repro.train.train_loop import Trainer, TrainLoopConfig, \\
+    UserCollectiveStep
+
+tcfg = get_config("smollm-360m").with_overrides(
+    num_layers=2, d_model=64, d_ff=128, vocab_size=256, num_heads=4,
+    num_kv_heads=2, head_dim=16, remat_policy="none")
+src = SyntheticLM(tcfg.vocab_size, 16, 4, seed=1)
+it = iter(src)
+batches = [{k: jnp.asarray(v) for k, v in next(it).items()}
+           for _ in range(8)]
+
+class ListPipe:
+    def __init__(self, bs):
+        self.bs = list(bs)
+    def next_batch(self):
+        return self.bs.pop(0)
+    def close(self):
+        pass
+
+ocfg = opt_mod.AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=8)
+
+def local_grad(p, batch):
+    (loss, mets), g = jax.value_and_grad(
+        registry.loss_fn, has_aux=True)(p, tcfg, batch)
+    return (jax.tree.map(lambda v: v[None], dict(mets, loss=loss)),
+            jax.tree.map(lambda v: v[None].astype(jnp.float32), g))
+
+def make_grad_fn(mesh_):
+    return jax.jit(compat.shard_map(local_grad, mesh=mesh_,
+                                    in_specs=(P(), P("data")),
+                                    out_specs=P("data")))
+
+@jax.jit
+def apply_fn(p, o, g, sm):
+    p, o, om = opt_mod.apply(ocfg, o, p, g)
+    return p, o, dict({k: jnp.mean(v) for k, v in sm.items()}, **om)
+
+eng = ProgressEngine()
+mesh = elastic.remesh(1, prefer_model=1)
+epoch = MembershipEpoch()
+red = EngineGradReducer(mesh, "data", engine=eng, chunks=2, mean=True,
+                        epoch=epoch)
+split = UserCollectiveStep(make_grad_fn(mesh), apply_fn, red)
+
+def remesh_fn(exc, p, o):
+    new_mesh = elastic.remesh(exc.survivors, prefer_model=1)
+    red.remesh(new_mesh, "data")
+    p = jax.device_put(p, NamedSharding(new_mesh, P()))
+    o = jax.device_put(o, NamedSharding(new_mesh, P()))
+    return UserCollectiveStep(make_grad_fn(new_mesh), apply_fn, red), p, o
+
+step_times, fired = {}, []
+
+def hook(s, m):
+    step_times[s] = m["step_time_s"]
+    if s == 3 and not fired:
+        fired.append(s)
+        epoch.invalidate(survivors=1, reason="bench")
+
+params_t = registry.init_params(tcfg, jax.random.PRNGKey(0))
+tr = Trainer(None, params_t, opt_mod.init(params_t), ListPipe(batches),
+             TrainLoopConfig(total_steps=8, checkpoint_every=10**6,
+                             checkpoint_dir="/tmp/bench_recovery_ckpt",
+                             log_every=1, resume=False,
+                             collective_backend="user"),
+             engine=eng, split_step=split, epoch=epoch,
+             remesh_fn=remesh_fn, hooks=[hook])
+tr.run()
+red.close()
+assert tr.recoveries == 1, tr.recoveries
+warm = min(step_times[s] for s in step_times if s not in (0, 4))
+print(f"recovery_train_step,{step_times[4] * 1e6:.0f},remesh+retry "
+      f"step wall time (warm step {warm * 1e6:.0f}us)")
+"""
+
+
+def recovery():
+    """Membership-change recovery path (recovery_* rows, single-device
+    child): serve drain/remesh/re-admit to idle in slot and paged mode
+    (the paged row includes per-lane KV checkpoint/restore migration),
+    and the trainer's remesh-and-retry step.  Slot row prints first so
+    a crash mid-sweep salvages it (same discipline as the serve
+    families)."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(_RECOVERY_SNIPPET)],
+            capture_output=True, text=True, timeout=1200, env=env)
+        stdout, rc, err = proc.stdout, proc.returncode, proc.stderr or ""
+    except subprocess.TimeoutExpired as e:
+        stdout, rc, err = e.stdout or "", -1, "timeout after 1200s"
+    rows = [l for l in stdout.splitlines() if l.startswith("recovery_")]
+    if rc != 0:
+        rows.append(f"recovery,nan,FAILED(rc={rc}): {err[-200:]}")
+    return rows
+
+
 def serve_continuous_batching():
     """Continuous-batching arrival trace (serve_cb rows): one Poisson
     trace served by the fixed-slot engine and by the paged engine at
@@ -452,4 +611,5 @@ def run():
     rows += fig13_continuation_vs_waitset()
     rows += serve_collectives()
     rows += serve_continuous_batching()
+    rows += recovery()
     return rows

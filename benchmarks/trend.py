@@ -34,9 +34,12 @@ import sys
 # existing fig* names are untouched so artifact history stays
 # comparable across runs).  fig14_persistent_gain, serve_gain and
 # cb_gain rows hold a ratio, not a latency — their names deliberately
-# fall outside the tracked prefixes.
+# fall outside the tracked prefixes.  recovery rows time the
+# membership-change path (epoch invalidation -> drained, remeshed,
+# re-admitted and idle; trainer remesh-and-retry step) so a fault-
+# tolerance regression shows up in the same gate as a hot-path one.
 DEFAULT_PREFIXES = ("fig7", "fig13", "fig14_native", "fig14_user",
-                    "serve_decode", "serve_cb")
+                    "serve_decode", "serve_cb", "recovery")
 DEFAULT_THRESHOLD = 0.20
 
 

@@ -73,6 +73,7 @@ from __future__ import annotations
 import functools
 import itertools
 import threading
+import weakref
 from typing import Any, Callable, Optional
 
 import jax
@@ -496,6 +497,91 @@ def _bruck_alltoall_schedule(mesh, axis, n):
 # ---------------------------------------------------------------------------
 # The request handle
 # ---------------------------------------------------------------------------
+
+class MembershipError(RuntimeError):
+    """A membership change invalidated this collective mid-flight.
+
+    Retryable by construction: the payload was *not* consumed — rebuild
+    the persistent handle's plan on the surviving mesh
+    (``PersistentCollective.rebuild``) and ``start`` it again, or
+    re-issue the one-shot op against the new mesh.  ``survivors`` is the
+    surviving device count the epoch was invalidated with, ``version``
+    the epoch generation that killed this request."""
+
+    def __init__(self, message: str, *, survivors: int | None = None,
+                 version: int | None = None):
+        super().__init__(message)
+        self.survivors = survivors
+        self.version = version
+
+
+class MembershipEpoch:
+    """Generation counter for the set of devices collectives run on.
+
+    The fault-tolerance monitors (``HeartbeatMonitor`` flagging a dead
+    peer, ``StepWatchdog`` firing on a hung step) call ``invalidate``
+    from their engine-subsystem polls; persistent handles registered on
+    the epoch get their in-flight start failed with a retryable
+    :class:`MembershipError` (exactly once, through the same
+    ``_fail_lock`` discipline the chunk pipeline uses), and a handle
+    built under an older generation refuses further ``start``s until
+    ``rebuild`` re-plans it on the surviving mesh.  Subscribed listeners
+    (the serve engine's drain/re-admit, the trainer's reducer rebuild)
+    run after the handles are failed — invalidation is cheap enough to
+    run inline in a subsystem poll; listeners must only *record* the
+    change and fail fast, deferring heavy rebuild work to their own
+    threads (a listener that drains streams inside the poll that fired
+    it would deadlock an executor worker against itself)."""
+
+    def __init__(self, n_devices: int | None = None):
+        self._lock = threading.Lock()
+        self.version = 0
+        self.n_devices = (n_devices if n_devices is not None
+                          else len(jax.devices()))
+        self.invalidations = 0
+        self._handles: "weakref.WeakSet" = weakref.WeakSet()
+        self._listeners: list[Callable[["MembershipEpoch",
+                                        "MembershipError"], None]] = []
+
+    def register(self, handle: "PersistentCollective") -> None:
+        with self._lock:
+            self._handles.add(handle)
+
+    def subscribe(self, fn: Callable[["MembershipEpoch", "MembershipError"],
+                                     None]) -> None:
+        """``fn(epoch, exc)`` runs after every invalidation, once the
+        registered handles' in-flight starts have been failed."""
+        with self._lock:
+            self._listeners.append(fn)
+
+    def invalidate(self, *, survivors: int, reason: str = "") -> "MembershipError":
+        """Declare a membership change down to ``survivors`` devices.
+
+        Bumps the generation, fails every registered handle's in-flight
+        start with a :class:`MembershipError`, then notifies listeners.
+        Returns the error instance (also raised into waiters)."""
+        with self._lock:
+            self.version += 1
+            self.invalidations += 1
+            self.n_devices = int(survivors)
+            version = self.version
+            handles = list(self._handles)
+            listeners = list(self._listeners)
+        exc = MembershipError(
+            f"membership epoch {version}: {int(survivors)} surviving "
+            f"device(s)" + (f" ({reason})" if reason else ""),
+            survivors=int(survivors), version=version)
+        for h in handles:
+            h._membership_changed(exc)
+        for fn in listeners:
+            fn(self, exc)
+        return exc
+
+    def __repr__(self):
+        return (f"MembershipEpoch(version={self.version}, "
+                f"n_devices={self.n_devices}, "
+                f"handles={len(self._handles)})")
+
 
 class CollectiveRequest(Request):
     """Handle for an in-flight user-space collective.
@@ -949,9 +1035,11 @@ class UserCollectives:
 
     def __init__(self, engine: Optional[ProgressEngine] = None, *,
                  executor=None, stream: Optional[Stream] = None,
-                 policy: str = INLINE, name: str = ""):
+                 policy: str = INLINE, name: str = "",
+                 epoch: "MembershipEpoch | None" = None):
         self.engine = engine if engine is not None else global_engine()
         self.executor = executor
+        self.epoch = epoch
         self.name = name or f"usercoll{next(UserCollectives._ids)}"
         self._own_stream = stream is None
         if stream is None:
@@ -1029,49 +1117,70 @@ class UserCollectives:
     def allreduce_init(self, x, mesh, axis: str, *,
                        algorithm: str = "ring", chunks: int = 1,
                        round_batch: int | None = None,
-                       warmup: bool = True) -> "PersistentCollective":
+                       warmup: bool = True,
+                       epoch: "MembershipEpoch | None" = None,
+                       ) -> "PersistentCollective":
         """MPI_Allreduce_init: build a persistent schedule for payloads
         shaped like ``x`` (an array or ShapeDtypeStruct — only
         shape/dtype are read).  ``start(payload)`` re-issues the
         pre-compiled schedule; see :class:`PersistentCollective`.  Two
         handles with the same signature share round programs through the
-        schedule cache, so a second init is cheap."""
+        schedule cache, so a second init is cheap.  ``epoch`` (default:
+        the context's) makes the handle membership-aware."""
         self._check_open()
         _check_payload(x, "allreduce")
-        plan = _plan_allreduce(mesh, axis, tuple(x.shape),
-                               getattr(x, "dtype", jnp.float32),
-                               algorithm, chunks, round_batch)
-        return PersistentCollective(self, plan, warmup=warmup)
+        shape = tuple(x.shape)
+        dtype = getattr(x, "dtype", jnp.float32)
+        replan = lambda m, a: _plan_allreduce(        # noqa: E731
+            m, a, shape, dtype, algorithm, chunks, round_batch)
+        return PersistentCollective(
+            self, replan(mesh, axis), warmup=warmup,
+            epoch=epoch if epoch is not None else self.epoch, replan=replan)
 
     def reduce_scatter_init(self, x, mesh, axis: str, *, chunks: int = 1,
                             round_batch: int | None = None,
-                            warmup: bool = True) -> "PersistentCollective":
+                            warmup: bool = True,
+                            epoch: "MembershipEpoch | None" = None,
+                            ) -> "PersistentCollective":
         self._check_open()
         _check_payload(x, "reduce_scatter")
-        plan = _plan_reduce_scatter(mesh, axis, tuple(x.shape),
-                                    getattr(x, "dtype", jnp.float32),
-                                    chunks, round_batch)
-        return PersistentCollective(self, plan, warmup=warmup)
+        shape = tuple(x.shape)
+        dtype = getattr(x, "dtype", jnp.float32)
+        replan = lambda m, a: _plan_reduce_scatter(   # noqa: E731
+            m, a, shape, dtype, chunks, round_batch)
+        return PersistentCollective(
+            self, replan(mesh, axis), warmup=warmup,
+            epoch=epoch if epoch is not None else self.epoch, replan=replan)
 
     def allgather_init(self, x, mesh, axis: str, *, chunks: int = 1,
                        round_batch: int | None = None,
-                       warmup: bool = True) -> "PersistentCollective":
+                       warmup: bool = True,
+                       epoch: "MembershipEpoch | None" = None,
+                       ) -> "PersistentCollective":
         self._check_open()
         _check_payload(x, "allgather")
-        plan = _plan_allgather(mesh, axis, tuple(x.shape),
-                               getattr(x, "dtype", jnp.float32),
-                               chunks, round_batch)
-        return PersistentCollective(self, plan, warmup=warmup)
+        shape = tuple(x.shape)
+        dtype = getattr(x, "dtype", jnp.float32)
+        replan = lambda m, a: _plan_allgather(        # noqa: E731
+            m, a, shape, dtype, chunks, round_batch)
+        return PersistentCollective(
+            self, replan(mesh, axis), warmup=warmup,
+            epoch=epoch if epoch is not None else self.epoch, replan=replan)
 
     def alltoall_init(self, x, mesh, axis: str, *, chunks: int = 1,
                       round_batch: int | None = None,
-                      warmup: bool = True) -> "PersistentCollective":
+                      warmup: bool = True,
+                      epoch: "MembershipEpoch | None" = None,
+                      ) -> "PersistentCollective":
         self._check_open()
         _check_payload(x, "alltoall")
-        plan = _plan_alltoall(mesh, axis, tuple(x.shape),
-                              getattr(x, "dtype", jnp.float32),
-                              chunks, round_batch)
-        return PersistentCollective(self, plan, warmup=warmup)
+        shape = tuple(x.shape)
+        dtype = getattr(x, "dtype", jnp.float32)
+        replan = lambda m, a: _plan_alltoall(         # noqa: E731
+            m, a, shape, dtype, chunks, round_batch)
+        return PersistentCollective(
+            self, replan(mesh, axis), warmup=warmup,
+            epoch=epoch if epoch is not None else self.epoch, replan=replan)
 
     # -- machinery ---------------------------------------------------------
     def _issue_plan(self, plan: _Plan, x) -> CollectiveRequest:
@@ -1192,13 +1301,24 @@ class PersistentCollective:
     ``cancel()`` cancels the active request; a handle whose last start
     failed or was cancelled is restartable with the next ``start``
     (fail-then-restart safe: abandoned round tasks retire on later
-    progress sweeps and never touch the new start's chunks)."""
+    progress sweeps and never touch the new start's chunks).
+
+    Membership awareness: built against a :class:`MembershipEpoch`, the
+    handle registers itself; ``epoch.invalidate`` fails the in-flight
+    start with a retryable :class:`MembershipError` and marks the handle
+    stale — further ``start``s raise until ``rebuild(mesh)`` re-plans
+    the same op (shape, dtype, algorithm, chunks, round batch) against
+    the surviving mesh, re-using PR-4's fail-then-restart machinery:
+    abandoned round programs from the dead epoch retire harmlessly while
+    the rebuilt schedule runs."""
 
     __slots__ = ("ctx", "plan", "round_batch", "schedules", "active",
-                 "starts", "_closed")
+                 "starts", "_closed", "epoch", "_epoch_version", "_replan",
+                 "rebuilds", "__weakref__")
 
     def __init__(self, ctx: UserCollectives, plan: _Plan, *,
-                 warmup: bool = True):
+                 warmup: bool = True, epoch: "MembershipEpoch | None" = None,
+                 replan: Callable[[Any, str], _Plan] | None = None):
         self.ctx = ctx
         self.plan = plan
         self.round_batch = plan.round_batch
@@ -1206,7 +1326,13 @@ class PersistentCollective:
                           for rs in plan.schedules]
         self.active: CollectiveRequest | None = None
         self.starts = 0
+        self.rebuilds = 0
         self._closed = False
+        self.epoch = epoch
+        self._replan = replan
+        self._epoch_version = epoch.version if epoch is not None else 0
+        if epoch is not None:
+            epoch.register(self)
         if warmup:
             self.start(jnp.zeros(plan.shape, plan.dtype)).wait(timeout=600)
             self.starts = 0          # the warm-up doesn't count
@@ -1243,6 +1369,13 @@ class PersistentCollective:
         if self._closed:
             raise RuntimeError(f"{self!r} is closed")
         self.ctx._check_open()
+        if self.epoch is not None and self._epoch_version != self.epoch.version:
+            raise MembershipError(
+                f"persistent {self.plan.op} handle is stale: built under "
+                f"membership epoch {self._epoch_version}, current is "
+                f"{self.epoch.version} ({self.epoch.n_devices} surviving "
+                f"device(s)) — rebuild(mesh) before restarting",
+                survivors=self.epoch.n_devices, version=self.epoch.version)
         active = self.active
         if active is not None and not active.is_complete:
             raise RuntimeError(
@@ -1272,6 +1405,63 @@ class PersistentCollective:
         """MPI_Cancel on the active start (no-op when idle/complete)."""
         if self.active is not None:
             self.active.cancel()
+
+    # -- membership --------------------------------------------------------
+    @property
+    def stale(self) -> bool:
+        return (self.epoch is not None
+                and self._epoch_version != self.epoch.version)
+
+    def _membership_changed(self, exc: "MembershipError") -> None:
+        """Epoch invalidation: fail the in-flight start exactly once
+        (same ``_fail_lock`` discipline as the chunk pipeline — whoever
+        completes the request first wins; the loser observes
+        ``is_complete`` and backs off).  Cheap by design: callable from
+        a subsystem poll."""
+        req = self.active
+        if req is None:
+            return
+        with req._fail_lock:
+            if req.is_complete:
+                return
+            req.fail(exc)
+        self.ctx.failed += 1
+
+    def rebuild(self, mesh, axis: str | None = None, *,
+                warmup: bool = False) -> "PersistentCollective":
+        """Re-plan the same collective against ``mesh`` (the survivors)
+        and adopt the current epoch generation.  The op, payload
+        signature, algorithm, chunk count and round-batch policy carry
+        over; schedules for the new axis size come from (or populate)
+        the shared schedule cache.  Any incomplete start must be failed
+        or cancelled first — epoch invalidation already did that for the
+        membership-change path."""
+        if self._closed:
+            raise RuntimeError(f"{self!r} is closed")
+        if self._replan is None:
+            raise RuntimeError(
+                f"persistent {self.plan.op} handle has no replan thunk "
+                f"(constructed directly from a _Plan?) — build it via "
+                f"UserCollectives.*_init to make it rebuildable")
+        active = self.active
+        if active is not None and not active.is_complete:
+            raise RuntimeError(
+                f"persistent {self.plan.op}: rebuild with a live start "
+                f"in flight; cancel it (or let the epoch fail it) first")
+        plan = self._replan(mesh, axis if axis is not None
+                            else self.plan.axis)
+        self.plan = plan
+        self.round_batch = plan.round_batch
+        self.schedules = [rs.compiled(plan.round_batch)
+                          for rs in plan.schedules]
+        self.active = None
+        self.rebuilds += 1
+        if self.epoch is not None:
+            self._epoch_version = self.epoch.version
+        if warmup:
+            self.start(jnp.zeros(plan.shape, plan.dtype)).wait(timeout=600)
+            self.starts -= 1         # the warm-up doesn't count
+        return self
 
     def close(self) -> None:
         """Release the handle: further starts raise.  The underlying

@@ -233,19 +233,24 @@ class EngineGradReducer:
     def __init__(self, mesh, axis: str, *, engine=None, collectives=None,
                  algorithm: str = "ring", chunks: int = 4,
                  bucket_bytes: int = 1 << 25, mean: bool = True,
-                 executor=None, round_batch: int | None = None):
+                 executor=None, round_batch: int | None = None,
+                 epoch=None):
         from repro.collectives import nonblocking as NB
         self.mesh = mesh
         self.axis = axis
         self.axis_size = dict(mesh.shape)[axis]
+        self._algorithm_pref = algorithm
         self.algorithm = S.resolve_algorithm(algorithm, self.axis_size)
         self.chunks = chunks
         self.bucket_bytes = bucket_bytes
         self.mean = mean
         self.round_batch = round_batch
+        self.epoch = epoch
+        self.remeshes = 0
         self._own_coll = collectives is None
         self.coll = collectives if collectives is not None else \
-            NB.UserCollectives(engine, executor=executor, name="gradreduce")
+            NB.UserCollectives(engine, executor=executor, name="gradreduce",
+                               epoch=epoch)
         # (bucket ordinal, payload shape, dtype) -> PersistentCollective.
         # Keyed per ordinal: two same-shaped buckets in one step need two
         # handles (a persistent handle allows one outstanding start).
@@ -260,9 +265,30 @@ class EngineGradReducer:
             handle = self.coll.allreduce_init(
                 flat, self.mesh, self.axis, algorithm=self.algorithm,
                 chunks=self.chunks, round_batch=self.round_batch,
-                warmup=False)
+                warmup=False, epoch=self.epoch)
             self._persistent[key] = handle
         return handle
+
+    def remesh(self, mesh, axis: str | None = None) -> "EngineGradReducer":
+        """Adopt the survivors' mesh after a membership change.
+
+        The stacked-gradient payload shape carries the axis size in its
+        leading dim, so the old persistent handles can't be re-planned
+        in place — they are closed and fresh ones (new shape, new mesh,
+        algorithm re-resolved for the surviving axis size) build lazily
+        on the next ``iallreduce_tree``, which therefore resumes the
+        reduction on survivors within the same training step."""
+        for handle in self._persistent.values():
+            handle.close()
+        self._persistent.clear()
+        self.mesh = mesh
+        if axis is not None:
+            self.axis = axis
+        self.axis_size = dict(mesh.shape)[self.axis]
+        self.algorithm = S.resolve_algorithm(self._algorithm_pref,
+                                             self.axis_size)
+        self.remeshes += 1
+        return self
 
     def iallreduce_tree(self, stacked_grads) -> TreeReduction:
         """Issue the bucketed reduction; returns immediately."""

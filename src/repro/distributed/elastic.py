@@ -20,6 +20,8 @@ from jax.sharding import NamedSharding
 
 
 def largest_pof2(n: int) -> int:
+    if n < 1:
+        raise ValueError(f"largest_pof2 needs n >= 1, got {n}")
     return 1 << (n.bit_length() - 1)
 
 
@@ -29,6 +31,12 @@ def plan_mesh(n_devices: int, *, prefer_model: int = 16) -> tuple[tuple, tuple]:
     Keeps the model axis at `prefer_model` when divisible (TP degree is a
     property of the model, not of the incident), otherwise the largest
     power-of-two that fits."""
+    if n_devices < 1:
+        # total membership loss is not a mesh-planning problem; surface
+        # the survivor count instead of largest_pof2's shift-count error
+        raise ValueError(
+            f"plan_mesh: cannot build a mesh for {n_devices} surviving "
+            f"device(s); at least 1 is required")
     n = largest_pof2(n_devices)
     model = prefer_model
     while model > 1 and n % model:
@@ -38,6 +46,10 @@ def plan_mesh(n_devices: int, *, prefer_model: int = 16) -> tuple[tuple, tuple]:
 
 def remesh(n_devices: Optional[int] = None, prefer_model: int = 16):
     n = n_devices if n_devices is not None else len(jax.devices())
+    if n < 1:
+        raise ValueError(
+            f"remesh: cannot rebuild a mesh for {n} surviving device(s); "
+            f"at least 1 is required")
     shape, axes = plan_mesh(n, prefer_model=prefer_model)
     return make_mesh(shape, axes)
 

@@ -11,12 +11,24 @@ watchdog threads):
   checkpoint-restart (driven by the trainer).
 * ``StragglerDetector`` — EWMA of step durations; steps slower than
   ``threshold ×`` the EWMA are counted per source so schedulers can
-  evict persistent stragglers.
+  evict persistent stragglers.  Both ledgers are bounded deques/maps —
+  a monitor that lives for a million steps must not grow with them.
 * ``StepWatchdog`` — wall-clock bound on a single step; firing means the
   collective is presumed hung and restart-from-checkpoint is requested.
+
+Both ``HeartbeatMonitor`` and ``StepWatchdog`` optionally carry a
+``MembershipEpoch`` (``collectives.nonblocking``): a dead peer or a hung
+step invalidates the epoch from the monitor's subsystem poll, which
+fails in-flight persistent-collective starts with a retryable
+``MembershipError`` and marks their handles stale — the trainer/serve
+engine observe the error, rebuild plans on the surviving mesh, and
+resume.  The epoch is duck-typed (anything with ``invalidate(survivors=,
+reason=)``) so this module keeps no import edge into the collectives.
 """
 from __future__ import annotations
 
+import collections
+import threading
 import time
 from typing import Callable, Optional
 
@@ -24,50 +36,86 @@ from repro.core.engine import ProgressEngine, Stream
 
 
 class HeartbeatMonitor:
+    """``beat()`` is called from worker/request threads; ``_poll`` runs
+    on whichever thread sweeps the engine's subsystems (often an
+    executor worker).  Both paths take ``_lock``: without it a beat
+    landing between ``_poll`` reading the stale timestamp and flagging
+    the peer would leave the peer marked failed *forever* (the discard
+    ran before the add).  Under the lock, flag-vs-beat is a clean
+    ordering: whichever runs second wins, and a flagged peer's next beat
+    revives it."""
+
     def __init__(self, engine: ProgressEngine, peers: list[str],
                  timeout: float = 60.0, on_failure: Callable[[str], None] = None,
-                 clock=time.monotonic):
-        self.peers = {p: clock() for p in peers}
+                 clock=time.monotonic, epoch=None, devices_per_peer: int = 1):
         self.timeout = timeout
         self.on_failure = on_failure or (lambda p: None)
         self.failed: set[str] = set()
         self.clock = clock
+        self.epoch = epoch
+        self.devices_per_peer = devices_per_peer
+        self._lock = threading.Lock()
+        self.peers = {p: clock() for p in peers}
         self._sub = engine.register_subsystem(
             "heartbeat", self._poll, cheap=True, priority=2)
 
     def beat(self, peer: str) -> None:
-        self.peers[peer] = self.clock()
-        self.failed.discard(peer)
+        with self._lock:
+            self.peers[peer] = self.clock()
+            self.failed.discard(peer)
 
     def _poll(self) -> bool:
         now = self.clock()
-        fired = False
-        for peer, last in self.peers.items():
-            if peer not in self.failed and now - last > self.timeout:
-                self.failed.add(peer)
-                self.on_failure(peer)
-                fired = True
-        return fired
+        newly_dead = []
+        with self._lock:
+            for peer, last in self.peers.items():
+                if peer not in self.failed and now - last > self.timeout:
+                    self.failed.add(peer)
+                    newly_dead.append(peer)
+            survivors = len(self.peers) - len(self.failed)
+        # callbacks outside the lock: on_failure/invalidate may run
+        # arbitrary user code (and a listener calling alive/beat back
+        # into this monitor must not deadlock)
+        for peer in newly_dead:
+            self.on_failure(peer)
+        if newly_dead and self.epoch is not None:
+            self.epoch.invalidate(
+                survivors=survivors * self.devices_per_peer,
+                reason=f"heartbeat timeout: {', '.join(newly_dead)}")
+        return bool(newly_dead)
 
     @property
     def alive(self) -> list[str]:
-        return [p for p in self.peers if p not in self.failed]
+        with self._lock:
+            return [p for p in self.peers if p not in self.failed]
 
 
 class StragglerDetector:
-    def __init__(self, threshold: float = 1.5, alpha: float = 0.1):
+    def __init__(self, threshold: float = 1.5, alpha: float = 0.1,
+                 history_maxlen: int = 1024):
         self.threshold = threshold
         self.alpha = alpha
         self.ewma: float | None = None
-        self.flagged: dict[str, int] = {}
-        self.history: list[tuple[str, float, bool]] = []
+        # bounded ledgers (PR-2's bounded error-ledger discipline): the
+        # step history is a ring, and the flagged map holds at most
+        # `history_maxlen` sources (least-recently-flagged evicted)
+        self.history_maxlen = history_maxlen
+        self.flagged: "collections.OrderedDict[str, int]" = \
+            collections.OrderedDict()
+        self.history: "collections.deque[tuple[str, float, bool]]" = \
+            collections.deque(maxlen=history_maxlen)
 
     def record(self, source: str, duration: float) -> bool:
         """Returns True if this step was a straggler."""
         is_straggler = (self.ewma is not None
                         and duration > self.threshold * self.ewma)
         if is_straggler:
-            self.flagged[source] = self.flagged.get(source, 0) + 1
+            # saturating count, LRU-bounded source set
+            count = self.flagged.get(source, 0)
+            self.flagged[source] = min(count + 1, self.history_maxlen)
+            self.flagged.move_to_end(source)
+            while len(self.flagged) > self.history_maxlen:
+                self.flagged.popitem(last=False)
         # EWMA excludes outliers so one straggler doesn't poison the mean
         if not is_straggler:
             self.ewma = (duration if self.ewma is None
@@ -81,10 +129,12 @@ class StragglerDetector:
 
 class StepWatchdog:
     def __init__(self, engine: ProgressEngine, limit: float = 300.0,
-                 on_hang: Callable[[], None] = None, clock=time.monotonic):
+                 on_hang: Callable[[], None] = None, clock=time.monotonic,
+                 epoch=None):
         self.limit = limit
         self.on_hang = on_hang or (lambda: None)
         self.clock = clock
+        self.epoch = epoch
         self._armed_at: float | None = None
         self.fired = 0
         # strict: firing the watchdog (on_hang raising) must abort the
@@ -101,8 +151,18 @@ class StepWatchdog:
     def _poll(self) -> bool:
         if self._armed_at is not None and \
                 self.clock() - self._armed_at > self.limit:
+            # disarm BEFORE the callbacks: firing is one-shot per arm —
+            # a poll sweep racing the handler must not refire, and the
+            # handler itself may progress the engine (more sweeps)
             self._armed_at = None
             self.fired += 1
+            if self.epoch is not None:
+                # a hung step means the in-flight collective is presumed
+                # dead: same membership, but every in-flight start fails
+                # retryably so the step can be restarted on fresh plans
+                self.epoch.invalidate(
+                    survivors=self.epoch.n_devices,
+                    reason=f"step watchdog fired after {self.limit}s")
             self.on_hang()
             return True
         return False

@@ -70,6 +70,18 @@ def main():
     ap.add_argument("--continuation-max-drain", type=int, default=64,
                     help="max continuations executed per drain (deferred "
                          "policy backpressure bound)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=0.0,
+                    help="enable a HeartbeatMonitor subsystem with this "
+                         "peer timeout in seconds (0 = off); a dead peer "
+                         "invalidates the membership epoch and the server "
+                         "drains, remeshes and re-admits")
+    ap.add_argument("--watchdog-limit", type=float, default=0.0,
+                    help="enable a StepWatchdog subsystem with this "
+                         "wall-clock step limit in seconds (0 = off)")
+    ap.add_argument("--chaos-kill", type=int, default=0,
+                    help="simulate the death of N devices after half the "
+                         "requests finish (invalidates the membership "
+                         "epoch) and report the recovery")
     ap.add_argument("--stats", action="store_true",
                     help="print progress statistics after serving")
     args = ap.parse_args()
@@ -124,6 +136,24 @@ def main():
         raise SystemExit("--collective-backend user requires --model-shards "
                          ">= 1 (the user backend is the sharded decode's "
                          "logits all-gather)")
+    # fault tolerance: one membership epoch shared by the monitors and
+    # the serve engine's persistent collectives — a dead peer or a hung
+    # step fails in-flight starts retryably, and the engine drains,
+    # remeshes onto the survivors, and re-admits from the backlog
+    epoch = None
+    heartbeat = None
+    if args.heartbeat_timeout > 0 or args.watchdog_limit > 0 \
+            or args.chaos_kill > 0:
+        from repro.collectives.nonblocking import MembershipEpoch
+        from repro.distributed.fault_tolerance import (HeartbeatMonitor,
+                                                       StepWatchdog)
+        epoch = MembershipEpoch()
+        if args.heartbeat_timeout > 0:
+            heartbeat = HeartbeatMonitor(
+                eng, [f"rank{i}" for i in range(len(jax.devices()))],
+                timeout=args.heartbeat_timeout, epoch=epoch)
+        if args.watchdog_limit > 0:
+            StepWatchdog(eng, limit=args.watchdog_limit, epoch=epoch)
     srv = ServeEngine(cfg, params, eng, batch_slots=args.slots,
                       max_seq=args.max_seq, executor=executor,
                       continuation_policy=args.continuation_policy,
@@ -135,18 +165,44 @@ def main():
                       cache_mode=args.cache_mode,
                       kv_block_size=args.kv_block_size,
                       kv_blocks=args.kv_blocks or None,
-                      prefill_chunk=args.prefill_chunk)
+                      prefill_chunk=args.prefill_chunk,
+                      epoch=epoch)
     if executor is not None:
         executor.start()
     rng = np.random.RandomState(1)
     reqs = []
-    for i in range(args.requests):
+
+    def make_request(i):
         prompt = rng.randint(1, cfg.vocab_size - 1,
                              size=rng.randint(2, 8)).astype(np.int32)
         r = GenRequest(f"req{i}", prompt, max_new_tokens=args.max_new)
         srv.submit(r)
         reqs.append(r)
-    srv.run_until_idle(timeout=600)
+
+    if args.chaos_kill > 0:
+        import time as _time
+        half = max(1, args.requests // 2)
+        for i in range(half):
+            make_request(i)
+        srv.run_until_idle(timeout=600)
+        survivors = max(1, len(jax.devices()) - args.chaos_kill)
+        t_kill = _time.monotonic()
+        epoch.invalidate(survivors=survivors,
+                         reason=f"--chaos-kill {args.chaos_kill}")
+        for i in range(half, args.requests):
+            make_request(i)
+        srv.run_until_idle(timeout=600)
+        t_rec = (_time.monotonic() - t_kill) * 1e3
+        print(f"chaos: killed {args.chaos_kill} device(s) -> {survivors} "
+              f"survivors; remeshes={srv.remeshes}, second half served "
+              f"in {t_rec:.1f} ms")
+    else:
+        for i in range(args.requests):
+            make_request(i)
+        srv.run_until_idle(timeout=600)
+    if heartbeat is not None:
+        for peer in heartbeat.alive:
+            heartbeat.beat(peer)
     snap = stats_mod.collect(eng, executor)   # before close drops the queue
     lat = srv.latency_snapshot()              # before close, too
     sched = srv.scheduler_snapshot() if args.cache_mode == "paged" else None

@@ -42,6 +42,22 @@ def main():
     ap.add_argument("--collective-round-batch", type=int, default=0,
                     help="rounds fused per jitted dispatch in the user "
                          "backend (0 = auto from bucket size)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="membership-aware fault tolerance (user backend "
+                         "only): a shared MembershipEpoch ties the "
+                         "watchdog/heartbeat to the reducer's persistent "
+                         "collectives; on invalidation the trainer "
+                         "remeshes onto the survivors and retries the "
+                         "step's batch")
+    ap.add_argument("--heartbeat-timeout", type=float, default=0.0,
+                    help="enable a HeartbeatMonitor with this peer "
+                         "timeout in seconds (0 = off; implies --elastic "
+                         "epoch wiring)")
+    ap.add_argument("--chaos-kill", type=int, default=0,
+                    help="simulate the death of N devices at the first "
+                         "logged step >= --chaos-kill-step (requires "
+                         "--elastic)")
+    ap.add_argument("--chaos-kill-step", type=int, default=10)
     args = ap.parse_args()
 
     if args.devices:
@@ -134,7 +150,14 @@ def main():
         batch = {k: jax.device_put(v, b_shardings[k]) for k, v in batch.items()}
         return jitted(params, opt_state, batch)
 
-    split, reducer = None, None
+    elastic_on = args.elastic or args.heartbeat_timeout > 0 \
+        or args.chaos_kill > 0
+    if elastic_on and not user_backend:
+        raise SystemExit("--elastic/--chaos-kill/--heartbeat-timeout "
+                         "require --collective-backend user (the epoch "
+                         "invalidates user-space persistent collectives)")
+
+    split, reducer, epoch, remesh_fn = None, None, None, None
     if user_backend:
         # Split step: shard_map-local grads (stacked per device) + an
         # engine-driven bucketed allreduce + a jitted apply.  Traced
@@ -160,9 +183,10 @@ def main():
             mets = dict(mets, loss=loss)
             return jax.tree.map(lambda v: v[None], mets), stacked
 
-        grad_fn = jax.jit(compat.shard_map(
-            local_grad, mesh=mesh, in_specs=(P(), P("data")),
-            out_specs=P("data")))
+        def make_grad_fn(mesh_):
+            return jax.jit(compat.shard_map(
+                local_grad, mesh=mesh_, in_specs=(P(), P("data")),
+                out_specs=P("data")))
 
         @jax.jit
         def apply_fn(params, opt_state, grads, stacked_mets):
@@ -171,12 +195,39 @@ def main():
             mets = {k: jnp.mean(v) for k, v in stacked_mets.items()}
             return params, opt_state, dict(mets, **om)
 
+        if elastic_on:
+            from repro.collectives.nonblocking import MembershipEpoch
+            epoch = MembershipEpoch()
+
         reducer = EngineGradReducer(
             mesh, "data", engine=eng,
             algorithm=args.collective_algorithm,
             chunks=args.collective_chunks, mean=True,
-            round_batch=args.collective_round_batch or None)
-        split = UserCollectiveStep(grad_fn, apply_fn, reducer)
+            round_batch=args.collective_round_batch or None,
+            epoch=epoch)
+        split = UserCollectiveStep(make_grad_fn(mesh), apply_fn, reducer)
+
+        if elastic_on:
+            from jax.sharding import NamedSharding
+
+            from repro.distributed import elastic
+
+            def remesh_fn(exc, params, opt_state):
+                # survivors' mesh: pure data-parallel (model dim stays 1)
+                survivors = getattr(exc, "survivors", None) \
+                    or len(jax.devices())
+                new_mesh = elastic.remesh(survivors, prefer_model=1)
+                print(f"remesh: {getattr(exc, 'survivors', '?')} "
+                      f"survivor(s) -> mesh {dict(new_mesh.shape)}")
+                reducer.remesh(new_mesh, "data")
+                params = jax.device_put(
+                    params, NamedSharding(new_mesh, P()))
+                opt_state = jax.device_put(
+                    opt_state, NamedSharding(new_mesh, P()))
+                return (UserCollectiveStep(make_grad_fn(new_mesh),
+                                           apply_fn, reducer),
+                        params, opt_state)
+
         print(f"collective backend: user "
               f"({reducer.algorithm}, chunks={args.collective_chunks}, "
               f"round_batch={args.collective_round_batch or 'auto'}, "
@@ -189,12 +240,31 @@ def main():
         collective_algorithm=args.collective_algorithm,
         collective_chunks=args.collective_chunks,
         collective_round_batch=args.collective_round_batch)
+    hooks = [lambda s, m: print(
+        f"step {s:4d} loss={m['loss']:.4f} "
+        f"{m['step_time_s'] * 1e3:.0f}ms", flush=True)]
+    if args.heartbeat_timeout > 0:
+        from repro.distributed.fault_tolerance import HeartbeatMonitor
+        hb = HeartbeatMonitor(
+            eng, [f"rank{i}" for i in range(len(jax.devices()))],
+            timeout=args.heartbeat_timeout, epoch=epoch)
+        hooks.append(lambda s, m: [hb.beat(p) for p in hb.alive])
+    if args.chaos_kill > 0:
+        killed = []
+
+        def chaos_hook(s, m):
+            if s >= args.chaos_kill_step and not killed:
+                killed.append(s)
+                survivors = max(1, len(jax.devices()) - args.chaos_kill)
+                print(f"chaos: killing {args.chaos_kill} device(s) at "
+                      f"step {s} -> {survivors} survivors")
+                epoch.invalidate(survivors=survivors,
+                                 reason=f"--chaos-kill {args.chaos_kill}")
+        hooks.append(chaos_hook)
     trainer = Trainer(
         step_fn, params, opt_state, pipe, loop_cfg,
-        engine=eng, split_step=split,
-        hooks=[lambda s, m: print(
-            f"step {s:4d} loss={m['loss']:.4f} "
-            f"{m['step_time_s'] * 1e3:.0f}ms", flush=True)])
+        engine=eng, split_step=split, epoch=epoch, remesh_fn=remesh_fn,
+        hooks=hooks)
     if user_backend:
         log = trainer.run()
     else:
@@ -203,7 +273,12 @@ def main():
     pipe.close()
     if reducer is not None:
         reducer.close()
-    print(f"final loss {log[-1]['loss']:.4f}")
+    if log:
+        print(f"final loss {log[-1]['loss']:.4f}")
+    else:
+        # resume found a checkpoint at/past --steps: nothing left to run
+        print(f"nothing to do: resumed past step {args.steps - 1} "
+              f"(rm -r {loop_cfg.checkpoint_dir} to restart)")
     return 0
 
 

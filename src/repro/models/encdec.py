@@ -184,8 +184,11 @@ def init_cache(cfg, batch, max_seq):
     return L.init_tree(cache_spec(cfg, batch, max_seq), jax.random.PRNGKey(0))
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
-    """One decoder token; cross-attn K/V come from the cache."""
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, fed=None):
+    """One decoder token; cross-attn K/V come from the cache.  ``fed``
+    is accepted for API uniformity and ignored (attention-only: KV
+    writes are position-indexed and overwritten before exposure)."""
+    del fed
     dt = jnp.dtype(cfg.dtype)
     B = tokens.shape[0]
     x = jnp.take(params["embed"], tokens, axis=0).astype(dt)

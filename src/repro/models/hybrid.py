@@ -179,13 +179,16 @@ def init_cache(cfg, batch, max_seq):
     return L.init_tree(cache_spec(cfg, batch, max_seq), jax.random.PRNGKey(0))
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, fed=None):
     from repro.models.transformer import unembed
-    x, new_cache = decode_hidden(params, cfg, cache, tokens, pos)
+    x, new_cache = decode_hidden(params, cfg, cache, tokens, pos, fed)
     return unembed(params, cfg, x), new_cache
 
 
-def decode_hidden(params, cfg: ModelConfig, cache, tokens, pos):
+def decode_hidden(params, cfg: ModelConfig, cache, tokens, pos, fed=None):
+    """``fed`` [B] bool freezes non-fed lanes' SSM state (see mamba.py)
+    — the attention KV rows need no mask: a non-fed lane's write at its
+    own ``pos`` is overwritten before the causal mask exposes it."""
     from repro.models.transformer import embed_tokens
     x = embed_tokens(params, cfg, tokens)
     n_groups, k, tail = group_layout(cfg)
@@ -203,9 +206,11 @@ def decode_hidden(params, cfg: ModelConfig, cache, tokens, pos):
             bp = _stack_index(gblocks, i)
             st = _stack_index(sts, i)
             h = L.rmsnorm(x, gn[i], cfg.rms_norm_eps)
-            y, st = M.block_decode(bp, cfg, st, h)
+            y, new_st = M.block_decode(bp, cfg, st, h)
+            if fed is not None:
+                new_st = M.masked_state(fed, new_st, st)
             x = x + y
-            new_sts.append(st)
+            new_sts.append(new_st)
         sts = jax.tree.map(lambda *a: jnp.stack(a), *new_sts)
         x, (kc, vc) = _shared_attn_fwd(cfg, params["shared"], lora, x,
                                        pos[:, None], cache=(kc, vc), pos=pos)
@@ -225,9 +230,11 @@ def decode_hidden(params, cfg: ModelConfig, cache, tokens, pos):
             bp = _stack_index(params["tail_blocks"], i)
             st = _stack_index(cache["tail_ssm"], i)
             h = L.rmsnorm(x, params["tail_norms"][i], cfg.rms_norm_eps)
-            y, st = M.block_decode(bp, cfg, st, h)
+            y, new_st = M.block_decode(bp, cfg, st, h)
+            if fed is not None:
+                new_st = M.masked_state(fed, new_st, st)
             x = x + y
-            tail_sts.append(st)
+            tail_sts.append(new_st)
         new_cache["tail_ssm"] = jax.tree.map(lambda *a: jnp.stack(a), *tail_sts)
     x = L.rmsnorm(x, params["final_norm"], cfg.rms_norm_eps)
     return x, new_cache
@@ -272,6 +279,14 @@ def init_paged_cache(cfg: ModelConfig, lanes: int, num_blocks: int,
                      block_size: int):
     return L.init_tree(paged_cache_spec(cfg, lanes, num_blocks, block_size),
                        jax.random.PRNGKey(0))
+
+
+def reset_cache_lane(cfg: ModelConfig, cache, lane_index: int):
+    """Slot-cache lane reset: zero the lane's SSM state (the ``ssm`` /
+    ``tail_ssm`` subtrees are lane-indexed in both cache layouts, so the
+    paged reset applies verbatim); attention rows are position-indexed
+    and need no reset."""
+    return reset_paged_lane(cfg, cache, lane_index)
 
 
 def reset_paged_lane(cfg: ModelConfig, cache, lane_index: int):

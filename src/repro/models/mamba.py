@@ -305,21 +305,27 @@ def init_cache(cfg, batch, max_seq):
     return L.init_tree(cache_spec(cfg, batch, max_seq), jax.random.PRNGKey(0))
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, fed=None):
     from repro.models.transformer import unembed
-    x, new_state = decode_hidden(params, cfg, cache, tokens, pos)
+    x, new_state = decode_hidden(params, cfg, cache, tokens, pos, fed)
     return unembed(params, cfg, x), new_state
 
 
-def decode_hidden(params, cfg: ModelConfig, cache, tokens, pos):
+def decode_hidden(params, cfg: ModelConfig, cache, tokens, pos, fed=None):
+    """``fed`` [B] bool: lanes not fed a real token this call keep their
+    recurrent state bit-frozen — the state is a running reduction, so a
+    batched prefill of one lane must not advance the others (the paged
+    path's ``masked_state`` discipline, ported to the slot path)."""
     from repro.models.transformer import embed_tokens
     x = embed_tokens(params, cfg, tokens)
 
     def body(x, scanned):
         bp, nrm, st = scanned
         h = L.rmsnorm(x, nrm, cfg.rms_norm_eps)
-        y, st = block_decode(bp, cfg, st, h)
-        return x + y, st
+        y, new_st = block_decode(bp, cfg, st, h)
+        if fed is not None:
+            new_st = masked_state(fed, new_st, st)
+        return x + y, new_st
 
     x, new_state = jax.lax.scan(
         body, x, (params["blocks"], params["block_norms"], cache))
@@ -366,6 +372,13 @@ def reset_paged_lane(cfg: ModelConfig, cache, lane_index: int):
     unlike KV blocks, state is never overwritten-before-read, so a
     recycled lane would otherwise leak its previous occupant's state."""
     return jax.tree.map(lambda a: a.at[:, lane_index].set(0), cache)
+
+
+def reset_cache_lane(cfg: ModelConfig, cache, lane_index: int):
+    """Slot-cache lane reset: the slot cache IS the state tree (leaves
+    [NL, B, ...]), so a recycled slot must be zeroed exactly like a
+    recycled paged lane."""
+    return reset_paged_lane(cfg, cache, lane_index)
 
 
 def masked_state(fed, new_state, old_state):

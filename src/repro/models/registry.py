@@ -44,11 +44,14 @@ def forward(params, cfg, batch):
     return m.forward(params, cfg, batch["tokens"])
 
 
-def decode_step(params, cfg, cache, tokens, pos):
-    return module_for(cfg).decode_step(params, cfg, cache, tokens, pos)
+def decode_step(params, cfg, cache, tokens, pos, fed=None):
+    """``fed`` [B] bool (optional): lanes not fed a real token this call
+    — SSM families freeze their recurrent state (``masked_state``);
+    attention-only families ignore it (their KV writes are safe)."""
+    return module_for(cfg).decode_step(params, cfg, cache, tokens, pos, fed)
 
 
-def decode_hidden(params, cfg, cache, tokens, pos):
+def decode_hidden(params, cfg, cache, tokens, pos, fed=None):
     """Decode up to the final norm (no unembed) — the split point for
     vocab-parallel serving.  Raises for families whose decode step does
     not factor this way (encoder-decoder has a bespoke unembed)."""
@@ -56,7 +59,19 @@ def decode_hidden(params, cfg, cache, tokens, pos):
     if not hasattr(m, "decode_hidden"):
         raise NotImplementedError(
             f"decode_hidden not supported for family {cfg.family!r}")
-    return m.decode_hidden(params, cfg, cache, tokens, pos)
+    return m.decode_hidden(params, cfg, cache, tokens, pos, fed)
+
+
+def reset_cache_lane(cfg, cache, lane_index):
+    """Zero one lane's per-lane recurrent state in the SLOT cache (SSM
+    families) — a recycled slot must not leak its previous occupant's
+    state.  No-op for attention-only families (KV rows are
+    position-indexed and overwritten before the causal mask exposes
+    them)."""
+    m = module_for(cfg)
+    if hasattr(m, "reset_cache_lane"):
+        return m.reset_cache_lane(cfg, cache, lane_index)
+    return cache
 
 
 def unembed_partial(params, cfg, x, vocab_start, vocab_len):

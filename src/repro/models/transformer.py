@@ -254,16 +254,23 @@ def _layer_decode(cfg: ModelConfig, x, lp, kc, vc, pos, ks=None, vs=None):
     return x + y, kc, vc, ks, vs
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
-    """tokens [B,1], pos [B] -> (logits [B,1,V], updated cache)."""
-    x, new_cache = decode_hidden(params, cfg, cache, tokens, pos)
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, fed=None):
+    """tokens [B,1], pos [B] -> (logits [B,1,V], updated cache).
+
+    ``fed`` is accepted for API uniformity with the SSM families and
+    ignored: attention KV writes land at each lane's own ``pos`` and are
+    overwritten before the causal mask can expose them, so a non-fed
+    lane's cache row is already safe without masking."""
+    x, new_cache = decode_hidden(params, cfg, cache, tokens, pos, fed)
     return unembed(params, cfg, x), new_cache
 
 
-def decode_hidden(params, cfg: ModelConfig, cache, tokens, pos):
+def decode_hidden(params, cfg: ModelConfig, cache, tokens, pos, fed=None):
     """Decode step up to (and including) the final norm: tokens [B,1],
     pos [B] -> (hidden [B,1,D], updated cache).  The unembed is split
-    out so vocab-parallel serving can project per-rank slices."""
+    out so vocab-parallel serving can project per-rank slices.
+    ``fed`` is ignored (see ``decode_step``)."""
+    del fed
     x = embed_tokens(params, cfg, tokens)
     int8 = cfg.kv_cache_dtype == "int8"
 

@@ -77,6 +77,7 @@ from repro.core import DEFERRED, DONE, NOPROGRESS, ProgressEngine, Request
 from repro.core.continuations import POLICIES, ContinuationQueue
 from repro.core.executor import ProgressExecutor
 from repro.core.stats import SchedulerStats
+from repro.collectives.nonblocking import MembershipError
 from repro.models import registry
 from repro.serve.kvcache import PagedKVCache, SlotCache
 
@@ -109,6 +110,11 @@ class GenRequest:
     #                                preempts the oldest resident
     queued_s: float = 0.0          # total backlog wait across (re)admissions
     last_enqueued_at: float = 0.0
+    # membership change: host-side snapshot of the lane's KV prefix +
+    # per-lane state (PagedKVCache.checkpoint_lane), carried through the
+    # backlog so re-admission on the rebuilt mesh restores instead of
+    # replaying the whole prefix; None = replay from tokens
+    kv_ckpt: Optional[dict] = None
 
 
 class _BucketBacklog:
@@ -230,7 +236,8 @@ class ServeEngine:
                  cache_mode: str = "slots",
                  kv_block_size: int = 16,
                  kv_blocks: int | None = None,
-                 prefill_chunk: int = 8):
+                 prefill_chunk: int = 8,
+                 epoch=None):
         if continuation_policy not in POLICIES:
             raise ValueError(f"continuation_policy must be one of {POLICIES}")
         if collective_backend not in ("native", "user"):
@@ -264,6 +271,11 @@ class ServeEngine:
         self.batch_slots = batch_slots
         self.max_seq = max_seq
         self.prefill_chunk = prefill_chunk
+        # retained for elastic rebuilds (_rebuild_for_survivors)
+        self._kv_block_size = kv_block_size
+        self._kv_blocks = kv_blocks
+        self._collective_chunks = collective_chunks
+        self._collective_round_batch = collective_round_batch
         self._arrivals: collections.deque[GenRequest] = collections.deque()
         self._active: dict[int, GenRequest] = {}
         # paged continuous batching: requests waiting for blocks/lanes,
@@ -285,6 +297,15 @@ class ServeEngine:
         self._prefill_active = False
         self._stopping = False
         self._closed = False
+        # membership (fault tolerance): the epoch's invalidation listener
+        # only RECORDS the change — it may run inside whatever subsystem
+        # poll fired the invalidation (often an executor worker), where a
+        # drain/rebuild would self-deadlock.  The heavy work happens on
+        # the admit path (_apply_membership_change).
+        self.epoch = epoch
+        self._membership_exc = None
+        self._remeshing = False
+        self.remeshes = 0
         # finished-request ledger for latency_snapshot (bounded: a
         # long-lived server must not grow per-request records forever)
         self._submitted = 0
@@ -303,7 +324,8 @@ class ServeEngine:
                         p, cfg, c, t, q, bt, fd))
             else:
                 self._jit_decode = jax.jit(
-                    lambda p, c, t, q: registry.decode_step(p, cfg, c, t, q))
+                    lambda p, c, t, q, fd: registry.decode_step(
+                        p, cfg, c, t, q, fd))
         self.admit_stream = engine.stream("serve-admit")
         self.decode_stream = engine.stream("serve-decode")
         # decode completions are delivered through this queue; its
@@ -341,6 +363,8 @@ class ServeEngine:
         # not accumulate exception objects forever
         self.decode_errors: collections.deque[BaseException] = \
             collections.deque(maxlen=256)
+        if epoch is not None:
+            epoch.subscribe(self._on_epoch_invalidate)
 
     # -- sharded decode construction --------------------------------------
     def _build_sharded_decode(self, chunks: int,
@@ -381,9 +405,9 @@ class ServeEngine:
                 in_specs=(P(), P(), P(), P(), P(), P()),
                 out_specs=(P(axis), P())))
         else:
-            def local_step(params, cache, toks, pos):
+            def local_step(params, cache, toks, pos, fed):
                 hid, new_cache = registry.decode_hidden(params, cfg, cache,
-                                                        toks, pos)
+                                                        toks, pos, fed)
                 r = jax.lax.axis_index(axis)
                 part = registry.unembed_partial(params, cfg, hid,
                                                 r * vloc, vloc)
@@ -392,7 +416,7 @@ class ServeEngine:
                 return part[:, 0][None], new_cache
 
             self._jit_decode = jax.jit(compat.shard_map(
-                local_step, mesh=mesh, in_specs=(P(), P(), P(), P()),
+                local_step, mesh=mesh, in_specs=(P(), P(), P(), P(), P()),
                 out_specs=(P(axis), P())))
 
         def local_gather(part):                  # local [1, B, vloc]
@@ -408,7 +432,8 @@ class ServeEngine:
             self._jit_gather = None
             self.coll = NB.UserCollectives(self.engine,
                                            executor=self.executor,
-                                           name="serve-coll")
+                                           name="serve-coll",
+                                           epoch=self.epoch)
             self._ag_handle = self.coll.allgather_init(
                 jax.ShapeDtypeStruct((n, self.batch_slots, vloc),
                                      jnp.float32),
@@ -451,7 +476,8 @@ class ServeEngine:
     # -- admission (event-scheduled, one-shot) ------------------------------
     def _schedule_admit(self) -> None:
         with self._lock:
-            pending = (self._arrivals or self._backlog or self._prefilling)
+            pending = (self._arrivals or self._backlog or self._prefilling
+                       or self._membership_exc is not None)
             if self._admit_scheduled or not pending:
                 return
             self._admit_scheduled = True
@@ -467,7 +493,16 @@ class ServeEngine:
     def _admit(self) -> bool:
         """Admission + (paged) one prefill chunk; see the mode-specific
         bodies.  Both stage cache writes outside the lock and publish
-        atomically."""
+        atomically.
+
+        A pending membership change is applied first — nothing may be
+        admitted onto the old mesh.  The unlocked reads are benign: the
+        flag is set under the lock, and an invalidation racing past the
+        check is caught by the decode gate and the next admit pass."""
+        if self._membership_exc is not None:
+            self._apply_membership_change()
+            if self._membership_exc is not None:
+                return False         # in-flight work must drain first
         if self.paged:
             return self._admit_paged()
         return self._admit_slots()
@@ -517,12 +552,19 @@ class ServeEngine:
                 len(self._active) + len(self._prefilling))
             self._prefill_active = True
             cache = self.slots.cache
-            new_lanes = [r.slot_index for r in admitted]
         try:
-            for idx in new_lanes:
+            for req in admitted:
+                idx = req.slot_index
                 # recycled lane: zero per-lane recurrent state (SSM) so
                 # the previous occupant cannot leak into this request
                 cache = self.slots.reset_lane(cache, idx)
+                if req.kv_ckpt is not None:
+                    # migrated lane (membership change): restore the KV
+                    # prefix + per-lane state checkpointed off the old
+                    # mesh instead of replaying the whole prefix
+                    cache = self.slots.restore_lane(cache, idx, req.kv_ckpt)
+                    req.prefill_pos = len(req.replay) - 1
+                    req.kv_ckpt = None
             cache, completed = self._prefill_chunk(cache)
         except BaseException as exc:  # noqa: BLE001
             # chunk failure: the staged cache is NOT published, so every
@@ -600,7 +642,7 @@ class ServeEngine:
                 slot = self.slots.assign(req.request_id)
                 req.slot_index = slot.index
                 if req.last_enqueued_at:
-                    req.queued_s = now - req.last_enqueued_at
+                    req.queued_s += now - req.last_enqueued_at
                 batch.append((req, slot))
             if not batch:
                 return False
@@ -633,14 +675,31 @@ class ServeEngine:
     def _prefill(self, req: GenRequest, slot, cache):
         """Token-by-token prefill into a STAGED cache (returned, not
         published) — one compiled shape; a chunked prefill path is the
-        serving hillclimb.  Caller holds no lock; see ``_admit``."""
-        for tok in req.prompt[:-1]:
+        serving hillclimb.  Caller holds no lock; see ``_admit``.
+
+        Each call feeds exactly one slot, so the ``fed`` mask is that
+        slot alone: other lanes — including ones actively decoding —
+        keep their SSM state bit-frozen instead of being advanced by the
+        zero-padding (the fixed-slot twin of the paged path's mask).
+        Feeds ``req.replay`` when set (re-admission after a membership
+        change: prompt + generated prefix — greedy decode is per-lane
+        deterministic, so the rebuilt KV continues the exact stream)."""
+        replay = (req.replay if req.replay is not None
+                  else np.asarray(req.prompt, np.int32))
+        # recycled slot: zero per-lane recurrent state (SSM families) so
+        # the previous occupant cannot leak into this request
+        cache = registry.reset_cache_lane(self.cfg, cache, slot.index)
+        fed = np.zeros((self.batch_slots,), bool)
+        fed[slot.index] = True
+        fed = jnp.asarray(fed)
+        for tok in replay[:-1]:
             tokens = self._token_batch(slot.index, int(tok))
             pos = self.slots.positions()
-            _, cache = self._jit_decode(self.params, cache, tokens, pos)
+            _, cache = self._jit_decode(self.params, cache, tokens, pos, fed)
             slot.pos += 1
-        req.out_tokens = []
-        req.next_input = int(req.prompt[-1])
+        if req.replay is None:
+            req.out_tokens = []
+        req.next_input = int(replay[-1])
         return cache
 
     def _token_batch(self, slot_index: int, token: int):
@@ -657,18 +716,23 @@ class ServeEngine:
             # _schedule_decode after publishing, so nothing starves.
             busy = (self._decode_inflight is not None
                     or self._prefill_active)
-            launched = not busy and bool(self._active)
+            # membership pending: nothing launches on the old mesh — the
+            # admit path applies the change first.  With a step still in
+            # flight its own continuation funnels there; re-scheduling
+            # here too would spin the admit stream against it.
+            blocked = self._membership_exc is not None
+            launched = not busy and not blocked and bool(self._active)
             if launched:
                 step, agreq, cache = self._launch_decode_locked()
             # paged: prompts may still be mid-replay with no lane decoding
             # yet — keep the prefill chain alive (the admit task runs the
             # next chunk; _admit_scheduled bounds this to one outstanding
             # task)
-            reschedule = (self.paged and not busy and not self._active
-                          and bool(self._prefilling))
+            reschedule = (self.paged and not busy and not blocked
+                          and not self._active and bool(self._prefilling))
         if launched:
             self._attach_step(step, agreq, cache)
-        elif reschedule:
+        elif reschedule or (blocked and not busy):
             self._schedule_admit()
 
     def _launch_decode_locked(self):
@@ -706,8 +770,12 @@ class ServeEngine:
                     self.params, self.slots.cache, jnp.asarray(toks), pos,
                     self.slots.block_tables(), jnp.asarray(fed))
             else:
+                fed = np.zeros((self.batch_slots,), bool)
+                for idx in self._active:
+                    fed[idx] = True
                 out, cache = self._jit_decode(
-                    self.params, self.slots.cache, jnp.asarray(toks), pos)
+                    self.params, self.slots.cache, jnp.asarray(toks), pos,
+                    jnp.asarray(fed))
             if self._jit_gather is not None:     # native-sharded gather
                 out = self._jit_gather(out)
             agreq = None
@@ -868,16 +936,181 @@ class ServeEngine:
                 return
             self._current_step = None
             self._decode_inflight = None
-            for idx, req in list(self._active.items()):
-                self._active.pop(idx)
-                # first_token_at stays as-is: a request that failed
-                # before its first token keeps None (null-propagated —
-                # counted by the snapshot, never faked into TTFT)
-                req.finished_at = time.monotonic()
-                self.slots.release(self.slots.slots[idx])
-                self._record_locked(req, failed=True)
-                req.done_req.fail(exc)
+            if (isinstance(exc, MembershipError)
+                    or self._membership_exc is not None):
+                # membership change killed the STEP, not the requests:
+                # the failed step never published its cache, so every
+                # resident lane is still pre-step-consistent — checkpoint
+                # + requeue them for re-admission on the rebuilt mesh
+                # instead of failing them (no in-flight request is lost)
+                if self._membership_exc is None:
+                    self._membership_exc = exc
+                self._requeue_residents_locked()
+            else:
+                for idx, req in list(self._active.items()):
+                    self._active.pop(idx)
+                    # first_token_at stays as-is: a request that failed
+                    # before its first token keeps None (null-propagated
+                    # — counted by the snapshot, never faked into TTFT)
+                    req.finished_at = time.monotonic()
+                    self.slots.release(self.slots.slots[idx])
+                    self._record_locked(req, failed=True)
+                    req.done_req.fail(exc)
         self._schedule_admit()
+
+    # -- membership changes (elastic fault tolerance) -----------------------
+    def _on_epoch_invalidate(self, epoch, exc) -> None:
+        """Epoch listener — runs inside whatever subsystem poll fired the
+        invalidation (often an executor worker), so it only records the
+        change and pokes the admit path; draining or rebuilding here
+        could deadlock the worker against its own stream."""
+        with self._lock:
+            if self._closed:
+                return
+            self._membership_exc = exc
+        self._schedule_admit()
+
+    def _requeue_residents_locked(self) -> int:
+        """Move every resident request (decoding or mid-prefill) back to
+        the queue for re-admission on the rebuilt mesh.  Decoding paged
+        lanes checkpoint their KV prefix + per-lane state to host memory
+        (block-table walk) so restore skips the replay; mid-prefill lanes
+        just replay.  Caller holds ``self._lock``; any in-flight step was
+        failed WITHOUT publishing, so lane state is pre-step-consistent
+        and ``replay = prompt + out_tokens`` resumes the exact stream."""
+        now = time.monotonic()
+        moved = []
+        for idx, req in list(self._active.items()):
+            self._active.pop(idx)
+            lane = self.slots.slots[idx]
+            if self.paged and lane.pos > 0:
+                try:
+                    req.kv_ckpt = self.slots.checkpoint_lane(idx)
+                except Exception as ckpt_exc:   # fall back to full replay
+                    self.decode_errors.append(ckpt_exc)
+                    req.kv_ckpt = None
+            self.slots.release(lane)
+            moved.append(req)
+        for idx, req in list(self._prefilling.items()):
+            self._prefilling.pop(idx)
+            req.kv_ckpt = None                  # partial prefix: replay
+            self.slots.release(self.slots.slots[idx])
+            moved.append(req)
+        for req in moved:
+            req.replay = np.concatenate([
+                np.asarray(req.prompt, np.int32),
+                np.asarray(req.out_tokens, np.int32)])
+            req.prefill_pos = 0
+            req.slot_index = -1
+            req.last_enqueued_at = now
+        if self.paged:
+            for req in moved:
+                self._backlog.push(req)
+        else:
+            # front of the arrivals queue, oldest first: residents resume
+            # before fresh arrivals are admitted
+            for req in sorted(moved, key=lambda r: r.seq, reverse=True):
+                self._arrivals.appendleft(req)
+        return len(moved)
+
+    def _apply_membership_change(self) -> None:
+        """Drain + rebuild after an epoch invalidation (admit path, no
+        lock held).  Residents are checkpointed and requeued under the
+        lock; the rebuild — survivors' mesh, fresh KV pool, recompiled
+        decode/gather programs, new persistent all-gather — runs outside
+        it.  Bails while a step or prefill is in flight: their
+        completion/failure continuations funnel back here."""
+        with self._lock:
+            exc = self._membership_exc
+            if exc is None or self._remeshing:
+                return
+            if self._decode_inflight is not None or self._prefill_active:
+                return
+            self._remeshing = True
+            moved = self._requeue_residents_locked()
+        try:
+            self._rebuild_for_survivors(exc)
+        except BaseException:
+            # keep _membership_exc set: the next admit pass retries the
+            # rebuild (residents are already requeued — idempotent)
+            with self._lock:
+                self._remeshing = False
+            raise
+        with self._lock:
+            self._remeshing = False
+            if self._membership_exc is exc:     # a FRESH invalidation
+                self._membership_exc = None     # during rebuild stays
+            self.remeshes += 1
+        if moved:
+            self._schedule_admit()
+
+    def _rebuild_for_survivors(self, exc) -> None:
+        """Rebuild every mesh-dependent piece on the survivors: the mesh
+        (model axis shrunk to what survives — capped by the old degree
+        and the vocab divisibility rule), KV pool, decode and gather
+        programs, and the persistent all-gather handle.  Nothing resident
+        survives in device memory: requeued requests carry their prefix
+        as a host checkpoint or as replay tokens."""
+        from repro.distributed import elastic
+        from repro.launch.mesh import make_mesh
+        old_handle, old_coll = self._ag_handle, self.coll
+        self._ag_handle = None
+        self.coll = None
+        # stop bridging the old collective stream BEFORE draining it
+        self._bridge_streams = [self.admit_stream, self.decode_stream]
+        if old_handle is not None:
+            old_handle.close()
+        if old_coll is not None:
+            old_coll.close()
+        if self._sharded:
+            survivors = getattr(exc, "survivors", None)
+            if survivors is None:
+                survivors = self._model_shards
+            # plan_mesh validates survivors >= 1 and keeps the model
+            # degree when it still fits; vocab divisibility caps it below
+            shape, _axes = elastic.plan_mesh(
+                survivors, prefer_model=self._model_shards)
+            m = shape[1]
+            while m > 1 and self.cfg.vocab_size % m:
+                m //= 2
+            if m > 1:
+                self.mesh = make_mesh((m,), (self.model_axis,))
+            else:
+                # a lone survivor serves unsharded — there is nothing
+                # left to gather
+                self.mesh = None
+                self._sharded = False
+        if self.paged:
+            self.slots = PagedKVCache(self.cfg, self.batch_slots,
+                                      self.max_seq,
+                                      block_size=self._kv_block_size,
+                                      num_blocks=self._kv_blocks,
+                                      mesh=self.mesh)
+        else:
+            self.slots = SlotCache(self.cfg, self.batch_slots, self.max_seq,
+                                   mesh=self.mesh)
+        if self.mesh is not None:
+            self.params = jax.device_put(
+                self.params, jax.sharding.NamedSharding(self.mesh, P()))
+        else:
+            self.params = jax.device_put(self.params, jax.devices()[0])
+        if self._sharded:
+            self._build_sharded_decode(self._collective_chunks,
+                                       self._collective_round_batch)
+            if self.coll is not None:
+                self._bridge_streams = [self.admit_stream,
+                                        self.decode_stream, self.coll.stream]
+        else:
+            cfg = self.cfg
+            self._jit_gather = None
+            if self.paged:
+                self._jit_decode = jax.jit(
+                    lambda p, c, t, q, bt, fd: registry.decode_step_paged(
+                        p, cfg, c, t, q, bt, fd))
+            else:
+                self._jit_decode = jax.jit(
+                    lambda p, c, t, q, fd: registry.decode_step(
+                        p, cfg, c, t, q, fd))
 
     # -- latency accounting ------------------------------------------------
     def _record_locked(self, req: GenRequest, failed: bool) -> None:
@@ -934,7 +1167,8 @@ class ServeEngine:
         with self._lock:
             busy = (self._active or self._arrivals or self._prefill_active
                     or self._prefilling or len(self._backlog)
-                    or self._decode_inflight is not None)
+                    or self._decode_inflight is not None
+                    or self._membership_exc is not None)
         return not busy and self.continuations.ready == 0
 
     def run_until_idle(self, timeout: float = 120.0) -> None:

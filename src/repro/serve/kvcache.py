@@ -368,3 +368,76 @@ class PagedKVCache:
         blocks to recycle), so a recycled lane must not leak its previous
         occupant's state into the next request."""
         return registry.reset_paged_lane(self.cfg, cache, lane_index)
+
+    # -- per-lane checkpoint / restore (KV migration) ----------------------
+    # Leaf classification is by shape against the pool geometry: a leaf
+    # whose dims 1/2 are (num_blocks, block_size) is block-pooled KV
+    # (transformer k/v + scales, hybrid attn_k/attn_v); a leaf whose dim 1
+    # is the lane count is lane-indexed recurrent state (mamba/hybrid
+    # ssm).  Block leaves are checked first so a coincidental
+    # lanes == num_blocks match cannot misfile pooled KV.
+
+    def _is_block_leaf(self, leaf) -> bool:
+        return (self.has_blocks and leaf.ndim >= 3
+                and leaf.shape[1] == self.num_blocks
+                and leaf.shape[2] == self.block_size)
+
+    def _is_lane_leaf(self, leaf) -> bool:
+        return leaf.ndim >= 2 and leaf.shape[1] == len(self.slots)
+
+    def checkpoint_lane(self, lane_index: int) -> dict:
+        """Snapshot one lane's KV prefix + per-lane state to host memory.
+
+        Walks the block table: for pooled leaves, gathers the lane's
+        owned physical blocks (positions ``0..pos-1`` live in the first
+        ``ceil(pos/block_size)`` table entries); for lane-indexed leaves,
+        captures the lane's row.  The result is mesh-independent (plain
+        numpy) so a membership change can carry a decoding request's KV
+        onto a cache rebuilt for the surviving mesh instead of replaying
+        its whole prefix."""
+        lane = self.slots[lane_index]
+        if lane.done:
+            raise BlockAllocationError(f"lane {lane_index} is free")
+        pos = lane.pos
+        used = -(-pos // self.block_size) if (self.has_blocks and pos) else 0
+        table = self._tables[lane_index, :used].copy()
+        blocks: dict[str, np.ndarray] = {}
+        state: dict[str, np.ndarray] = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(self.cache)[0]:
+            key = jax.tree_util.keystr(path)
+            if self._is_block_leaf(leaf):
+                if used:
+                    blocks[key] = np.asarray(leaf[:, table])
+            elif self._is_lane_leaf(leaf):
+                state[key] = np.asarray(leaf[:, lane_index])
+        return {"pos": pos, "blocks": blocks, "state": state}
+
+    def restore_lane(self, cache, lane_index: int, ckpt: dict):
+        """Write a ``checkpoint_lane`` snapshot into this pool's ``cache``
+        for an already-``assign``ed lane (whose table must cover
+        ``ckpt['pos']`` positions — ``assign(request_id, seq_len=pos+1)``
+        guarantees that).  Returns the updated cache; the caller owns
+        publishing it and setting engine-side positions."""
+        lane = self.slots[lane_index]
+        if lane.done:
+            raise BlockAllocationError(f"lane {lane_index} is free")
+        pos = int(ckpt["pos"])
+        used = -(-pos // self.block_size) if (self.has_blocks and pos) else 0
+        if used and used > len(self.allocator.blocks_of(lane.request_id)):
+            raise BlockAllocationError(
+                f"lane {lane_index} owns too few blocks to restore "
+                f"{pos} positions")
+        table = jnp.asarray(self._tables[lane_index, :used]) if used else None
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(cache)
+        out = []
+        for path, leaf in leaves:
+            key = jax.tree_util.keystr(path)
+            if used and key in ckpt["blocks"]:
+                leaf = leaf.at[:, table].set(
+                    jnp.asarray(ckpt["blocks"][key], leaf.dtype))
+            elif key in ckpt["state"]:
+                leaf = leaf.at[:, lane_index].set(
+                    jnp.asarray(ckpt["state"][key], leaf.dtype))
+            out.append(leaf)
+        lane.pos = pos
+        return jax.tree_util.tree_unflatten(treedef, out)

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import ProgressEngine, ProgressExecutor, global_engine, \
     jax_future
+from repro.collectives.nonblocking import MembershipError
 from repro.core.request import Request
 from repro.distributed.fault_tolerance import StepWatchdog, StragglerDetector
 from repro.train import optimizer as opt_mod
@@ -76,7 +77,18 @@ class Trainer:
                  pipeline, cfg: TrainLoopConfig,
                  engine: Optional[ProgressEngine] = None,
                  hooks: list[Callable[[int, dict], None]] | None = None,
-                 split_step: "UserCollectiveStep | None" = None):
+                 split_step: "UserCollectiveStep | None" = None,
+                 epoch=None,
+                 remesh_fn: Callable | None = None):
+        # epoch: a collectives MembershipEpoch shared with the reducer's
+        # persistent handles.  The watchdog invalidates it when a step
+        # hangs, so the in-flight reduction fails retryably instead of
+        # deadlocking the loop.  remesh_fn(exc, params, opt_state) ->
+        # (split_step, params, opt_state) rebuilds the split step on the
+        # survivors' mesh (new shard_map programs, re-placed state, a
+        # remeshed reducer); with it set, a MembershipError surfacing
+        # from grad dispatch or the reduction wait is recovered
+        # *within the same step*: rebuild, then retry the step's batch.
         # keep the config's collective_backend and the split_step argument
         # consistent: the config is the record (stats/logs), the split_step
         # carries the machinery — they must agree or the caller gets the
@@ -97,9 +109,12 @@ class Trainer:
         self.hooks = hooks or []
         self.ckpt = AsyncCheckpointer(cfg.checkpoint_dir, self.engine)
         self.straggler = StragglerDetector()
+        self.epoch = epoch
+        self.remesh_fn = remesh_fn
         self.watchdog = StepWatchdog(self.engine, cfg.watchdog_limit_s,
-                                     on_hang=self._on_hang)
+                                     on_hang=self._on_hang, epoch=epoch)
         self.start_step = 0
+        self.recoveries = 0
         self.metrics_log: list[dict] = []
         self._pending_ckpt: Request | None = None
         self._hung = False
@@ -107,6 +122,13 @@ class Trainer:
     # ------------------------------------------------------------------
     def _on_hang(self):
         self._hung = True
+
+    def _reduced_grads(self, batch):
+        """Split-step grad dispatch + engine-driven bucketed reduction."""
+        stacked_metrics, grads = self.split_step.grad_fn(self.params, batch)
+        reduction = self.split_step.reducer.iallreduce_tree(grads)
+        return stacked_metrics, \
+            reduction.wait(timeout=self.cfg.watchdog_limit_s)
 
     def maybe_resume(self):
         if not self.cfg.resume:
@@ -150,10 +172,22 @@ class Trainer:
                 # issue the nonblocking bucketed allreduce, and let the
                 # engine overlap the reduction with prefetch/checkpoint
                 # progress (and the tail of backward, still in flight)
-                stacked_metrics, grads = self.split_step.grad_fn(
-                    self.params, batch)
-                reduction = self.split_step.reducer.iallreduce_tree(grads)
-                grads = reduction.wait(timeout=self.cfg.watchdog_limit_s)
+                try:
+                    stacked_metrics, grads = self._reduced_grads(batch)
+                except MembershipError as exc:
+                    if self.remesh_fn is None:
+                        raise
+                    # membership changed mid-step (dead peer or hung
+                    # collective): rebuild the split step on survivors
+                    # and retry THIS step's batch.  Params were not yet
+                    # updated, so the retried step computes exactly what
+                    # a from-checkpoint restart at this step would.
+                    self.split_step, self.params, self.opt_state = \
+                        self.remesh_fn(exc, self.params, self.opt_state)
+                    self.recoveries += 1
+                    self._hung = False
+                    self.watchdog.arm()
+                    stacked_metrics, grads = self._reduced_grads(batch)
                 self.params, self.opt_state, metrics = \
                     self.split_step.apply_fn(self.params, self.opt_state,
                                              grads, stacked_metrics)
