@@ -38,8 +38,12 @@ import sys
 # membership-change path (epoch invalidation -> drained, remeshed,
 # re-admitted and idle; trainer remesh-and-retry step) so a fault-
 # tolerance regression shows up in the same gate as a hot-path one.
+# pipeline rows time one pipeline-parallel train step (sequential /
+# GPipe-scan / event-driven 1F1B) plus the measured bubble — the
+# measured-vs-analytic check itself lives in the bench child, the gate
+# only tracks the step times drifting.
 DEFAULT_PREFIXES = ("fig7", "fig13", "fig14_native", "fig14_user",
-                    "serve_decode", "serve_cb", "recovery")
+                    "serve_decode", "serve_cb", "recovery", "pipeline")
 DEFAULT_THRESHOLD = 0.20
 
 

@@ -447,6 +447,97 @@ def fault_tolerance():
           f"bit-identical to the undisturbed run")
 
 
+def pipeline_1f1b():
+    """Event-driven 1F1B pipeline parallelism (paper §4.6, the
+    task-based-runtime integration, applied to the pipeline axis).
+
+        1. transport — ``collectives/p2p.py``: user-space nonblocking
+                       isend/irecv returning CollectiveRequest handles
+                       (posted-receive / unexpected-message matching
+                       queues, non-overtaking per tag), plus
+                       ``send_init``/``recv_init`` persistent channels —
+                       a stage boundary is one channel per direction,
+                       started once per microbatch hop
+        2. schedule  — ``PipelineSchedule`` lays the 1F1B grid out as a
+                       continuation DAG: a forward cell is
+                       ``when_all(recv activation, params resident)``, a
+                       backward cell ``when_all(recv grad, stashed
+                       activation)``; warmup / steady 1F1B / cooldown are
+                       *emergent* from readiness — nothing polls, no
+                       phase barriers, each stage's cells retire on its
+                       own engine stream
+        3. measure   — the executed grid realizes exactly ``2(M+S-1)``
+                       ticks, bubble ``(S-1)/(M+S-1)`` (same warmup cost
+                       as GPipe; the win is peak activation stash
+                       ``min(S, M)`` instead of ``M``), and the result is
+                       bit-identical to sequential per-microbatch
+                       accumulation
+
+    Runs on however many host devices this process has (1 device -> a
+    1-stage pipeline: no hops, but the same DAG machinery)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import compat
+    from repro.collectives.p2p import P2P
+    from repro.distributed import pipeline as pl
+
+    S = min(len(jax.devices()), 4)
+    M = 4
+    mesh = compat.make_mesh((S,), ("stage",))
+    eng = ProgressEngine()
+
+    # the transport on its own: a single forward ring hop
+    p2p = P2P(eng)
+    x = jnp.arange(S * 4, dtype=jnp.float32).reshape(S, 4)
+    p2p.isend(x, mesh, "stage")
+    got = p2p.irecv(x, mesh, "stage").wait(timeout=60)
+    assert np.array_equal(np.asarray(got),
+                          np.roll(np.asarray(x), 1, axis=0))
+    p2p.close()
+
+    d, h, mb = 8, 16, 2
+
+    def stage_fn(p, xx):
+        return xx + jnp.tanh(xx @ p["w1"]) @ p["w2"]
+
+    def loss_fn(y, t):
+        return jnp.mean((y - t) ** 2)
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    params = {"w1": jax.random.normal(ks[0], (S, d, h)) * 0.1,
+              "w2": jax.random.normal(ks[1], (S, h, d)) * 0.1}
+    xs = jax.random.normal(ks[2], (M, mb, d))
+    ts = jax.random.normal(ks[3], (M, mb, d))
+
+    sched = pl.PipelineSchedule(stage_fn, mesh, "stage", S,
+                                loss_fn=loss_fn, engine=eng,
+                                name="tour-pipe")
+    # forward path is bit-identical to the in-program GPipe scan
+    ys = sched.apply(params, xs, timeout=300)
+    gp = pl.gpipe(stage_fn, mesh, "stage", S)
+    gys = gp(jax.device_put(params, NamedSharding(mesh, P("stage"))), xs)
+    assert np.array_equal(np.asarray(ys), np.asarray(gys))
+
+    loss, grads = sched.step(params, xs, ts, timeout=300)
+    tm = sched.last_step_timing
+    st = sched.stats()
+    cells = sum(tm["cells"])
+    measured = 1.0 - cells / (S * tm["grid_ticks"])
+    analytic = pl.bubble_fraction(S, M, "1f1b")
+    assert abs(measured - analytic) < 1e-12
+    print(f"1F1B pipeline: S={S} x M={M} -> {tm['grid_ticks']} ticks "
+          f"(=2(M+S-1)), bubble measured={measured:.3f} == "
+          f"analytic={analytic:.3f}, peak stash "
+          f"{pl.peak_activation_microbatches(S, M, '1f1b')} microbatches; "
+          f"loss={float(loss):.4f}, forward bit-identical to GPipe; "
+          f"hops={st['hop_starts']}, blocking_waits={st['blocking_waits']} "
+          f"(only the callers' — the DAG itself never polls)")
+    sched.close()
+
+
 if __name__ == "__main__":
     eng = ProgressEngine()
     listing_1_1_collated_subsystems(eng)
@@ -461,4 +552,5 @@ if __name__ == "__main__":
     serve_collectives()
     continuous_batching()
     fault_tolerance()
+    pipeline_1f1b()
     print("tour OK")

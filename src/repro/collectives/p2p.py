@@ -1,0 +1,464 @@
+"""User-space nonblocking point-to-point on the progress engine.
+
+The collectives stack (PR 3/4/7) built allreduce-family schedules as
+chunk-pipelined ``ppermute`` rounds driven by continuations.  This
+module is the same machinery one level down: MPI's *point-to-point*
+layer — ``isend``/``irecv`` pairs and persistent ``Send_init``/
+``Recv_init`` channels — realized as **single-hop jitted shard_map
+ppermute rounds** on the PR-4 ``_RoundSchedule``/``_Plan`` machinery.
+
+SPMD matching.  On a mesh every rank runs the same program, so a
+"message from rank s to rank s+1" is one ring-hop program over the
+axis: the payload is the stacked ``[n, ...]`` array (rank s's slice in
+row s), and after the hop row ``s+1`` holds what rank s sent.  The hop
+program *is* the rendezvous — but the MPI-shaped halves still exist as
+separate handles:
+
+* ``isend(x, ...)`` posts the send half.  If a matching receive is
+  already posted the hop issues immediately; otherwise the send parks
+  on the *pending-send* queue (MPI's unexpected-message queue).  The
+  returned handle completes when the transfer has retired — the send
+  buffer is reusable.
+* ``irecv(like, ...)`` posts the receive half, matching pending sends
+  (or parking on the posted-receive queue).  Its handle completes with
+  the received stacked array.
+
+Matching is FIFO per ``(mesh, axis, tag, direction)`` — MPI's
+non-overtaking rule for a (communicator, tag, source) triple.
+
+Persistent channels.  Pipeline-parallel activation handoffs are the
+ideal ``*_init`` + ``Start`` case: the same shape and dtype every tick.
+``send_init``/``recv_init`` return the two views of one
+:class:`P2PChannel`, whose single-hop plan rides a
+:class:`~repro.collectives.nonblocking.PersistentCollective` — the hop
+program compiles once (warmup start on zeros), ``start(payload)`` pays
+split+dispatch only, starts are executor-driven when the p2p stream is
+adopted, and the handle registers with a
+:class:`~repro.collectives.nonblocking.MembershipEpoch` so PR-7 fault
+tolerance covers p2p: epoch invalidation fails the in-flight hop with a
+retryable ``MembershipError`` and the channel refuses starts until
+``rebuild(mesh)``.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.collectives import nonblocking as NB
+from repro.collectives import schedules as S
+from repro.collectives.nonblocking import (CollectiveRequest, MembershipEpoch,
+                                           PersistentCollective,
+                                           UserCollectives, _Plan,
+                                           _identity_schedule, _payload_bytes)
+
+
+# ---------------------------------------------------------------------------
+# The hop schedule: ONE jitted shard_map ppermute round
+# ---------------------------------------------------------------------------
+
+class _SpecRoundSchedule(NB._RoundSchedule):
+    """A ``_RoundSchedule`` whose programs shard trailing dims too.
+
+    The base class jits with ``in_specs=P(axis)`` (leading dim only).
+    Pipeline activations on a 2-D (data x stage) mesh are additionally
+    sharded over the data axis, so the hop program takes an explicit
+    PartitionSpec.  Everything else — stage tuple, compiled-view cache,
+    the shared schedule cache — behaves identically."""
+
+    __slots__ = ("spec",)
+
+    def __init__(self, mesh, axis, stages, spec):
+        super().__init__(mesh, axis, stages)
+        self.spec = spec
+
+    def compiled(self, round_batch: int = 1) -> NB._Schedule:
+        sched = self._compiled.get(1)
+        if sched is None:
+            progs = [jax.jit(compat.shard_map(
+                st.fn, mesh=self.mesh, in_specs=self.spec,
+                out_specs=self.spec)) for st in self.stages]
+            sched = NB._Schedule(progs)
+            self._compiled[1] = sched
+        return sched
+
+
+def _hop_schedule(mesh, axis: str, n: int, reverse: bool, spec):
+    """Single ring-hop round over ``axis`` (forward: rank i -> i+1;
+    reverse: the opposite ICI direction), from the shared schedule
+    cache.  ``donate=False``: the hop input is the caller's payload."""
+    spec_key = None if spec is None else tuple(spec)
+    key = ("p2p_hop", mesh, axis, n, reverse, spec_key)
+
+    def build():
+        perm = S.ring_perm(n, reverse=reverse)
+
+        def hop(v):
+            return jax.lax.ppermute(v, axis, perm)
+
+        stages = [NB._RoundStage(hop, donate=False)]
+        if spec is None:
+            return NB._RoundSchedule(mesh, axis, stages)
+        return _SpecRoundSchedule(mesh, axis, stages, spec)
+
+    return NB._cached(key, build)
+
+
+def _plan_sendrecv(mesh, axis: str, shape, dtype, *, reverse: bool = False,
+                   spec=None) -> _Plan:
+    """Issue-invariant plan for one matched send/recv hop: single chunk,
+    identity split/join, one round."""
+    n = NB._axis_len(mesh, axis)
+    if len(shape) < 1 or shape[0] != n:
+        raise ValueError(
+            f"p2p payload must stack one slice per rank: leading dim "
+            f"{shape[0] if shape else '?'} != axis size {n} "
+            f"(shape {tuple(shape)})")
+    nbytes = _payload_bytes(shape, dtype)
+    if n == 1:
+        sched = _identity_schedule(mesh, axis)
+    else:
+        sched = _hop_schedule(mesh, axis, n, reverse, spec)
+    return _Plan("sendrecv", "ring_hop" + ("-" if reverse else "+"),
+                 tuple(shape), dtype, mesh, axis, [sched],
+                 lambda x: [x], NB._first, nbytes, 1)
+
+
+# ---------------------------------------------------------------------------
+# Persistent channels (MPI Send_init / Recv_init + Start)
+# ---------------------------------------------------------------------------
+
+class PersistentSend:
+    """Send view of a :class:`P2PChannel` (MPI ``Send_init``)."""
+
+    __slots__ = ("channel",)
+
+    def __init__(self, channel: "P2PChannel"):
+        self.channel = channel
+
+    def start(self, payload) -> CollectiveRequest:
+        """MPI_Start on the send half: issue the hop for ``payload``.
+        Completes when the transfer has retired (buffer reusable)."""
+        return self.channel._start_send(payload)
+
+    @property
+    def starts(self) -> int:
+        return self.channel.starts
+
+    def close(self) -> None:
+        self.channel.close()
+
+
+class PersistentRecv:
+    """Receive view of a :class:`P2PChannel` (MPI ``Recv_init``)."""
+
+    __slots__ = ("channel",)
+
+    def __init__(self, channel: "P2PChannel"):
+        self.channel = channel
+
+    def start(self) -> CollectiveRequest:
+        """MPI_Start on the receive half: returns a handle completing
+        with the received stacked array.  Matches the channel's hops
+        FIFO — posted early, it parks until the matching send starts."""
+        return self.channel._start_recv()
+
+    @property
+    def starts(self) -> int:
+        return self.channel.recv_starts
+
+    def close(self) -> None:
+        self.channel.close()
+
+
+class P2PChannel:
+    """One persistent matched send/recv pair over a fixed-shape hop.
+
+    Wraps a :class:`PersistentCollective` built from the single-hop
+    plan, so warmup compilation, executor-driven starts, the
+    one-outstanding-start invariant and membership awareness all carry
+    over.  ``send``/``recv`` are the MPI-shaped views; send starts and
+    recv starts match FIFO (the recv posted for hop k completes with
+    hop k's payload)."""
+
+    def __init__(self, ctx: "P2P", plan: _Plan, *, warmup: bool = True,
+                 epoch: "MembershipEpoch | None" = None):
+        # on rebuild the stacked leading dim follows the survivors'
+        # axis length (row i is rank i's message), so only the trailing
+        # message shape carries over
+        replan = lambda m, a: _plan_sendrecv(          # noqa: E731
+            m, a, (NB._axis_len(m, a),) + plan.shape[1:], plan.dtype,
+            reverse=plan.algorithm.endswith("-"),
+            spec=getattr(plan.schedules[0], "spec", None))
+        self.ctx = ctx
+        self.persistent = PersistentCollective(
+            ctx, plan, warmup=warmup,
+            epoch=epoch if epoch is not None else ctx.epoch, replan=replan)
+        self.send = PersistentSend(self)
+        self.recv = PersistentRecv(self)
+        self.starts = 0
+        self.recv_starts = 0
+        self._lock = threading.Lock()
+        # hops issued but not yet claimed by a recv start / recvs posted
+        # before their hop — the two MPI matching queues, channel-local
+        self._unclaimed: collections.deque = collections.deque()
+        self._waiting: collections.deque = collections.deque()
+
+    @property
+    def stale(self) -> bool:
+        return self.persistent.stale
+
+    def _start_send(self, payload) -> CollectiveRequest:
+        hop = self.persistent.start(payload)
+        self.starts += 1
+        sreq = self.ctx._overlay_request("send")
+        with self._lock:
+            rreq = self._waiting.popleft() if self._waiting else None
+            if rreq is None:
+                self._unclaimed.append(hop)
+        if rreq is not None:
+            self.ctx._wire_pair(hop, sreq, rreq)
+        else:
+            self.ctx._wire_pair(hop, sreq, None)
+        return sreq
+
+    def _start_recv(self) -> CollectiveRequest:
+        rreq = self.ctx._overlay_request("recv")
+        self.recv_starts += 1
+        with self._lock:
+            hop = self._unclaimed.popleft() if self._unclaimed else None
+            if hop is None:
+                self._waiting.append(rreq)
+        if hop is not None:
+            self.ctx._wire_pair(hop, None, rreq)
+        return rreq
+
+    def cancel(self) -> None:
+        self.persistent.cancel()
+
+    def rebuild(self, mesh, axis: str | None = None, *,
+                warmup: bool = False) -> "P2PChannel":
+        """Adopt the survivors' mesh after a membership change (see
+        :meth:`PersistentCollective.rebuild`); unmatched halves from the
+        dead epoch are dropped."""
+        self.persistent.rebuild(mesh, axis, warmup=warmup)
+        with self._lock:
+            self._unclaimed.clear()
+            self._waiting.clear()
+        return self
+
+    def close(self) -> None:
+        self.persistent.close()
+
+    def __repr__(self):
+        return (f"P2PChannel({self.persistent.plan.algorithm}, "
+                f"shape={self.persistent.plan.shape}, "
+                f"starts={self.starts})")
+
+
+# ---------------------------------------------------------------------------
+# The p2p issue context
+# ---------------------------------------------------------------------------
+
+class P2P(UserCollectives):
+    """Issue context for user-space nonblocking point-to-point.
+
+    Extends :class:`UserCollectives` — same dedicated stream,
+    continuation queue, counters and close/drain lifecycle — with the
+    p2p surface: ``isend``/``irecv`` matched pairs and
+    ``send_init``/``recv_init``/``channel_init`` persistent channels.
+
+    Extra counters: ``sends``/``recvs`` (halves posted), ``matched``
+    (pairs that met), ``unexpected`` (sends that arrived before their
+    receive was posted — MPI's unexpected-message path).
+    """
+
+    def __init__(self, engine=None, *, executor=None, stream=None,
+                 policy: str = NB.INLINE, name: str = "",
+                 epoch: "MembershipEpoch | None" = None):
+        super().__init__(engine, executor=executor, stream=stream,
+                         policy=policy, name=name or "p2p", epoch=epoch)
+        self._match_lock = threading.Lock()
+        # (mesh, axis, tag, reverse) -> deque — the two matching queues
+        self._pending_sends: dict = {}
+        self._posted_recvs: dict = {}
+        self._channels: dict = {}
+        self.sends = 0
+        self.recvs = 0
+        self.matched = 0
+        self.unexpected = 0
+
+    # -- one-shot matched pairs -------------------------------------------
+    def isend(self, x, mesh, axis: str, *, tag: Any = 0,
+              reverse: bool = False, spec=None) -> CollectiveRequest:
+        """Post the send half of a matched pair: ``x`` is the stacked
+        ``[n, ...]`` payload (rank i's message in row i); each rank's
+        slice ships one hop along the ring (``reverse`` flips the
+        direction).  Returns a send handle that completes (value None)
+        once the transfer retires.  The hop dispatches when the
+        matching ``irecv`` is posted — in either order."""
+        self._check_open()
+        key = (mesh, axis, tag, bool(reverse), _spec_key(spec))
+        sreq = self._overlay_request("send")
+        self.sends += 1
+        with self._match_lock:
+            recvs = self._posted_recvs.get(key)
+            rreq = recvs.popleft() if recvs else None
+            if rreq is None:
+                self._pending_sends.setdefault(
+                    key, collections.deque()).append((x, sreq))
+                self.unexpected += 1
+        if rreq is not None:
+            self._match(key, x, sreq, rreq, spec)
+        return sreq
+
+    def irecv(self, like, mesh, axis: str, *, tag: Any = 0,
+              reverse: bool = False, spec=None) -> CollectiveRequest:
+        """Post the receive half (``like`` fixes shape/dtype — an array
+        or ShapeDtypeStruct).  Returns a handle completing with the
+        received stacked array (row i+1 = what rank i sent).  Matches
+        pending sends FIFO, else parks on the posted-receive queue."""
+        self._check_open()
+        del like  # shape/dtype ride with the send payload in SPMD
+        key = (mesh, axis, tag, bool(reverse), _spec_key(spec))
+        rreq = self._overlay_request("recv")
+        self.recvs += 1
+        with self._match_lock:
+            sends = self._pending_sends.get(key)
+            pair = sends.popleft() if sends else None
+            if pair is None:
+                self._posted_recvs.setdefault(
+                    key, collections.deque()).append(rreq)
+        if pair is not None:
+            x, sreq = pair
+            self._match(key, x, sreq, rreq, spec)
+        return rreq
+
+    def sendrecv(self, x, mesh, axis: str, *, reverse: bool = False,
+                 spec=None) -> CollectiveRequest:
+        """One-shot fused pair: issue the hop now, return the receive
+        handle (the common SPMD case where one driver is both sides)."""
+        self._check_open()
+        plan = _plan_sendrecv(mesh, axis, tuple(x.shape),
+                              getattr(x, "dtype", jnp.float32),
+                              reverse=reverse, spec=spec)
+        return self._issue_plan(plan, x)
+
+    # -- persistent channels ----------------------------------------------
+    def channel_init(self, like, mesh, axis: str, *, tag: Any = 0,
+                     reverse: bool = False, spec=None, warmup: bool = True,
+                     epoch: "MembershipEpoch | None" = None) -> P2PChannel:
+        """Build (or fetch) the persistent channel for this signature.
+        One channel per (mesh, axis, tag, direction, shape, dtype):
+        ``send_init`` and ``recv_init`` with the same signature return
+        views of the same channel — that is the match."""
+        self._check_open()
+        shape = tuple(like.shape)
+        dtype = getattr(like, "dtype", jnp.float32)
+        key = (mesh, axis, tag, bool(reverse), _spec_key(spec),
+               shape, jnp.dtype(dtype))
+        chan = self._channels.get(key)
+        if chan is None:
+            plan = _plan_sendrecv(mesh, axis, shape, dtype,
+                                  reverse=reverse, spec=spec)
+            chan = P2PChannel(self, plan, warmup=warmup, epoch=epoch)
+            self._channels[key] = chan
+        return chan
+
+    def send_init(self, like, mesh, axis: str, *, tag: Any = 0,
+                  reverse: bool = False, spec=None, warmup: bool = True,
+                  epoch: "MembershipEpoch | None" = None) -> PersistentSend:
+        """MPI ``Send_init``: persistent send half for fixed-shape
+        payloads like ``like``.  ``start(payload)`` re-issues the
+        pre-compiled hop."""
+        return self.channel_init(like, mesh, axis, tag=tag, reverse=reverse,
+                                 spec=spec, warmup=warmup, epoch=epoch).send
+
+    def recv_init(self, like, mesh, axis: str, *, tag: Any = 0,
+                  reverse: bool = False, spec=None, warmup: bool = True,
+                  epoch: "MembershipEpoch | None" = None) -> PersistentRecv:
+        """MPI ``Recv_init``: the matching persistent receive half."""
+        return self.channel_init(like, mesh, axis, tag=tag, reverse=reverse,
+                                 spec=spec, warmup=warmup, epoch=epoch).recv
+
+    # -- machinery ---------------------------------------------------------
+    def _overlay_request(self, op: str) -> CollectiveRequest:
+        """A send/recv handle overlaying a hop request: same stream
+        affinity and parking ``wait()`` as any collective request."""
+        return CollectiveRequest(self.engine, self.stream, self.queue, op,
+                                 "ring_hop", 1, 1, ctx=self)
+
+    def _match(self, key, x, sreq, rreq, spec) -> None:
+        mesh, axis, _tag, reverse, _sk = key
+        self.matched += 1
+        try:
+            plan = _plan_sendrecv(mesh, axis, tuple(x.shape),
+                                  getattr(x, "dtype", jnp.float32),
+                                  reverse=reverse, spec=spec)
+            hop = self._issue_plan(plan, x)
+        except BaseException as exc:  # noqa: BLE001
+            for req in (sreq, rreq):
+                self._fail_overlay(req, exc)
+            return
+        self._wire_pair(hop, sreq, rreq)
+
+    def _wire_pair(self, hop: CollectiveRequest,
+                   sreq: Optional[CollectiveRequest],
+                   rreq: Optional[CollectiveRequest]) -> None:
+        """Complete the overlay handles off the hop's completion: the
+        send side with None (buffer retired), the receive side with the
+        hopped array.  Failure (including a membership invalidation of
+        the underlying persistent hop) propagates to both."""
+
+        def _done(h):
+            if rreq is not None:
+                self._complete_overlay(rreq, h.value())
+            if sreq is not None:
+                self._complete_overlay(sreq, None)
+
+        def _err(h):
+            exc = h.exception or RuntimeError("p2p hop failed")
+            for req in (sreq, rreq):
+                if req is not None:
+                    self._fail_overlay(req, exc)
+
+        self.queue.attach(hop, _done, on_error=_err)
+
+    @staticmethod
+    def _complete_overlay(req: CollectiveRequest, value) -> None:
+        with req._fail_lock:
+            if not req.is_complete:
+                req.rounds_done = 1
+                req.complete(value)
+
+    @staticmethod
+    def _fail_overlay(req: CollectiveRequest, exc: BaseException) -> None:
+        with req._fail_lock:
+            if not req.is_complete:
+                req.fail(exc)
+
+    def close(self, *, drain: bool = True,
+              timeout: float | None = 30.0) -> None:
+        for chan in self._channels.values():
+            chan.close()
+        super().close(drain=drain, timeout=timeout)
+
+
+def _spec_key(spec):
+    return None if spec is None else tuple(spec)
+
+
+def default_p2p(engine=None, *, executor=None, **kw) -> P2P:
+    """Module-default p2p context (one per engine, like
+    ``default_collectives``)."""
+    eng = engine if engine is not None else NB.global_engine()
+    ctx = getattr(eng, "_default_p2p", None)
+    if ctx is None or ctx._closed:
+        ctx = P2P(eng, executor=executor, **kw)
+        eng._default_p2p = ctx
+    return ctx

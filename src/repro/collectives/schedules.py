@@ -44,6 +44,17 @@ def _axis_index(axis: str):
     return jax.lax.axis_index(axis)
 
 
+def ring_perm(n: int, *, reverse: bool = False) -> list:
+    """The ppermute permutation for one ring hop over ``n`` ranks.
+
+    Forward is ``[(i, (i+1) % n)]`` (each rank sends to its successor);
+    ``reverse=True`` is the opposite ICI direction.  Shared by the ring
+    collective schedules, the pipeline stage handoff, and the p2p layer.
+    """
+    d = -1 if reverse else 1
+    return [(i, (i + d) % n) for i in range(n)]
+
+
 def _take_chunk(chunks: jax.Array, pos, n: int) -> jax.Array:
     """chunks: [..., n, d]; pos: traced scalar -> [..., d]."""
     oh = jax.nn.one_hot(pos, n, dtype=chunks.dtype)
@@ -99,7 +110,7 @@ def ring_reduce_scatter(x: jax.Array, axis: str, *, reverse: bool = False) -> ja
     assert D % n == 0, (D, n)
     chunks = jnp.reshape(x, x.shape[:-1] + (n, D // n))
     direction = -1 if reverse else 1
-    perm = [(i, (i + direction) % n) for i in range(n)]
+    perm = ring_perm(n, reverse=reverse)
     # Invariant: after step s, rank r holds the partial sum of chunk
     # (r - d·(1+s)) ... i.e. start with own chunk (r - d) and add chunk
     # (r - d·(1+s)) each step; after n-1 steps rank r holds chunk r fully
@@ -119,7 +130,7 @@ def ring_all_gather(x: jax.Array, axis: str, *, reverse: bool = False) -> jax.Ar
     idx = _axis_index(axis)
     d = x.shape[-1]
     direction = -1 if reverse else 1
-    perm = [(i, (i + direction) % n) for i in range(n)]
+    perm = ring_perm(n, reverse=reverse)
     out = jnp.zeros(x.shape[:-1] + (n, d), x.dtype)
     cur, pos = x, idx
     for step in range(n):

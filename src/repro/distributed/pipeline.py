@@ -1,28 +1,47 @@
-"""GPipe-style pipeline parallelism as an explicit ppermute schedule.
+"""Pipeline parallelism on the progress engine.
 
-The assignment's multi-pod mesh gives a natural PP mapping: stages on
-the `pod` axis (cross-pod DCI links carry only the [mb, S, D] activation
-handoff once per microbatch-tick, instead of gradient traffic every
-step).  The schedule is the paper's pattern once more: a static state
-machine of point-to-point transfers expressed in the dataflow.
+Two implementations of the same semantics:
 
-Semantics: ``num_stages`` devices along ``axis`` each own a contiguous
-block of layers (stacked params sharded on dim 0).  Microbatches enter
-stage 0 one tick apart; activations hop stage→stage via ppermute; after
-``M + S - 1`` ticks all M microbatches exited stage S-1 (the classic
-GPipe bubble of (S-1)/(M+S-1)).  Forward AND backward differentiate
-through the tick scan, so gradient pipelining falls out of JAX AD.
+* :func:`gpipe` — the original reference path: a monolithic GPipe
+  ``lax.scan`` whose static one-hot/ppermute state machine runs entirely
+  inside one XLA program.  Forward AND backward differentiate through
+  the tick scan, so gradient pipelining falls out of JAX AD.  The
+  runtime cannot see (or overlap) any of it.
+* :class:`PipelineSchedule` — 1F1B rebuilt as a **continuation DAG on
+  the progress engine** (the paper's §4.6 task-based-runtime
+  integration): each stage owns a stream adopted by a
+  ``ProgressExecutor``, every (stage, microbatch) forward/backward cell
+  is a DAG node gated by ``when_all`` on exactly its inputs — a forward
+  cell on (recv_activation, params_ready), a backward cell on
+  (recv_grad, stashed_activation) — and micro-batch activation handoffs
+  are **persistent user-space nonblocking p2p** (``repro.collectives.
+  p2p`` channels: fixed-shape every tick, the ideal ``*_init``+``Start``
+  case).  Warmup/steady/cooldown phases are not special-cased anywhere:
+  they fall out of the dependency structure.
+
+Semantics (both paths): ``num_stages`` devices along ``axis`` each own
+a contiguous block of layers (stacked params sharded on dim 0);
+microbatches enter stage 0 one tick apart; activations hop
+stage→stage; after the pipeline drains, all M microbatches have exited
+stage S-1.  Both schedules burn the same warmup bubble of
+(S-1)/(M+S-1) ticks — 1F1B's win is memory: at most min(S, M)
+activation stashes live per stage instead of GPipe's M.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable
+import threading
+import time
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.collectives import schedules as S_mod
+from repro.core import (INLINE, ContinuationQueue, ProgressEngine, Request,
+                        global_engine, jax_future)
 
 
 def gpipe(stage_fn: Callable, mesh, axis: str, num_stages: int,
@@ -48,7 +67,7 @@ def gpipe(stage_fn: Callable, mesh, axis: str, num_stages: int,
             # slice); xs is the full [M, mb, ...] (replicated)
             mine = jax.tree.map(lambda a: a[0], my_params)
             sid = jax.lax.axis_index(axis)
-            perm = [(i, (i + 1) % S) for i in range(S)]
+            perm = S_mod.ring_perm(S)
             mb_shape = xs.shape[1:]
             # pcast: carries become device-varying inside the tick scan
             carry_in = compat.pcast(jnp.zeros(mb_shape, xs.dtype),
@@ -86,5 +105,627 @@ def gpipe(stage_fn: Callable, mesh, axis: str, num_stages: int,
     return pipelined
 
 
-def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
+SCHEDULES = ("gpipe", "1f1b")
+
+
+def bubble_fraction(num_stages: int, num_microbatches: int,
+                    schedule: str = "gpipe") -> float:
+    """Fraction of pipeline ticks burned in the warmup/cooldown bubble.
+
+    GPipe and 1F1B share the same bubble — (S-1)/(M+S-1) — because both
+    must fill S-1 ticks before the last stage has work and drain S-1
+    after stage 0 runs dry.  1F1B's advantage is peak activation
+    memory, not bubble time (see
+    :func:`peak_activation_microbatches`)."""
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule must be one of {SCHEDULES}, "
+                         f"got {schedule!r}")
     return (num_stages - 1) / (num_microbatches + num_stages - 1)
+
+
+def peak_activation_microbatches(num_stages: int, num_microbatches: int,
+                                 schedule: str = "gpipe") -> int:
+    """Peak in-flight activation stashes on the deepest stage (stage 0).
+
+    GPipe runs all M forwards before any backward, so every microbatch's
+    activations are live at once; 1F1B starts draining after S forwards,
+    capping the stash depth at min(S, M)."""
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule must be one of {SCHEDULES}, "
+                         f"got {schedule!r}")
+    if schedule == "gpipe":
+        return num_microbatches
+    return min(num_stages, num_microbatches)
+
+
+# ---------------------------------------------------------------------------
+# The 1F1B grid: a static dependency simulation, cached per (S, M)
+# ---------------------------------------------------------------------------
+
+class _Op:
+    __slots__ = ("stage", "kind", "mb", "tick", "src_hop")
+
+    def __init__(self, stage, kind, mb, tick, src_hop):
+        self.stage = stage
+        self.kind = kind          # "F" | "B"
+        self.mb = mb
+        self.tick = tick
+        self.src_hop = src_hop    # ("f"|"b", tick) of the hop feeding it
+
+
+class _Grid:
+    __slots__ = ("S", "M", "forward_only", "ops", "ticks",
+                 "hop_edges", "hop_order", "peak_stash")
+
+    def __init__(self, S, M, forward_only, ops, ticks, hop_edges,
+                 hop_order, peak_stash):
+        self.S = S
+        self.M = M
+        self.forward_only = forward_only
+        self.ops = ops                  # list[_Op] in fire order
+        self.ticks = ticks              # number of ticks
+        self.hop_edges = hop_edges      # ("f"|"b", tick) -> [(src_stage, mb)]
+        self.hop_order = hop_order      # "f"|"b" -> [ticks with a hop]
+        self.peak_stash = peak_stash
+
+
+_grid_cache: dict = {}
+
+
+def _stage_order(S: int, M: int, s: int, forward_only: bool):
+    """Stage s's 1F1B op order: min(M, S-s) warmup forwards, steady
+    B/F alternation, cooldown backwards."""
+    w = min(M, S - s)
+    order = [("F", m) for m in range(w)]
+    if forward_only:
+        return order + [("F", m) for m in range(w, M)]
+    for i in range(M - w):
+        order.append(("B", i))
+        order.append(("F", w + i))
+    for m in range(M - w, M):
+        order.append(("B", m))
+    return order
+
+
+def _build_grid(S: int, M: int, forward_only: bool = False) -> _Grid:
+    """Greedy tick simulation of the per-stage 1F1B orders under hop
+    latency (an activation produced at tick t is consumable downstream
+    at tick t+1).  The warmup/steady/cooldown phases are emergent."""
+    key = (S, M, forward_only)
+    grid = _grid_cache.get(key)
+    if grid is not None:
+        return grid
+    orders = [_stage_order(S, M, s, forward_only) for s in range(S)]
+    ptr = [0] * S
+    f_tick = [[None] * M for _ in range(S)]
+    b_tick = [[None] * M for _ in range(S)]
+    ops: list[_Op] = []
+    hop_edges: dict = {}
+    stash_depth = [0] * S
+    peak_stash = 0
+    t = 0
+    while any(ptr[s] < len(orders[s]) for s in range(S)):
+        fired = []
+        for s in range(S):
+            if ptr[s] >= len(orders[s]):
+                continue
+            kind, m = orders[s][ptr[s]]
+            if kind == "F":
+                ready = s == 0 or (f_tick[s - 1][m] is not None
+                                   and f_tick[s - 1][m] < t)
+            elif s == S - 1:
+                ready = f_tick[s][m] is not None and f_tick[s][m] < t
+            else:
+                ready = (b_tick[s + 1][m] is not None
+                         and b_tick[s + 1][m] < t
+                         and f_tick[s][m] is not None and f_tick[s][m] < t)
+            if ready:
+                fired.append((s, kind, m))
+        if not fired:
+            raise AssertionError(
+                f"1F1B grid deadlock at tick {t} (S={S}, M={M})")
+        for s, kind, m in fired:
+            ptr[s] += 1
+            if kind == "F":
+                f_tick[s][m] = t
+                src = ("f", f_tick[s - 1][m]) if s > 0 else None
+                if s < S - 1:
+                    hop_edges.setdefault(("f", t), []).append((s, m))
+                if not forward_only:
+                    stash_depth[s] += 1
+                    peak_stash = max(peak_stash, stash_depth[s])
+            else:
+                b_tick[s][m] = t
+                src = ("b", b_tick[s + 1][m]) if s < S - 1 else None
+                if s > 0:
+                    hop_edges.setdefault(("b", t), []).append((s, m))
+                stash_depth[s] -= 1
+            ops.append(_Op(s, kind, m, t, src))
+        t += 1
+    hop_order = {
+        "f": sorted(tk for d, tk in hop_edges if d == "f"),
+        "b": sorted(tk for d, tk in hop_edges if d == "b"),
+    }
+    grid = _Grid(S, M, forward_only, ops, t, hop_edges, hop_order,
+                 peak_stash)
+    _grid_cache[key] = grid
+    return grid
+
+
+# ---------------------------------------------------------------------------
+# The event-driven schedule
+# ---------------------------------------------------------------------------
+
+class _StepRun:
+    """All mutable state of one in-flight pipeline step."""
+
+    __slots__ = ("grid", "params_stages", "xs", "targets", "scale",
+                 "inbox_f", "inbox_b", "stash", "dp_acc", "losses",
+                 "outputs", "staging", "cell_req", "hop_rreq",
+                 "params_ready", "done", "_lock", "t0", "cell_spans")
+
+    def __init__(self, grid):
+        self.grid = grid
+        self.inbox_f: dict = {}
+        self.inbox_b: dict = {}
+        self.stash: dict = {}
+        self.losses: dict = {}
+        self.outputs: dict = {}
+        self.staging: dict = {}
+        self.cell_req: dict = {}
+        self.hop_rreq: dict = {}
+        # per-stage [(t_issue, t_done), ...] — cells on a stage are
+        # serial, so wall - sum(spans) is that stage's true idle time
+        self.cell_spans: dict = {}
+        self.done = Request(tag="pipeline_step")
+        self._lock = threading.Lock()
+        self.t0 = time.monotonic()
+
+
+class PipelineSchedule:
+    """1F1B pipeline parallelism as a continuation DAG.
+
+    * ``stage_fn(stage_params, x) -> y`` — one stage's computation
+      (same activation shape in/out, the residual-stream case).
+    * ``loss_fn(y, target) -> scalar`` — the loss head, applied to the
+      last stage's output per microbatch (required for :meth:`step`).
+    * ``mesh``/``axis`` — a 1-D mesh whose ``axis`` has ``num_stages``
+      devices; stacked params ``[S, ...]`` are sharded over it, and
+      each stage's cells dispatch on that stage's own device + stream.
+
+    Execution model: :meth:`istep` builds one DAG per call from the
+    cached (S, M) grid.  Every (stage, microbatch) forward/backward
+    cell is a ``ContinuationQueue.node`` gated by ``when_all`` on its
+    true inputs — the p2p receive carrying its activation (or gradient)
+    and the previous cell on its stage stream (serial stage order; for
+    backward cells also the forward cell that stashed the activation).
+    When the gate fires, a one-shot issue task is enqueued on the
+    stage's stream, so the adopting executor worker — not the caller —
+    dispatches the jitted per-stage program.  Handoffs ride TWO
+    persistent p2p channels (forward ring for activations, reverse ring
+    for gradients), one ``start`` per tick with edges stacked, so a
+    steady-state step pays split+dispatch per hop and zero compiles.
+
+    The whole step completes through continuations: ``istep`` returns a
+    Request, and nothing in the DAG ever polls or blocks — the only
+    blocking wait is the caller's (``step`` = ``istep`` + wait), counted
+    in ``blocking_waits``."""
+
+    def __init__(self, stage_fn: Callable, mesh, axis: str,
+                 num_stages: int, *, loss_fn: Callable | None = None,
+                 engine: Optional[ProgressEngine] = None, executor=None,
+                 epoch=None, name: str = "pipe"):
+        from repro.collectives.p2p import P2P
+        self.stage_fn = stage_fn
+        self.loss_fn = loss_fn
+        self.mesh = mesh
+        self.axis = axis
+        self.S = num_stages
+        if dict(mesh.shape).get(axis) != num_stages:
+            raise ValueError(
+                f"mesh axis {axis!r} has {dict(mesh.shape).get(axis)} "
+                f"device(s), schedule wants {num_stages} stages")
+        self.engine = engine if engine is not None else global_engine()
+        self.executor = executor
+        self.epoch = epoch
+        self.name = name
+        self.devices = list(mesh.devices.flat)
+        mk = executor.stream if executor is not None else self.engine.stream
+        self.stage_streams = [mk(f"{name}-stage{s}")
+                              for s in range(num_stages)]
+        self.dag_stream = mk(f"{name}-dag")
+        # DAG gates fire INLINE on whichever thread progresses the dag
+        # stream (an executor worker, or the step waiter's sweep)
+        self.queue = ContinuationQueue(self.engine, self.dag_stream,
+                                       policy=INLINE, name=f"{name}-dag-q")
+        self.p2p = P2P(self.engine, executor=executor,
+                       name=f"{name}-p2p", epoch=epoch)
+        self._chan = {}              # "f"/"b" -> P2PChannel
+        self._zeros = None           # per-stage [1, *act] zero shards
+        self._act_sig = None
+        self._sharding = NamedSharding(mesh, P(axis))
+        self.steps = 0
+        self.blocking_waits = 0
+        # set after each step: {"window_s", "idle_s" (per stage),
+        # "bubble"} — measured idle from the cell spans, comparable to
+        # bubble_fraction's analytic value
+        self.last_step_timing: dict | None = None
+        self._build_programs()
+
+    # -- jitted per-stage programs (one wrapper each; jit caches one
+    # executable per stage device) ----------------------------------------
+    def _build_programs(self):
+        stage_fn, loss_fn = self.stage_fn, self.loss_fn
+
+        def fwd(p1, x1):
+            p0 = jax.tree.map(lambda a: a[0], p1)
+            return stage_fn(p0, x1[0])[None]
+
+        def bwd(p1, x1, dy1, acc):
+            p0 = jax.tree.map(lambda a: a[0], p1)
+            _, pull = jax.vjp(stage_fn, p0, x1[0])
+            dp, dx = pull(dy1[0])
+            acc = jax.tree.map(lambda a, d: a + d[None], acc, dp)
+            return dx[None], acc
+
+        def last_bwd(p1, x1, t1, scale, acc):
+            p0 = jax.tree.map(lambda a: a[0], p1)
+
+            def head(pp, xx):
+                return loss_fn(stage_fn(pp, xx), t1[0])
+
+            loss, pull = jax.vjp(head, p0, x1[0])
+            dp, dx = pull(scale)
+            acc = jax.tree.map(lambda a, d: a + d[None], acc, dp)
+            return loss, dx[None], acc
+
+        self._fwd = jax.jit(fwd)
+        self._bwd = jax.jit(bwd, donate_argnums=(3,))
+        self._last_bwd = jax.jit(last_bwd, donate_argnums=(4,))
+
+    # -- public API --------------------------------------------------------
+    def step(self, params, xs, targets, timeout: float = 600.0):
+        """Blocking 1F1B train step: returns ``(loss, grads)`` with
+        ``loss`` the mean microbatch loss (device scalar) and ``grads``
+        the stacked ``[S, ...]`` gradient tree sharded over the stage
+        axis — bit-identical to sequential per-stage accumulation."""
+        return self._wait(self.istep(params, xs, targets), timeout)
+
+    def istep(self, params, xs, targets) -> Request:
+        """Nonblocking step: build the DAG, return its completion
+        Request (value ``(loss, grads)``)."""
+        if self.loss_fn is None:
+            raise ValueError("istep needs loss_fn (construct the "
+                             "schedule with one, or use apply)")
+        if targets is None:
+            raise ValueError("istep needs targets for the loss head")
+        return self._launch(params, xs, targets, forward_only=False)
+
+    def apply(self, params, xs, timeout: float = 600.0):
+        """Forward-only pipelined apply (gpipe-comparable): returns
+        y_microbatches [M, mb, ...] (on the last stage's device)."""
+        req = self._launch(params, xs, None, forward_only=True)
+        return self._wait(req, timeout)
+
+    def stats(self) -> dict:
+        hops = {d: c.starts for d, c in self._chan.items()}
+        return {
+            "steps": self.steps,
+            "blocking_waits": self.blocking_waits,
+            "hop_starts": hops,
+            "p2p_stream_completions": self.p2p.stream.completions,
+            "p2p_issued": self.p2p.issued,
+            "p2p_completed": self.p2p.completed,
+            "stage_stream_completions": [s.completions
+                                         for s in self.stage_streams],
+            "dag_executed": self.queue.executed,
+        }
+
+    def close(self):
+        self.p2p.close()
+        self.queue.close()
+        if self.executor is not None:
+            for s in self.stage_streams + [self.dag_stream]:
+                if self.executor.owns(s):
+                    self.executor.release(s)
+
+    # -- DAG construction --------------------------------------------------
+    def _launch(self, params, xs, targets, *, forward_only: bool) -> Request:
+        S, eng = self.S, self.engine
+        M = int(xs.shape[0])
+        grid = _build_grid(S, M, forward_only)
+        run = _StepRun(grid)
+        self.steps += 1
+
+        params = jax.device_put(params, self._sharding)
+        run.params_stages = [self._stage_view(params, s) for s in range(S)]
+        run.xs = jax.device_put(xs, self.devices[0])
+        run.targets = None if targets is None else \
+            jax.device_put(targets, self.devices[-1])
+        run.scale = jax.device_put(jnp.float32(1.0 / M), self.devices[-1])
+        run.dp_acc = None if forward_only else [
+            jax.tree.map(jnp.zeros_like, run.params_stages[s])
+            for s in range(S)]
+
+        act_shape = tuple(xs.shape[1:])
+        self._ensure_channels(act_shape, xs.dtype)
+
+        # pre-create every completion request the DAG will gate on
+        run.params_ready = [
+            jax_future(eng, jax.tree.leaves(run.params_stages[s]),
+                       self.stage_streams[s]) for s in range(S)]
+        for op in grid.ops:
+            run.cell_req[(op.stage, op.kind, op.mb)] = Request(
+                tag=f"{op.kind}{op.stage}.{op.mb}")
+        for d in ("f", "b"):
+            for t in grid.hop_order[d]:
+                run.hop_rreq[(d, t)] = Request(tag=f"hop{d}@{t}")
+
+        # wire the cells
+        prev_on_stage: list = [None] * S
+        for op in grid.ops:
+            creq = run.cell_req[(op.stage, op.kind, op.mb)]
+            deps = [run.params_ready[op.stage]]
+            if prev_on_stage[op.stage] is not None:
+                deps.append(prev_on_stage[op.stage])
+            if op.src_hop is not None:
+                deps.append(run.hop_rreq[op.src_hop])
+            if op.kind == "B":
+                # the stashed activation: the forward cell of (s, m)
+                deps.append(run.cell_req[(op.stage, "F", op.mb)])
+            node = self.queue.node(
+                (lambda *_vals, op=op, creq=creq:
+                 self._enqueue_cell(run, op, creq)), deps)
+            self.queue.attach(
+                node, lambda _rq: None,
+                on_error=lambda rq: self._fail(run, rq.exception))
+            prev_on_stage[op.stage] = creq
+
+        # wire the hops: one persistent start per (direction, tick),
+        # chained per direction (one outstanding start per channel)
+        for d in ("f", "b"):
+            prev = None
+            for t in grid.hop_order[d]:
+                rreq = run.hop_rreq[(d, t)]
+                edges = grid.hop_edges[(d, t)]
+                deps = [run.cell_req[(s, "F" if d == "f" else "B", m)]
+                        for s, m in edges]
+                if prev is not None:
+                    deps.append(prev)
+                node = self.queue.node(
+                    (lambda *_vals, d=d, t=t, edges=edges, rreq=rreq:
+                     self._start_hop(run, d, t, edges, rreq)), deps)
+                self.queue.attach(
+                    node, lambda _rq: None,
+                    on_error=lambda rq: self._fail(run, rq.exception))
+                prev = rreq
+
+        # the step gate: every cell retired -> finalize
+        gate = self.queue.when_all(list(run.cell_req.values()))
+        self.queue.attach(
+            gate, lambda _rq: self._finalize(run),
+            on_error=lambda rq: self._fail(run, rq.exception))
+        return run.done
+
+    # -- node bodies -------------------------------------------------------
+    def _enqueue_cell(self, run: _StepRun, op: _Op, creq: Request) -> None:
+        """Gate fired: enqueue the one-shot issue task on the stage's
+        stream; the adopting worker dispatches the jitted program."""
+        if run.done.is_complete:
+            return
+
+        def issue(_thing):
+            if run.done.is_complete:
+                return "done"
+            t_issue = time.monotonic()
+            try:
+                out = self._dispatch(run, op)
+            except BaseException as exc:  # noqa: BLE001
+                self._fail(run, exc)
+                return "done"
+            fut = jax_future(self.engine, out,
+                             self.stage_streams[op.stage])
+
+            def _done(_rq):
+                run.cell_spans.setdefault(op.stage, []).append(
+                    (t_issue, time.monotonic()))
+                creq.complete(None)
+
+            self.queue.attach(
+                fut, _done,
+                on_error=lambda rq: self._fail(
+                    run, rq.exception or RuntimeError("cell failed")))
+            return "done"
+
+        self.engine.async_start(issue, None, self.stage_streams[op.stage])
+
+    def _dispatch(self, run: _StepRun, op: _Op):
+        """Run one cell's jitted program on its stage device (async
+        dispatch — the returned arrays gate the cell's completion)."""
+        s, m = op.stage, op.mb
+        p = run.params_stages[s]
+        if op.kind == "F":
+            x1 = run.inbox_f.pop((s, m)) if s > 0 else run.xs[m:m + 1]
+            if not run.grid.forward_only:
+                run.stash[(s, m)] = x1
+            y1 = self._fwd(p, x1)
+            if s < self.S - 1:
+                run.staging[("f", op.tick, s)] = y1
+            elif run.grid.forward_only:
+                run.outputs[m] = y1
+            return y1
+        if s == self.S - 1:
+            x1 = run.stash.pop((s, m))
+            t1 = run.targets[m:m + 1]
+            loss, dx1, run.dp_acc[s] = self._last_bwd(
+                p, x1, t1, run.scale, run.dp_acc[s])
+            run.losses[m] = loss
+            if s > 0:
+                run.staging[("b", op.tick, s)] = dx1
+            return (loss, dx1)
+        x1 = run.stash.pop((s, m))
+        dy1 = run.inbox_b.pop((s, m))
+        dx1, run.dp_acc[s] = self._bwd(p, x1, dy1, run.dp_acc[s])
+        if s > 0:
+            run.staging[("b", op.tick, s)] = dx1
+        return dx1
+
+    def _start_hop(self, run: _StepRun, d: str, t: int, edges,
+                   rreq: Request) -> None:
+        """All of tick t's producing cells retired: stack their slices
+        (zeros elsewhere) and start the persistent channel."""
+        if run.done.is_complete:
+            return
+        S = self.S
+        shards = list(self._zeros)
+        for s, _m in edges:
+            shards[s] = run.staging.pop((d, t, s))
+        payload = jax.make_array_from_single_device_arrays(
+            (S,) + self._act_sig[0], self._sharding, shards)
+        chan = self._chan[d]
+        try:
+            chan.send.start(payload)
+            inner = chan.recv.start()
+        except BaseException as exc:  # noqa: BLE001
+            self._fail(run, exc)
+            return
+
+        def deliver(rq):
+            value = rq.value()
+            recv_shards = self._by_stage(value)
+            for s, m in edges:
+                if d == "f":
+                    run.inbox_f[(s + 1, m)] = recv_shards[s + 1]
+                else:
+                    run.inbox_b[(s - 1, m)] = recv_shards[s - 1]
+            rreq.complete(None)
+
+        self.queue.attach(
+            inner, deliver,
+            on_error=lambda rq: self._fail(
+                run, rq.exception or RuntimeError("p2p hop failed")))
+
+    def _finalize(self, run: _StepRun) -> None:
+        if run.done.is_complete:
+            return
+        try:
+            if run.grid.forward_only:
+                ys = jnp.concatenate([run.outputs[m]
+                                      for m in range(run.grid.M)])
+                result = ys
+            else:
+                loss = run.losses[0]
+                for m in range(1, run.grid.M):
+                    loss = loss + run.losses[m]
+                loss = loss * run.scale
+                grads = self._stack_grads(run.dp_acc)
+                result = (loss, grads)
+        except BaseException as exc:  # noqa: BLE001
+            self._fail(run, exc)
+            return
+        self.last_step_timing = self._timing(run)
+        with run._lock:
+            if not run.done.is_complete:
+                run.done.complete(result)
+
+    def _timing(self, run: _StepRun) -> dict | None:
+        """Measured bubble: per-stage idle inside the step window.  Per
+        stage, busy = sum of its (serial) cell spans; idle = window -
+        busy; the mean idle fraction across stages is directly
+        comparable to :func:`bubble_fraction`'s analytic value."""
+        spans = run.cell_spans
+        if len(spans) != self.S or not all(spans.values()):
+            return None
+        t_lo = min(t0 for ss in spans.values() for t0, _ in ss)
+        t_hi = max(t1 for ss in spans.values() for _, t1 in ss)
+        window = max(t_hi - t_lo, 1e-9)
+        idle = [window - sum(t1 - t0 for t0, t1 in spans[s])
+                for s in range(self.S)]
+        return {"window_s": window, "idle_s": idle,
+                "bubble": sum(idle) / (window * self.S),
+                "cells": [len(spans[s]) for s in range(self.S)],
+                "grid_ticks": run.grid.ticks}
+
+    # -- helpers -----------------------------------------------------------
+    def _fail(self, run: _StepRun, exc: BaseException | None) -> None:
+        exc = exc or RuntimeError("pipeline step failed")
+        with run._lock:
+            if run.done.is_complete:
+                return
+            run.done.fail(exc)
+        # release every still-pending gate so sibling branches retire
+        # instead of hanging (their nodes observe done and no-op)
+        for req in list(run.cell_req.values()) + list(run.hop_rreq.values()):
+            if not req.is_complete:
+                try:
+                    req.fail(exc)
+                except BaseException:  # noqa: BLE001
+                    pass
+
+    def _stage_view(self, params, s: int):
+        return jax.tree.map(lambda l: self._by_stage(l)[s], params)
+
+    @staticmethod
+    def _by_stage(arr):
+        shards = sorted(arr.addressable_shards,
+                        key=lambda sh: sh.index[0].start or 0)
+        return [sh.data for sh in shards]
+
+    def _ensure_channels(self, act_shape, dtype) -> None:
+        sig = (tuple(act_shape), jnp.dtype(dtype))
+        if self._act_sig == sig:
+            return
+        if self._act_sig is not None:
+            for c in self._chan.values():
+                c.close()
+            self._chan = {}
+        self._act_sig = sig
+        self._zeros = [
+            jax.device_put(jnp.zeros((1,) + sig[0], sig[1]),
+                           self.devices[s]) for s in range(self.S)]
+        if self.S > 1:
+            like = jax.ShapeDtypeStruct((self.S,) + sig[0], sig[1])
+            self._chan = {
+                "f": self.p2p.channel_init(like, self.mesh, self.axis,
+                                           tag=f"{self.name}-act"),
+                "b": self.p2p.channel_init(like, self.mesh, self.axis,
+                                           tag=f"{self.name}-grad",
+                                           reverse=True),
+            }
+
+    def _stack_grads(self, dp_acc):
+        S = self.S
+        leaves0, treedef = jax.tree.flatten(dp_acc[0])
+        per_stage = [jax.tree.leaves(dp_acc[s]) for s in range(S)]
+        out = []
+        for i, l0 in enumerate(leaves0):
+            shape = (S,) + tuple(l0.shape[1:])
+            out.append(jax.make_array_from_single_device_arrays(
+                shape, self._sharding, [per_stage[s][i] for s in range(S)]))
+        return jax.tree.unflatten(treedef, out)
+
+    def _wait(self, req: Request, timeout: float):
+        """The only blocking wait in the lifecycle: drive progress (or
+        yield to the executor) until the step's DAG completes."""
+        self.blocking_waits += 1
+        ex = self.executor if self.executor is not None \
+            else self.engine.executor
+        owned = ex is not None and ex.running and ex.owns(self.dag_stream)
+        t0 = time.monotonic()
+        while not req.is_complete:
+            if owned:
+                time.sleep(20e-6)
+            else:
+                made = self.engine.progress_all()
+                if not made:
+                    time.sleep(5e-6)
+            if timeout is not None and not req.is_complete \
+                    and time.monotonic() - t0 > timeout:
+                raise TimeoutError(
+                    f"pipeline step timed out after {timeout}s "
+                    f"({self.stats()})")
+        return req.value()
+
+    def __repr__(self):
+        return (f"PipelineSchedule(S={self.S}, axis={self.axis!r}, "
+                f"steps={self.steps})")

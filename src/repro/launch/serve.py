@@ -32,11 +32,13 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=128)
-    ap.add_argument("--cache-mode", default="slots",
+    ap.add_argument("--cache-mode", default="paged",
                     choices=["slots", "paged"],
-                    help="KV cache layout: monolithic per-slot buffers, or "
-                         "a paged block pool with continuous batching "
-                         "(backlog admission, chunked prefill, preemption)")
+                    help="KV cache layout: a paged block pool with "
+                         "continuous batching (backlog admission, chunked "
+                         "prefill, preemption; the default — strictly "
+                         "better at equal cache bytes), or the monolithic "
+                         "per-slot buffers (--cache-mode slots)")
     ap.add_argument("--kv-block-size", type=int, default=16,
                     help="positions per KV block (paged mode)")
     ap.add_argument("--kv-blocks", type=int, default=0,

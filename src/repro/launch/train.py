@@ -42,6 +42,18 @@ def main():
     ap.add_argument("--collective-round-batch", type=int, default=0,
                     help="rounds fused per jitted dispatch in the user "
                          "backend (0 = auto from bucket size)")
+    ap.add_argument("--pipeline", default="none",
+                    choices=["none", "gpipe", "1f1b"],
+                    help="pipeline-parallel backend: gpipe = the "
+                         "monolithic lax.scan reference; 1f1b = the "
+                         "event-driven continuation-DAG schedule on the "
+                         "progress engine (per-stage streams, persistent "
+                         "user-space p2p handoffs), composed with the "
+                         "engine grad reducer over the data axis")
+    ap.add_argument("--pipeline-stages", type=int, default=0,
+                    help="pipeline stages (0 = the mesh's second dim); "
+                         "with --pipeline the mesh is (data x stage) and "
+                         "--microbatches sets M per step")
     ap.add_argument("--elastic", action="store_true",
                     help="membership-aware fault tolerance (user backend "
                          "only): a shared MembershipEpoch ties the "
@@ -64,6 +76,9 @@ def main():
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices} "
             + os.environ.get("XLA_FLAGS", ""))
+
+    if args.pipeline != "none":
+        return _run_pipeline(args)
 
     import jax
     import jax.numpy as jnp
@@ -279,6 +294,186 @@ def main():
         # resume found a checkpoint at/past --steps: nothing left to run
         print(f"nothing to do: resumed past step {args.steps - 1} "
               f"(rm -r {loop_cfg.checkpoint_dir} to restart)")
+    return 0
+
+
+def _run_pipeline(args):
+    """Pipeline-parallel rehearsal: a residual-MLP stage stack trained
+    against a fixed linear teacher, on a (data x stage) mesh.
+
+    * ``--pipeline gpipe``: the monolithic ``lax.scan`` reference —
+      forward AND backward differentiate through the tick scan inside
+      one jitted step (data dim must be 1).
+    * ``--pipeline 1f1b``: one event-driven :class:`PipelineSchedule`
+      per data row (per-stage executor-owned streams, persistent p2p
+      handoffs), composed with the existing ``EngineGradReducer`` over
+      the data axis of the 2-D mesh — the split-step
+      ``UserCollectiveStep`` path, exactly as for plain data-parallel.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.collectives.overlap import EngineGradReducer
+    from repro.core import ProgressEngine, ProgressExecutor
+    from repro.data.pipeline import PrefetchPipeline
+    from repro.distributed import pipeline as pl
+    from repro.train import optimizer as opt_mod
+    from repro.train.train_loop import (Trainer, TrainLoopConfig,
+                                        UserCollectiveStep)
+
+    n_dev = len(jax.devices())
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+    else:
+        S0 = args.pipeline_stages or n_dev
+        shape = (max(n_dev // S0, 1), S0)
+    D, S = shape
+    if args.pipeline_stages and args.pipeline_stages != S:
+        raise SystemExit(f"--pipeline-stages {args.pipeline_stages} "
+                         f"contradicts --mesh {args.mesh} (stage dim {S})")
+    if D * S > n_dev:
+        raise SystemExit(f"mesh {D}x{S} needs {D * S} devices, have {n_dev}")
+    if args.pipeline == "gpipe" and D != 1:
+        raise SystemExit("--pipeline gpipe differentiates through one "
+                         "scan; use a 1xS mesh (data dim 1)")
+    mesh = Mesh(np.array(jax.devices()[:D * S]).reshape(D, S),
+                ("data", "stage"))
+    M = max(args.microbatches, 1)
+    d_model, d_hidden, mb = 16, 32, max(args.global_batch, 1)
+    print(f"pipeline={args.pipeline} mesh={dict(mesh.shape)} "
+          f"microbatches={M} "
+          f"bubble={pl.bubble_fraction(S, M, args.pipeline):.3f} "
+          f"peak_act={pl.peak_activation_microbatches(S, M, args.pipeline)}")
+
+    def stage_fn(p, x):
+        return x + jnp.tanh(x @ p["w1"]) @ p["w2"]
+
+    def loss_fn(y, t):
+        return jnp.mean((y - t) ** 2)
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    params = {
+        "w1": jax.random.normal(k1, (S, d_model, d_hidden)) * 0.1,
+        "w2": jax.random.normal(k2, (S, d_hidden, d_model)) * 0.1,
+    }
+    ocfg = opt_mod.AdamWConfig(lr=3e-3, warmup_steps=5,
+                               total_steps=max(args.steps, 10))
+    opt_state = opt_mod.init(params)
+
+    eng = ProgressEngine()
+    ex = ProgressExecutor(eng, num_workers=2).start()
+    eng.attach_executor(ex)
+
+    rng = np.random.default_rng(7)
+    teacher = (rng.standard_normal((d_model, d_model))
+               .astype(np.float32) * 0.3)
+
+    def gen():
+        while True:
+            xs = rng.standard_normal((D, M, mb, d_model)).astype(np.float32)
+            yield {"xs": jnp.asarray(xs), "ts": jnp.asarray(xs @ teacher)}
+
+    pipe = PrefetchPipeline(gen(), eng, depth=3)
+
+    @jax.jit
+    def apply_fn(params, opt_state, grads, stacked_mets):
+        params, opt_state, om = opt_mod.apply(ocfg, opt_state,
+                                              params, grads)
+        mets = {k: jnp.mean(v) for k, v in stacked_mets.items()}
+        return params, opt_state, dict(mets, **om)
+
+    loop_cfg = TrainLoopConfig(
+        total_steps=args.steps, checkpoint_every=10,
+        checkpoint_dir=os.path.join(args.ckpt_dir,
+                                    f"pipeline-{args.pipeline}"),
+        log_every=5,
+        collective_backend="user" if args.pipeline == "1f1b" else "native",
+        collective_algorithm=args.collective_algorithm,
+        collective_chunks=args.collective_chunks,
+        pipeline=args.pipeline)
+    hooks = [lambda s, m: print(
+        f"step {s:4d} loss={m['loss']:.4f} "
+        f"{m['step_time_s'] * 1e3:.0f}ms", flush=True)]
+
+    rows, reducer = [], None
+    if args.pipeline == "gpipe":
+        gmesh = Mesh(mesh.devices[0], ("stage",))
+        params = jax.device_put(params, NamedSharding(gmesh, P("stage")))
+        gp = pl.gpipe(stage_fn, gmesh, "stage", S)
+
+        def gp_loss(p, xs, ts):
+            ys = gp(p, xs)
+            per = jnp.stack([loss_fn(ys[m], ts[m]) for m in range(M)])
+            return jnp.mean(per)
+
+        @jax.jit
+        def step_fn(p, o, batch):
+            loss, g = jax.value_and_grad(gp_loss)(
+                p, batch["xs"][0], batch["ts"][0])
+            p, o, om = opt_mod.apply(ocfg, o, p, g)
+            return p, o, dict(loss=loss, **om)
+
+        trainer = Trainer(step_fn, params, opt_state, pipe, loop_cfg,
+                          engine=eng, hooks=hooks)
+    else:
+        params = jax.device_put(params, NamedSharding(mesh, P("stage")))
+        for r in range(D):
+            rmesh = Mesh(mesh.devices[r], ("stage",))
+            rows.append(pl.PipelineSchedule(
+                stage_fn, rmesh, "stage", S, loss_fn=loss_fn,
+                engine=eng, executor=ex, name=f"pipe{r}"))
+        sharding2d = NamedSharding(mesh, P("data", "stage"))
+
+        def stack_rows(*row_leaves):
+            # row r's [S, w...] leaf is one single-device [1, w...] shard
+            # per stage — reassemble all D*S of them into one global
+            # [D, S, w...] array for the data-axis reduction (zero-copy)
+            shards = [sh[None]
+                      for leaf in row_leaves
+                      for sh in pl.PipelineSchedule._by_stage(leaf)]
+            shape = (D, S) + tuple(row_leaves[0].shape[1:])
+            return jax.make_array_from_single_device_arrays(
+                shape, sharding2d, shards)
+
+        def grad_fn(params, batch):
+            # launch every row's DAG before waiting on any: the rows'
+            # stage streams progress concurrently under the executor
+            reqs = [rows[r].istep(params, batch["xs"][r], batch["ts"][r])
+                    for r in range(D)]
+            outs = [rows[r]._wait(reqs[r], timeout=600) for r in range(D)]
+            # each row's loss scalar lives on that row's last-stage
+            # device; hop through host for the [D] metrics stack
+            losses = jnp.asarray(np.stack(
+                [np.asarray(o[0]) for o in outs]))
+            grads = jax.tree.map(stack_rows, *[o[1] for o in outs])
+            return {"loss": losses}, grads
+
+        reducer = EngineGradReducer(
+            mesh, "data", engine=eng,
+            algorithm=args.collective_algorithm,
+            chunks=args.collective_chunks, mean=True,
+            round_batch=args.collective_round_batch or None)
+        split = UserCollectiveStep(grad_fn, apply_fn, reducer)
+        trainer = Trainer(None, params, opt_state, pipe, loop_cfg,
+                          engine=eng, split_step=split, hooks=hooks)
+
+    log = trainer.run()
+    pipe.close()
+    for r in rows:
+        r.close()
+    if reducer is not None:
+        reducer.close()
+    ex.shutdown(drain=True, timeout=600)
+    if log:
+        print(f"final loss {log[-1]['loss']:.4f}")
+        if rows:
+            st = rows[0].stats()
+            print(f"pipe0 stats: hops={st['hop_starts']} "
+                  f"p2p_completions={st['p2p_stream_completions']} "
+                  f"blocking_waits={st['blocking_waits']}")
     return 0
 
 

@@ -54,6 +54,11 @@ class TrainLoopConfig:
     # large keep per-round pipelining).  The reducer caches one
     # persistent schedule per grad bucket either way.
     collective_round_batch: int = 0
+    # pipeline-parallel schedule this loop runs under ("none", "gpipe",
+    # "1f1b") — a record field like collective_backend: the launcher
+    # carries the machinery (PipelineSchedule per data row), the config
+    # is what logs/stats report
+    pipeline: str = "none"
 
 
 @dataclasses.dataclass

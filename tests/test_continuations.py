@@ -28,6 +28,17 @@ def timed_task(duration, req=None, value=None):
     return poll
 
 
+def failing_task(duration, req, exc):
+    deadline = time.monotonic() + duration
+
+    def poll(thing):
+        if time.monotonic() >= deadline:
+            req.fail(exc)
+            return DONE
+        return NOPROGRESS
+    return poll
+
+
 def wait_until(pred, timeout=10.0, what="condition"):
     t0 = time.monotonic()
     while not pred():
@@ -355,3 +366,91 @@ class TestLifecycleAndStats:
         assert cs.deferred == 2 and cs.failed == 1
         assert cs.pending == 0 and cs.ready == 0
         assert "metered" in stats.format_stats(snap)
+
+class TestMultiStreamDags:
+    """when_all/when_any DAGs spanning multiple executor-adopted streams
+    with a mid-DAG failure: the gate fails exactly once, the downstream
+    node sees a failure continuation without running its fn, and sibling
+    branches on other streams retire instead of hanging — the error
+    contract the 1F1B pipeline schedule leans on."""
+
+    def test_when_all_mid_dag_failure_across_adopted_streams(self):
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=2)
+        s1, s2 = ex.stream("lane1"), ex.stream("lane2")
+        q = ContinuationQueue(eng, s1, policy=DEFERRED, name="dag")
+        ex.adopt_queue(q)
+
+        a, b = Request(tag="a"), Request(tag="b")
+        poison = Request(tag="poison")
+        sib1, sib2 = Request(tag="sib1"), Request(tag="sib2")
+        eng.async_start(timed_task(0.001, req=a, value="A"), None, s1)
+        eng.async_start(timed_task(0.004, req=b, value="B"), None, s2)
+        eng.async_start(
+            failing_task(0.002, poison, RuntimeError("mid-DAG loss")),
+            None, s2)
+        eng.async_start(timed_task(0.002, req=sib1, value=1), None, s1)
+        eng.async_start(timed_task(0.001, req=sib2, value=2), None, s2)
+
+        gate = q.when_all([a, poison, b])
+        ok_fires, err_fires, ran = [], [], []
+        q.attach(gate, ok_fires.append,
+                 on_error=lambda r: err_fires.append(r.exception))
+        downstream = q.node(lambda vals: ran.append(vals), deps=[gate])
+        sibling = q.when_all([sib1, sib2])
+
+        with ex:
+            wait_until(lambda: sibling.is_complete and downstream.is_complete
+                       and (ok_fires or err_fires), 10, "DAG settle")
+
+        # gate fails exactly once, with the poisoned member's exception
+        assert ok_fires == [] and len(err_fires) == 1
+        assert isinstance(gate.exception, RuntimeError)
+        # downstream sees a failure continuation; its fn never ran
+        assert downstream.failed and ran == []
+        assert isinstance(downstream.exception, RuntimeError)
+        # the sibling branch (spanning both streams) completed normally
+        assert sibling.value() == [1, 2]
+        # the healthy members of the failed gate retired too — no hang
+        assert a.value() == "A" and b.value() == "B"
+
+    def test_when_any_winner_beats_late_failure_across_streams(self):
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=2)
+        s1, s2 = ex.stream("fast"), ex.stream("slow")
+        q = ContinuationQueue(eng, s2, policy=DEFERRED, name="race")
+        ex.adopt_queue(q)
+        win, lose = Request(tag="win"), Request(tag="lose")
+        eng.async_start(timed_task(0.001, req=win, value="winner"), None, s1)
+        eng.async_start(
+            failing_task(0.05, lose, RuntimeError("late loss")), None, s2)
+        out = q.when_any([lose, win])
+        with ex:
+            wait_until(lambda: out.is_complete, 10, "when_any winner")
+            i, r = out.value()
+            assert (i, r.value()) == (1, "winner")
+            # the losing branch still retires on its own stream
+            wait_until(lambda: lose.is_complete, 10, "loser retires")
+        assert lose.failed
+
+    def test_when_any_first_failure_propagates_once(self):
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=2)
+        s1, s2 = ex.stream("w1"), ex.stream("w2")
+        q = ContinuationQueue(eng, s1, policy=DEFERRED, name="race2")
+        ex.adopt_queue(q)
+        bad, slow = Request(tag="bad"), Request(tag="slow")
+        eng.async_start(
+            failing_task(0.001, bad, ValueError("first loss")), None, s2)
+        eng.async_start(timed_task(0.03, req=slow, value="late"), None, s1)
+        out = q.when_any([slow, bad])
+        errs, oks = [], []
+        q.attach(out, oks.append, on_error=lambda r: errs.append(r.exception))
+        with ex:
+            wait_until(lambda: out.is_complete and (oks or errs),
+                       10, "when_any failure")
+            assert out.failed and isinstance(out.exception, ValueError)
+            assert oks == [] and len(errs) == 1
+            # sibling keeps making progress past the failure
+            wait_until(lambda: slow.is_complete, 10, "sibling retires")
+        assert slow.value() == "late"

@@ -1,0 +1,162 @@
+"""User-space nonblocking point-to-point: single-hop ring transfers as
+CollectiveRequest handles (isend/irecv matching queues, persistent
+send_init/recv_init channels, epoch invalidation) — all in multi-device
+subprocesses."""
+from tests._multidevice import run_with_devices
+
+
+def test_isend_irecv_roundtrip_and_matching():
+    out = run_with_devices("""
+        import collections
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
+        from repro.collectives.p2p import P2P
+        from repro.core import ProgressEngine
+
+        eng = ProgressEngine()
+        p2p = P2P(eng)
+        mesh = compat.make_mesh((4,), ("x",))
+        n = 4
+        x = jnp.arange(n * 3, dtype=jnp.float32).reshape(n, 3)
+
+        # forward ring: recv row i = what rank i-1 sent = roll(x, +1)
+        sreq = p2p.isend(x, mesh, "x")
+        rreq = p2p.irecv(x, mesh, "x")
+        got = rreq.wait(timeout=120)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.roll(np.asarray(x), 1, axis=0))
+        sreq.wait(timeout=120)   # send handle retires with the transfer
+        assert sreq.value() is None
+
+        # reverse ring: recv row i = what rank i+1 sent = roll(x, -1)
+        rrev = p2p.irecv(x, mesh, "x", reverse=True)
+        p2p.isend(x, mesh, "x", reverse=True)
+        np.testing.assert_array_equal(np.asarray(rrev.wait(timeout=120)),
+                                      np.roll(np.asarray(x), -1, axis=0))
+        print("ROUNDTRIP_OK")
+
+        # unexpected-message queue: two sends posted before any recv
+        # must match the recvs FIFO (non-overtaking rule)
+        a = x + 100.0
+        b = x + 200.0
+        p2p.isend(a, mesh, "x")
+        p2p.isend(b, mesh, "x")
+        assert p2p.unexpected >= 2
+        r1 = p2p.irecv(x, mesh, "x")
+        r2 = p2p.irecv(x, mesh, "x")
+        np.testing.assert_array_equal(np.asarray(r1.wait(timeout=120)),
+                                      np.roll(np.asarray(a), 1, axis=0))
+        np.testing.assert_array_equal(np.asarray(r2.wait(timeout=120)),
+                                      np.roll(np.asarray(b), 1, axis=0))
+        assert p2p.matched >= 3
+        print("FIFO_OK")
+
+        # tags partition the matching space: a recv on tag 1 must not
+        # consume the tag-0 send
+        p2p.isend(a, mesh, "x", tag=0)
+        rt = p2p.irecv(x, mesh, "x", tag=1)
+        assert not rt.is_complete
+        p2p.isend(b, mesh, "x", tag=1)
+        np.testing.assert_array_equal(np.asarray(rt.wait(timeout=120)),
+                                      np.roll(np.asarray(b), 1, axis=0))
+        p2p.irecv(x, mesh, "x", tag=0).wait(timeout=120)
+        print("TAG_OK")
+
+        # one-shot fused sendrecv
+        sr = p2p.sendrecv(x, mesh, "x")
+        np.testing.assert_array_equal(np.asarray(sr.wait(timeout=120)),
+                                      np.roll(np.asarray(x), 1, axis=0))
+        stats_ok = p2p.stream.completions > 0
+        p2p.close()
+        assert stats_ok
+        print("P2P_OK")
+    """, n_devices=4)
+    assert "ROUNDTRIP_OK" in out and "FIFO_OK" in out
+    assert "TAG_OK" in out and "P2P_OK" in out
+
+
+def test_persistent_channel_restarts_and_executor_issue():
+    out = run_with_devices("""
+        import threading
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
+        from repro.collectives.p2p import P2P
+        from repro.core import ProgressEngine, ProgressExecutor
+
+        eng = ProgressEngine()
+        ex = ProgressExecutor(eng, num_workers=2).start()
+        eng.attach_executor(ex)
+        p2p = P2P(eng, executor=ex)
+        mesh = compat.make_mesh((2,), ("x",))
+        like = jax.ShapeDtypeStruct((2, 4), jnp.float32)
+
+        send = p2p.send_init(like, mesh, "x")
+        recv = p2p.recv_init(like, mesh, "x")
+        # same signature -> same channel: that IS the match
+        assert send.channel is recv.channel
+        chan = send.channel
+        starts0 = chan.starts
+
+        for i in range(3):
+            x = jnp.full((2, 4), float(i + 1))[0] * jnp.ones((2, 4)) \\
+                + jnp.arange(2.0)[:, None]
+            hop = send.start(x)
+            inner = chan.persistent.active   # the hop CollectiveRequest
+            got = recv.start().wait(timeout=120)
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.roll(np.asarray(x), 1, axis=0))
+            hop.wait(timeout=120)
+            # persistent user-space request: the issue ran on an
+            # executor worker, not this thread (executor-driven start)
+            assert inner.issue_thread in ex.worker_thread_idents(), \\
+                (inner.issue_thread, ex.worker_thread_idents())
+            assert inner.issue_thread != threading.get_ident()
+        assert chan.starts == starts0 + 3
+        print("PERSISTENT_OK")
+        p2p.close()
+        ex.shutdown(drain=True, timeout=120)
+        print("DONE")
+    """, n_devices=2)
+    assert "PERSISTENT_OK" in out and "DONE" in out
+
+
+def test_channel_epoch_invalidation_and_rebuild():
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
+        from repro.collectives.p2p import P2P
+        from repro.collectives.nonblocking import (MembershipEpoch,
+                                                   MembershipError)
+        from repro.core import ProgressEngine
+
+        eng = ProgressEngine()
+        epoch = MembershipEpoch()
+        p2p = P2P(eng, epoch=epoch)
+        mesh = compat.make_mesh((4,), ("x",))
+        like = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+        chan = p2p.channel_init(like, mesh, "x")
+        x = jnp.arange(16.0).reshape(4, 4)
+        chan.send.start(x)
+        chan.recv.start().wait(timeout=120)
+
+        epoch.invalidate(survivors=2, reason="test kill")
+        assert chan.stale
+        try:
+            chan.send.start(x)
+            raise SystemExit("stale channel accepted a start")
+        except MembershipError:
+            pass
+        print("STALE_OK")
+
+        # rebuild on the survivors' mesh: persistent program re-planned
+        small = compat.make_mesh((2,), ("x",))
+        chan.rebuild(small, axis="x")
+        y = jnp.arange(8.0).reshape(2, 4)
+        chan.send.start(y)
+        got = chan.recv.start().wait(timeout=120)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.roll(np.asarray(y), 1, axis=0))
+        print("REBUILD_OK")
+        p2p.close()
+    """, n_devices=4)
+    assert "STALE_OK" in out and "REBUILD_OK" in out
