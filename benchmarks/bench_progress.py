@@ -360,31 +360,34 @@ def trace(**kw):
         srv.submit(r)
     srv.run_until_idle(timeout=600)
     lat = srv.latency_snapshot()
-    sched = srv.scheduler_snapshot() if srv.paged else None
+    sched = srv.scheduler_snapshot()
     srv.close(timeout=60)
     return [list(r.out_tokens) for r in reqs], lat, sched
 
-# fixed-slot baseline FIRST: if the paged sweep dies, these rows are
-# salvaged by the parent (see serve_continuous_batching)
-slot_toks, slot_lat, _ = trace(batch_slots=4)
-print(f"serve_cb_ttft_slots,{slot_lat.ttft_ms_p50 * 1e3:.3f},"
+# 4-lane baseline FIRST: if the wide sweep dies, these rows are
+# salvaged by the parent (see serve_continuous_batching).  Same paged
+# pool as the wide run (32+1 blocks of 8) capped at 4 decode lanes —
+# the shape the retired fixed-slot engine used to serve
+lane_toks, lane_lat, _ = trace(batch_slots=4, kv_block_size=8,
+                               kv_blocks=33)
+print(f"serve_cb_ttft_lane4,{lane_lat.ttft_ms_p50 * 1e3:.3f},"
       f"p50 TTFT; concurrency cap 4 lanes, p99 latency "
-      f"{slot_lat.latency_ms_p99:.1f}ms")
-print(f"serve_cb_p99_slots,{slot_lat.latency_ms_p99 * 1e3:.3f},"
-      f"p99 request latency at 4 fixed slots")
+      f"{lane_lat.latency_ms_p99:.1f}ms")
+print(f"serve_cb_p99_lane4,{lane_lat.latency_ms_p99 * 1e3:.3f},"
+      f"p99 request latency at a 4-lane cap")
 
-# paged: SAME cache memory (4 lanes x 64 positions = 32 blocks of 8)
-# but 12 decode lanes — block granularity is what buys the concurrency
+# wide: SAME cache bytes but 12 decode lanes — block granularity is
+# what buys the concurrency, and per-stream tokens must not change
 paged_toks, paged_lat, sched = trace(
-    batch_slots=12, cache_mode="paged", kv_block_size=8, kv_blocks=33)
-assert paged_toks == slot_toks, "paged trace diverged from fixed-slot"
+    batch_slots=12, kv_block_size=8, kv_blocks=33)
+assert paged_toks == lane_toks, "wide-pool trace diverged from 4-lane"
 print(f"serve_cb_ttft_paged,{paged_lat.ttft_ms_p50 * 1e3:.3f},"
       f"p50 TTFT; peak {sched.peak_resident} resident on the same "
       f"bytes, {sched.preemptions} preemptions")
 print(f"serve_cb_p99_paged,{paged_lat.latency_ms_p99 * 1e3:.3f},"
       f"p99 request latency, paged pool (32 blocks of 8)")
 print(f"cb_gain_concurrency,{sched.peak_resident / 4:.3f},"
-      f"peak resident paged {sched.peak_resident} vs 4 fixed slots at "
+      f"peak resident {sched.peak_resident} vs the 4-lane cap at "
       f"equal cache bytes (ratio row: untracked by the trend gate)")
 """
 
@@ -431,13 +434,11 @@ def recover(**kw):
     srv.close(timeout=60)
     return dt
 
-# slot mode FIRST so a paged-sweep crash still salvages this row
-dt = recover()
-print(f"recovery_serve_slots,{dt * 1e6:.0f},invalidate -> drained+"
-      f"remeshed+re-admitted+idle, 8 reqs, fixed slots")
-dt = recover(cache_mode="paged", kv_block_size=8)
-print(f"recovery_serve_paged,{dt * 1e6:.0f},invalidate -> idle with "
-      f"per-lane KV checkpoint/restore migration, paged pool")
+# serve row FIRST so a trainer-section crash still salvages it
+dt = recover(kv_block_size=8)
+print(f"recovery_serve_paged,{dt * 1e6:.0f},invalidate -> drained+"
+      f"remeshed+re-admitted+idle with per-lane KV checkpoint/restore "
+      f"migration, 8 reqs, paged pool")
 
 # trainer: remesh-and-retry step (catches MembershipError, rebuilds the
 # split step on the survivors, retries the same batch)
@@ -521,6 +522,156 @@ warm = min(step_times[s] for s in step_times if s not in (0, 4))
 print(f"recovery_train_step,{step_times[4] * 1e6:.0f},remesh+retry "
       f"step wall time (warm step {warm * 1e6:.0f}us)")
 """
+
+
+_FSDP_SNIPPET = """
+import os, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.collectives.nonblocking import CollectiveSpec
+from repro.collectives.overlap import FsdpLayout, FsdpReducer
+from repro.core import ProgressEngine
+from repro.data.pipeline import SyntheticLM
+from repro.launch.train import build_fsdp_programs
+from repro.models import registry
+from repro.train import optimizer as opt_mod
+from repro.train.train_loop import FsdpStep, Trainer, TrainLoopConfig
+
+cfg = get_config("smollm-360m").with_overrides(
+    num_layers=2, d_model=64, d_ff=128, vocab_size=256, num_heads=4,
+    num_kv_heads=2, head_dim=16, remat_policy="none")
+STEPS = 12
+ocfg = opt_mod.AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=STEPS)
+mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
+axis, n = "data", 2
+
+src = SyntheticLM(cfg.vocab_size, 16, 4, seed=7)
+it = iter(src)
+batches = [{k: jnp.asarray(v) for k, v in next(it).items()}
+           for _ in range(STEPS)]
+
+def timed(fn, reps=3):
+    fn()                                   # warmup / compile
+    t0 = time.monotonic()
+    for _ in range(reps):
+        fn()
+    return (time.monotonic() - t0) / reps
+
+# unsharded baseline FIRST: a crash in the FSDP sweep must still
+# salvage this row (same discipline as the serve families)
+params = registry.init_params(cfg, jax.random.PRNGKey(0))
+
+@jax.jit
+def base_step(p, o, batch):
+    (loss, mets), g = jax.value_and_grad(
+        registry.loss_fn, has_aux=True)(p, cfg, batch)
+    p, o, om = opt_mod.apply(ocfg, o, p, g)
+    return p, o, loss
+
+t_base = timed(lambda: jax.block_until_ready(
+    base_step(params, opt_mod.init(params), batches[0])))
+print(f"fsdp_unsharded_step,{t_base * 1e6:.0f},replicated jitted "
+      f"grad+AdamW baseline, no sharding (2x2-device child)",
+      flush=True)
+
+# shared FSDP scaffolding: flat per-dtype bucket shards [n, W/n] over
+# the data axis; the SAME jitted grad/apply programs serve both
+# backends, only the byte movement differs
+layout = FsdpLayout(params, n, 1 << 22)
+sharding = NamedSharding(mesh, P(axis))
+
+def fresh_state():
+    shards = layout.shard_params(params, mesh, axis)
+    return shards, opt_mod.AdamWState(
+        jnp.zeros((), jnp.int32),
+        [jax.device_put(jnp.zeros_like(s), sharding) for s in shards],
+        [jax.device_put(jnp.zeros_like(s), sharding) for s in shards])
+
+grad_fn, apply_fn, ag_fn, rs_fn = build_fsdp_programs(
+    cfg, ocfg, mesh, layout, axis=axis)
+
+def native_step(sh, st, batch):
+    flats = ag_fn(sh)
+    smets, flat_grads = grad_fn(flats, batch)
+    gshards = rs_fn(flat_grads)
+    return apply_fn(sh, st, gshards, smets)
+
+sh_n, st_n = fresh_state()
+t_native = timed(lambda: jax.block_until_ready(
+    native_step(sh_n, st_n, batches[0])))
+print(f"fsdp_native_step,{t_native * 1e6:.0f},in-program "
+      f"all_gather/psum_scatter FSDP step, data={n} model=2",
+      flush=True)
+
+# user backend: persistent engine handles, next step's gathers chained
+# off the optimizer's compute futures (measured via the Trainer so the
+# cross-step prefetch chain is real)
+class ListPipe:
+    def __init__(self, bs):
+        self.bs = list(bs)
+    def next_batch(self):
+        return self.bs.pop(0)
+    def close(self):
+        pass
+
+eng = ProgressEngine()
+spec = CollectiveSpec(backend="user", chunks=2)
+reducer = FsdpReducer(mesh, axis, engine=eng, spec=spec,
+                      bucket_bytes=1 << 22)
+split = FsdpStep(grad_fn, apply_fn, reducer, spec=spec)
+step_times = {}
+sh_u, st_u = fresh_state()
+tr = Trainer(None, sh_u, st_u, ListPipe(batches),
+             TrainLoopConfig(total_steps=STEPS, checkpoint_every=10**6,
+                             checkpoint_dir="/tmp/bench_fsdp_ckpt",
+                             log_every=1, resume=False,
+                             collective_spec=spec),
+             engine=eng, split_step=split,
+             hooks=[lambda s, m: step_times.__setitem__(
+                 s, m["step_time_s"])])
+tr.run()
+overlap, gathers = reducer.prefetch_overlap, reducer.gathers
+reducer.close()
+warm = sorted(step_times[s] for s in step_times if s > 0)
+t_user = warm[len(warm) // 2]
+print(f"fsdp_user_step,{t_user * 1e6:.0f},persistent engine "
+      f"reduce-scatter/all-gather FSDP step, median of "
+      f"{len(warm)} warm steps", flush=True)
+assert overlap > 0.0, overlap
+print(f"fsdp_prefetch_overlap,{overlap:.3f},fraction of the gather "
+      f"window hidden behind compute ({gathers} chained gathers; "
+      f"HIGHER is better — a drop shows as 'improved' in the gate)",
+      flush=True)
+"""
+
+
+def fsdp_training():
+    """ZeRO-style FSDP step family (fsdp_* rows, 2x2 host devices in a
+    child): the replicated unsharded baseline, the native in-program
+    all_gather/psum_scatter step, the user-backend step on persistent
+    engine handles, and the measured prefetch-overlap fraction of the
+    continuation-chained gathers.  Baseline prints before the FSDP
+    sweep so a crash in the new path still salvages it (same
+    discipline as serve_collectives)."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(_FSDP_SNIPPET)],
+            capture_output=True, text=True, timeout=1200, env=env)
+        stdout, rc, err = proc.stdout, proc.returncode, proc.stderr or ""
+    except subprocess.TimeoutExpired as e:
+        stdout, rc, err = e.stdout or "", -1, "timeout after 1200s"
+    rows = [l for l in stdout.splitlines() if l.startswith("fsdp_")]
+    if rc != 0:
+        rows.append(f"fsdp,nan,FAILED(rc={rc}): {err[-200:]}")
+    return rows
 
 
 _PIPELINE_SNIPPET = """
@@ -647,10 +798,10 @@ def pipeline_parallelism():
 
 def recovery():
     """Membership-change recovery path (recovery_* rows, single-device
-    child): serve drain/remesh/re-admit to idle in slot and paged mode
-    (the paged row includes per-lane KV checkpoint/restore migration),
-    and the trainer's remesh-and-retry step.  Slot row prints first so
-    a crash mid-sweep salvages it (same discipline as the serve
+    child): serve drain/remesh/re-admit to idle on the paged pool
+    (including per-lane KV checkpoint/restore migration), and the
+    trainer's remesh-and-retry step.  The serve row prints first so a
+    crash mid-sweep salvages it (same discipline as the serve
     families)."""
     env = dict(os.environ)
     src = os.path.join(os.path.dirname(os.path.dirname(
@@ -672,10 +823,11 @@ def recovery():
 
 def serve_continuous_batching():
     """Continuous-batching arrival trace (serve_cb rows): one Poisson
-    trace served by the fixed-slot engine and by the paged engine at
-    equal cache memory.  The child prints the fixed-slot rows before
-    starting the paged sweep, so a timeout or crash mid-sweep still
-    salvages the baseline rows (same discipline as serve_collectives)."""
+    trace served by the paged engine capped at 4 decode lanes and by
+    the same pool opened wide, at equal cache memory.  The child prints
+    the 4-lane rows before starting the wide sweep, so a timeout or
+    crash mid-sweep still salvages the baseline rows (same discipline
+    as serve_collectives)."""
     env = dict(os.environ)
     src = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "src")
@@ -734,5 +886,6 @@ def run():
     rows += serve_collectives()
     rows += serve_continuous_batching()
     rows += pipeline_parallelism()
+    rows += fsdp_training()
     rows += recovery()
     return rows

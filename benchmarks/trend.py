@@ -41,9 +41,14 @@ import sys
 # pipeline rows time one pipeline-parallel train step (sequential /
 # GPipe-scan / event-driven 1F1B) plus the measured bubble — the
 # measured-vs-analytic check itself lives in the bench child, the gate
-# only tracks the step times drifting.
+# only tracks the step times drifting.  fsdp rows time the ZeRO-style
+# sharded step (unsharded baseline / native in-program collectives /
+# user-backend persistent handles) plus the prefetch-overlap fraction
+# of the continuation-chained gathers; overlap is a fraction where
+# HIGHER is better, so a drop renders as 'improved' — read the note.
 DEFAULT_PREFIXES = ("fig7", "fig13", "fig14_native", "fig14_user",
-                    "serve_decode", "serve_cb", "recovery", "pipeline")
+                    "serve_decode", "serve_cb", "recovery", "pipeline",
+                    "fsdp")
 DEFAULT_THRESHOLD = 0.20
 
 

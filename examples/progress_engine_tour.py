@@ -309,11 +309,11 @@ def serve_collectives():
 def continuous_batching():
     """Continuous batching on a paged KV cache.
 
-    The fixed-slot serve engine reserves ``max_seq`` cache positions per
-    lane for the whole residency of a request — short requests pay for
-    space they never touch.  ``cache_mode="paged"`` replaces the
-    monolithic slots with a pool of fixed-size KV blocks and turns the
-    engine into a continuous-batching scheduler:
+    A fixed-slot cache reserves ``max_seq`` positions per lane for the
+    whole residency of a request — short requests pay for space they
+    never touch.  The serve engine therefore allocates from a pool of
+    fixed-size KV blocks (the fixed-slot mode is retired) and runs as a
+    continuous-batching scheduler:
 
         1. admit    — arrivals land in a length-bucketed backlog; a
                       request is admitted when a lane AND enough blocks
@@ -328,7 +328,7 @@ def continuous_batching():
                       evicted (blocks freed, request re-queued with its
                       generated prefix); the oldest resident is never
                       preempted, so progress is guaranteed and greedy
-                      streams stay bit-identical to the fixed-slot path
+                      streams are invariant to the pool shape
 
     At equal cache bytes the paged pool sustains strictly more resident
     requests because blocks are granted per-position, not per-max_seq."""
@@ -359,15 +359,16 @@ def continuous_batching():
         srv.close(timeout=60)
         return [list(r.out_tokens) for r in reqs], lat, sched
 
-    slot_toks, _, _ = serve(batch_slots=3)
-    # same cache bytes as 3 slots x 32 positions: 24 blocks of 4 — but
+    lane3_toks, _, _ = serve(batch_slots=3)   # roomy pool, 3-lane cap
+    # same cache bytes as 3 lanes x 32 positions: 24 blocks of 4 — but
     # 8 lanes, and a pool tight enough to exercise preemption
-    paged_toks, lat, sched = serve(batch_slots=8, cache_mode="paged",
-                                   kv_block_size=4, kv_blocks=25,
-                                   prefill_chunk=4)
-    assert paged_toks == slot_toks      # scheduling is invisible in output
-    print(f"continuous batching: 12 requests, paged == slots bit-exact; "
-          f"{sched.format()}; queued ms p50 {lat.queued_ms_p50:.1f}")
+    wide_toks, lat, sched = serve(batch_slots=8,
+                                  kv_block_size=4, kv_blocks=25,
+                                  prefill_chunk=4)
+    assert wide_toks == lane3_toks      # scheduling is invisible in output
+    print(f"continuous batching: 12 requests, wide pool == 3-lane cap "
+          f"bit-exact; {sched.format()}; "
+          f"queued ms p50 {lat.queued_ms_p50:.1f}")
 
 
 def fault_tolerance():
@@ -445,6 +446,110 @@ def fault_tolerance():
     print(f"fault tolerance: killed a device mid-decode; {remeshes} "
           f"remesh, {lat.completed} requests completed, streams "
           f"bit-identical to the undisturbed run")
+
+
+def fsdp_sharded_training():
+    """ZeRO-style FSDP training on user-space collectives — the 2-D-mesh
+    step behind one :class:`CollectiveSpec`.
+
+        1. layout   — ``FsdpLayout`` flattens the param tree into flat
+                      per-dtype buckets padded to the data-axis size;
+                      rank r owns row r of each ``[n, W/n]`` shard
+                      stack, and the AdamW moments shard the same way
+        2. step     — all-gather the full flat buckets for fwd/bwd,
+                      reduce-scatter the grad buckets so each rank
+                      receives ONLY the block it applies (half the
+                      allreduce wire bytes), then the sharded optimizer
+                      step; other mesh axes (``model``) just replicate
+        3. prefetch — the NEXT step's all-gathers are chained as
+                      continuations off compute futures over the
+                      updated shards (``FsdpGather`` with ``after=``):
+                      gather rounds ride the collective stream while
+                      XLA still runs, and the overlap fraction is
+                      *measured* from blocked-wait vs window time
+        4. equality — the user backend runs THE SAME jitted grad/apply
+                      programs as the native all_gather/psum_scatter
+                      path; only the byte movement differs, so the loss
+                      trajectory matches bit for bit
+
+    Runs on however many host devices this process has (1 device -> a
+    degenerate data axis: identity collectives, same machinery)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.collectives.nonblocking import CollectiveSpec
+    from repro.collectives.overlap import FsdpLayout, FsdpReducer
+    from repro.configs import get_config
+    from repro.data.pipeline import SyntheticLM
+    from repro.launch.train import build_fsdp_programs
+    from repro.models import registry
+    from repro.train import optimizer as opt_mod
+
+    n = len(jax.devices())
+    mesh = Mesh(np.array(jax.devices()).reshape(n, 1), ("data", "model"))
+    cfg = get_config("smollm-360m").with_overrides(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=256, num_heads=4,
+        num_kv_heads=2, head_dim=16, remat_policy="none")
+    STEPS = 4
+    ocfg = opt_mod.AdamWConfig(lr=3e-3, warmup_steps=1, total_steps=STEPS)
+    src = SyntheticLM(cfg.vocab_size, 16, max(n, 2), seed=9)
+    it = iter(src)
+    batches = [{k: jnp.asarray(v) for k, v in next(it).items()}
+               for _ in range(STEPS)]
+
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    layout = FsdpLayout(params, n, 1 << 22)
+    sharding = NamedSharding(mesh, P("data"))
+
+    def fresh_state():
+        shards = layout.shard_params(params, mesh, "data")
+        return shards, opt_mod.AdamWState(
+            jnp.zeros((), jnp.int32),
+            [jax.device_put(jnp.zeros_like(s), sharding) for s in shards],
+            [jax.device_put(jnp.zeros_like(s), sharding) for s in shards])
+
+    grad_fn, apply_fn, ag_fn, rs_fn = build_fsdp_programs(
+        cfg, ocfg, mesh, layout, axis="data")
+
+    # native reference: same programs, in-program byte movement
+    sh, st = fresh_state()
+    native_losses = []
+    for b in batches:
+        smets, flat_g = grad_fn(ag_fn(sh), b)
+        sh, st, mets = apply_fn(sh, st, rs_fn(flat_g), smets)
+        native_losses.append(float(np.float32(mets["loss"])))
+
+    # user backend: persistent engine handles + chained prefetch
+    eng = ProgressEngine()
+    spec = CollectiveSpec(backend="user", chunks=2)
+    red = FsdpReducer(mesh, "data", engine=eng, spec=spec,
+                      bucket_bytes=1 << 22)
+    sh, st = fresh_state()
+    user_losses = []
+    gather = red.igather(sh)                 # step 0: self-chained train
+    for b in batches:
+        flats = gather.wait(timeout=300)     # params for THIS step
+        red._note_gather(gather)
+        smets, flat_g = grad_fn(flats, b)
+        gshards = red.ireduce_scatter(flat_g).wait(timeout=300)
+        sh, st, mets = apply_fn(sh, st, gshards, smets)
+        # chain the NEXT step's gathers off the updated shards' compute
+        # futures: each bucket's all-gather starts the moment its shard
+        # materializes, behind whatever XLA is still running
+        gather = red.igather(sh, after=[red.future(s) for s in sh])
+        user_losses.append(float(np.float32(mets["loss"])))
+    gather.wait(timeout=300)                 # drain the last prefetch
+    overlap = red.prefetch_overlap
+    red.close()
+
+    assert user_losses == native_losses, (user_losses, native_losses)
+    print(f"fsdp: {layout.num_buckets} bucket(s) sharded over data={n}, "
+          f"{STEPS} steps bit-identical to the native "
+          f"all_gather/psum_scatter path (loss {user_losses[-1]:.6f}); "
+          f"prefetch overlap {overlap:.3f} across {red.gathers} chained "
+          f"gathers")
 
 
 def pipeline_1f1b():
@@ -553,4 +658,5 @@ if __name__ == "__main__":
     continuous_batching()
     fault_tolerance()
     pipeline_1f1b()
+    fsdp_sharded_training()
     print("tour OK")

@@ -1,0 +1,71 @@
+"""User-level collectives (paper §4.7) — the canonical import surface.
+
+Everything a caller needs rides one shape:
+
+* ``CollectiveSpec`` — the frozen config record (backend, algorithm,
+  chunks, round_batch) accepted by every surface: ``ServeEngine``,
+  ``TrainLoopConfig``, ``UserCollectiveStep``/``FsdpStep``, both
+  launchers, and every factory below.
+* one-shot nonblocking ops: ``iallreduce`` / ``ireduce_scatter`` /
+  ``iallgather`` / ``ialltoall`` ``(x, mesh, axis, *, spec=None, ...)``.
+* persistent handle factories: ``allreduce_init`` /
+  ``reduce_scatter_init`` / ``allgather_init`` / ``alltoall_init`` and
+  the p2p family ``channel_init`` / ``send_init`` / ``recv_init``, all
+  ``(like, mesh, axis, *, spec=None, epoch=None, stream=None,
+  engine=None, ...)``.
+* overlap machinery: ``EngineGradReducer`` (replicated grads) and the
+  ZeRO-sharded ``FsdpReducer`` / ``FsdpLayout``.
+
+Submodules stay importable directly (``repro.collectives.nonblocking``
+etc.); ``schedules`` is re-exported as ``S`` for decomposition helpers.
+"""
+from repro.collectives import schedules as S
+from repro.collectives.nonblocking import (
+    CollectiveRequest,
+    CollectiveSpec,
+    MembershipEpoch,
+    MembershipError,
+    PersistentCollective,
+    UserCollectives,
+    allgather_init,
+    allreduce_init,
+    alltoall_init,
+    default_collectives,
+    iallgather,
+    iallreduce,
+    ialltoall,
+    ireduce_scatter,
+    reduce_scatter_init,
+    spec_from_legacy,
+)
+from repro.collectives.overlap import (
+    EngineGradReducer,
+    FsdpGather,
+    FsdpLayout,
+    FsdpReducer,
+    FsdpReduction,
+)
+from repro.collectives.p2p import (
+    P2P,
+    P2PChannel,
+    PersistentRecv,
+    PersistentSend,
+    channel_init,
+    default_p2p,
+    recv_init,
+    send_init,
+)
+
+__all__ = [
+    "S",
+    "CollectiveRequest", "CollectiveSpec", "MembershipEpoch",
+    "MembershipError", "PersistentCollective", "UserCollectives",
+    "spec_from_legacy", "default_collectives",
+    "iallreduce", "ireduce_scatter", "iallgather", "ialltoall",
+    "allreduce_init", "reduce_scatter_init", "allgather_init",
+    "alltoall_init",
+    "EngineGradReducer",
+    "FsdpGather", "FsdpLayout", "FsdpReducer", "FsdpReduction",
+    "P2P", "P2PChannel", "PersistentRecv", "PersistentSend",
+    "default_p2p", "channel_init", "send_init", "recv_init",
+]

@@ -70,9 +70,11 @@ handoff happened.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import itertools
 import threading
+import warnings
 import weakref
 from typing import Any, Callable, Optional
 
@@ -175,6 +177,35 @@ def _ag_join(parts, n: int):
     stacked = jnp.stack(blocks, axis=-2)          # [..., n, K, m]
     return stacked.reshape(parts[0].shape[:-1]
                            + (n * len(parts) * blocks[0].shape[-1],))
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _rs_stack(x, n: int, chunks: int):
+    """Interleaved RS split as ONE stacked chunk batch: [..., D] ->
+    [..., k, n*m] where row c is ``_rs_split``'s chunk c — the
+    chunk-stacked-fusion analogue of ``_stack_last`` for the
+    reduce-scatter interleave."""
+    m = x.shape[-1] // (n * chunks)
+    v = x.reshape(x.shape[:-1] + (n, chunks, m))
+    v = jnp.moveaxis(v, -2, -3)                   # [..., k, n, m]
+    return v.reshape(x.shape[:-1] + (chunks, n * m))
+
+
+@jax.jit
+def _rs_unstack(y):
+    """Stacked RS output [..., k, m] -> native rank block [..., k*m]
+    (identical to ``_rs_join`` of the k per-chunk outputs)."""
+    return y.reshape(y.shape[:-2] + (y.shape[-2] * y.shape[-1],))
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _ag_unstack(y, n: int):
+    """Stacked AG output [..., k, n*m] -> native [..., n*(k*m)]
+    (identical to ``_ag_join`` of the k per-chunk outputs)."""
+    k, w = y.shape[-2], y.shape[-1]
+    v = y.reshape(y.shape[:-2] + (k, n, w // n))
+    v = jnp.moveaxis(v, -3, -2)                   # [..., n, k, m]
+    return v.reshape(y.shape[:-2] + (n * k * (w // n),))
 
 
 # ---------------------------------------------------------------------------
@@ -394,44 +425,93 @@ def _ring_allreduce_schedule(mesh, axis, n, reverse):
     return _cached(("ring", mesh, axis, n, reverse), build)
 
 
+def _hd_halve_round(axis, n, mask):
+    """One recursive-halving round: keep the half selected by rank bit
+    ``mask``, ship the other half to the XOR partner, combine."""
+    perm = [(i, i ^ mask) for i in range(n)]
+
+    def halve(cur):
+        idx = S._axis_index(axis)
+        width = cur.shape[-1] // 2
+        lo, hi = cur[..., :width], cur[..., width:]
+        keep_hi = ((idx // mask) % 2) == 1
+        send = jnp.where(keep_hi, lo, hi)
+        recv = jax.lax.ppermute(send, axis, perm)
+        mine = jnp.where(keep_hi, hi, lo)
+        return mine + recv
+
+    return halve
+
+
+def _hd_double_round(axis, n, mask):
+    """One recursive-doubling round: exchange with the XOR partner and
+    concat in rank-bit order (inverse of the halving round)."""
+    perm = [(i, i ^ mask) for i in range(n)]
+
+    def double(cur):
+        idx = S._axis_index(axis)
+        recv = jax.lax.ppermute(cur, axis, perm)
+        keep_hi = ((idx // mask) % 2) == 1
+        lo = jnp.where(keep_hi, recv, cur)
+        hi = jnp.where(keep_hi, cur, recv)
+        return jnp.concatenate([lo, hi], axis=-1)
+
+    return double
+
+
 def _halving_doubling_schedule(mesh, axis, n):
     def build():
         stages = []
         first = True
         mask = n >> 1
         while mask >= 1:                      # reduce-scatter by halving
-            perm = [(i, i ^ mask) for i in range(n)]
-
-            def halve(cur, perm=perm, mask=mask):
-                idx = S._axis_index(axis)
-                width = cur.shape[-1] // 2
-                lo, hi = cur[..., :width], cur[..., width:]
-                keep_hi = ((idx // mask) % 2) == 1
-                send = jnp.where(keep_hi, lo, hi)
-                recv = jax.lax.ppermute(send, axis, perm)
-                mine = jnp.where(keep_hi, hi, lo)
-                return mine + recv
-
-            stages.append(_RoundStage(halve, donate=not first))
+            stages.append(_RoundStage(_hd_halve_round(axis, n, mask),
+                                      donate=not first))
             first = False
             mask >>= 1
         mask = 1
         while mask < n:                       # all-gather by doubling
-            perm = [(i, i ^ mask) for i in range(n)]
-
-            def double(cur, perm=perm, mask=mask):
-                idx = S._axis_index(axis)
-                recv = jax.lax.ppermute(cur, axis, perm)
-                keep_hi = ((idx // mask) % 2) == 1
-                lo = jnp.where(keep_hi, recv, cur)
-                hi = jnp.where(keep_hi, cur, recv)
-                return jnp.concatenate([lo, hi], axis=-1)
-
-            stages.append(_RoundStage(double))
+            stages.append(_RoundStage(_hd_double_round(axis, n, mask)))
             mask <<= 1
         return _RoundSchedule(mesh, axis, stages)
 
     return _cached(("hd", mesh, axis, n), build)
+
+
+def _hd_reduce_scatter_schedule(mesh, axis, n):
+    """The halving phase standing alone: log2 n rounds, payload halving
+    each round.  Rank bits are consumed MSB-first, so rank r finishes
+    holding the contiguous rank-r block — the same output placement as
+    the ring schedule / tiled ``psum_scatter``."""
+    def build():
+        stages = []
+        first = True
+        mask = n >> 1
+        while mask >= 1:
+            stages.append(_RoundStage(_hd_halve_round(axis, n, mask),
+                                      donate=not first))
+            first = False
+            mask >>= 1
+        return _RoundSchedule(mesh, axis, stages)
+
+    return _cached(("hd_rs", mesh, axis, n), build)
+
+
+def _hd_all_gather_schedule(mesh, axis, n):
+    """The doubling phase standing alone: starting from rank r holding
+    its own block, log2 n concat rounds reassemble native rank order."""
+    def build():
+        stages = []
+        first = True
+        mask = 1
+        while mask < n:
+            stages.append(_RoundStage(_hd_double_round(axis, n, mask),
+                                      donate=not first))
+            first = False
+            mask <<= 1
+        return _RoundSchedule(mesh, axis, stages)
+
+    return _cached(("hd_ag", mesh, axis, n), build)
 
 
 def _ring_reduce_scatter_schedule(mesh, axis, n):
@@ -825,6 +905,104 @@ def _check_payload(x, op: str) -> None:
 
 
 # ---------------------------------------------------------------------------
+# CollectiveSpec — the one collective-tuning config object
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveSpec:
+    """How collectives run: backend + algorithm + chunking + fusion.
+
+    One frozen value replaces the ``collective_backend`` /
+    ``collective_algorithm`` / ``collective_chunks`` /
+    ``collective_round_batch`` kwarg sprawl that every surface
+    (``ServeEngine``, ``TrainLoopConfig``, ``UserCollectiveStep``, both
+    launchers) used to duplicate.  Validation is eager — a bad algorithm
+    name or chunk count raises at construction, never from inside a
+    round program.  ``resolve(axis_size)`` applies the power-of-two
+    fallback for a concrete axis (still eager: before any tracing).
+    """
+
+    backend: str = "native"
+    algorithm: str = "ring"
+    chunks: int = 1
+    round_batch: int | None = None
+
+    def __post_init__(self):
+        if self.backend not in ("native", "user"):
+            raise ValueError(
+                f"CollectiveSpec.backend must be 'native' or 'user', "
+                f"got {self.backend!r}")
+        if self.algorithm not in S.ALGORITHMS:
+            raise ValueError(
+                f"CollectiveSpec.algorithm {self.algorithm!r} unknown; "
+                f"options: {sorted(S.ALGORITHMS)}")
+        if int(self.chunks) < 1:
+            raise ValueError(
+                f"CollectiveSpec.chunks must be >= 1, got {self.chunks}")
+        if self.round_batch is not None and int(self.round_batch) < 0:
+            raise ValueError(
+                f"CollectiveSpec.round_batch must be None (auto) or "
+                f">= 0, got {self.round_batch}")
+
+    @property
+    def user(self) -> bool:
+        return self.backend == "user"
+
+    def resolve(self, axis_size: int) -> "CollectiveSpec":
+        """The pow2 check for a concrete axis: power-of-two-only
+        algorithms fall back to ring (with the resolve_algorithm
+        warning) on other sizes."""
+        algorithm = S.resolve_algorithm(self.algorithm, axis_size)
+        if algorithm == self.algorithm:
+            return self
+        return dataclasses.replace(self, algorithm=algorithm)
+
+
+# one warning per config surface per process: the point is a visible
+# nudge, not a firehose on every construction in a serving loop
+_legacy_kwargs_warned: set[str] = set()
+
+
+def spec_from_legacy(spec: "CollectiveSpec | None" = None, *,
+                     surface: str, backend: str | None = None,
+                     algorithm: str | None = None,
+                     chunks: int | None = None,
+                     round_batch: int | None = None,
+                     default: "CollectiveSpec | None" = None,
+                     ) -> "CollectiveSpec":
+    """Coerce one surface's legacy ``collective_*`` kwargs into a
+    :class:`CollectiveSpec` (deprecation shim, one release).
+
+    ``spec`` wins when given (mixing it with legacy kwargs raises — a
+    silent precedence rule would hide config bugs).  Any legacy kwarg
+    emits a ``DeprecationWarning`` once per ``surface`` per process.
+    """
+    legacy = {k: v for k, v in (("backend", backend),
+                                ("algorithm", algorithm),
+                                ("chunks", chunks),
+                                ("round_batch", round_batch))
+              if v is not None}
+    if spec is not None:
+        if legacy:
+            raise ValueError(
+                f"{surface}: pass either collective_spec or the legacy "
+                f"collective_* kwargs, not both (got {sorted(legacy)})")
+        return spec
+    base = default if default is not None else CollectiveSpec()
+    if not legacy:
+        return base
+    if surface not in _legacy_kwargs_warned:
+        _legacy_kwargs_warned.add(surface)
+        warnings.warn(
+            f"{surface}: the collective_backend / collective_algorithm / "
+            f"collective_chunks / collective_round_batch kwargs are "
+            f"deprecated; pass collective_spec=CollectiveSpec(...) "
+            f"(repro.collectives) instead",
+            DeprecationWarning, stacklevel=3)
+    return dataclasses.replace(base, **legacy)
+
+
+# ---------------------------------------------------------------------------
 # Issue plans (everything about a collective that does NOT depend on the
 # payload *values* — so persistent handles can fix it once)
 # ---------------------------------------------------------------------------
@@ -944,7 +1122,8 @@ def _plan_allreduce(mesh, axis: str, shape, dtype, algorithm: str,
                  scheds, split, join, nbytes, batch)
 
 
-def _plan_reduce_scatter(mesh, axis: str, shape, dtype, chunks: int,
+def _plan_reduce_scatter(mesh, axis: str, shape, dtype,
+                         algorithm: str = "ring", chunks: int = 1,
                          round_batch=None) -> _Plan:
     n = _axis_len(mesh, axis)
     D = shape[-1]
@@ -957,20 +1136,35 @@ def _plan_reduce_scatter(mesh, axis: str, shape, dtype, chunks: int,
         return _Plan("reduce_scatter", "ring", tuple(shape), dtype, mesh,
                      axis, [_identity_schedule(mesh, axis)],
                      lambda x: [x], _first, nbytes, 1)
+    algorithm = S.resolve_rs_ag_algorithm(algorithm, n, op="reduce_scatter")
     k = _largest_divisor_leq(D // n, max(1, int(chunks)))
-    base = _ring_reduce_scatter_schedule(mesh, axis, n)
+    base = (_hd_reduce_scatter_schedule(mesh, axis, n)
+            if algorithm == "halving_doubling"
+            else _ring_reduce_scatter_schedule(mesh, axis, n))
     batch = _resolve_round_batch(round_batch, nbytes, base.num_rounds)
     if k == 1:
         split = lambda x: [x]                                   # noqa: E731
         join = _first
+        scheds = [base]
+    elif batch >= base.num_rounds:
+        # chunk-stacked fusion (the PR-4 small-payload regime): all K
+        # interleaved chunks ride ONE fused program as a stacked batch
+        # dim.  Bit-identical to the per-chunk issue — the round bodies
+        # act on the last dim only, and each element's summation order
+        # depends on ring position / partner masks, not its chunk row.
+        split = lambda x: [_rs_stack(x, n, k)]                  # noqa: E731
+        join = lambda parts: _rs_unstack(parts[0])              # noqa: E731
+        scheds = [base]
     else:
         split = lambda x: list(_rs_split(x, n, k))              # noqa: E731
         join = lambda parts: _rs_join(tuple(parts))             # noqa: E731
-    return _Plan("reduce_scatter", "ring", tuple(shape), dtype, mesh, axis,
-                 [base] * k, split, join, nbytes, batch)
+        scheds = [base] * k
+    return _Plan("reduce_scatter", algorithm, tuple(shape), dtype, mesh,
+                 axis, scheds, split, join, nbytes, batch)
 
 
-def _plan_allgather(mesh, axis: str, shape, dtype, chunks: int,
+def _plan_allgather(mesh, axis: str, shape, dtype,
+                    algorithm: str = "ring", chunks: int = 1,
                     round_batch=None) -> _Plan:
     n = _axis_len(mesh, axis)
     nbytes = _payload_bytes(shape, dtype)
@@ -978,18 +1172,29 @@ def _plan_allgather(mesh, axis: str, shape, dtype, chunks: int,
         return _Plan("allgather", "ring", tuple(shape), dtype, mesh, axis,
                      [_identity_schedule(mesh, axis)],
                      lambda x: [x], _first, nbytes, 1)
+    algorithm = S.resolve_rs_ag_algorithm(algorithm, n, op="allgather")
     d = shape[-1]
     k = _largest_divisor_leq(d, max(1, int(chunks)))
-    base = _ring_all_gather_schedule(mesh, axis, n)
+    base = (_hd_all_gather_schedule(mesh, axis, n)
+            if algorithm == "halving_doubling"
+            else _ring_all_gather_schedule(mesh, axis, n))
     batch = _resolve_round_batch(round_batch, nbytes, base.num_rounds)
     if k == 1:
         split = lambda x: [x]                                   # noqa: E731
         join = _first
+        scheds = [base]
+    elif batch >= base.num_rounds:
+        # chunk-stacked fusion: contiguous chunks as a batch dim, one
+        # fused program, inverse interleave on the way out
+        split = lambda x: [_stack_last(x, k, d // k)]           # noqa: E731
+        join = lambda parts: _ag_unstack(parts[0], n)           # noqa: E731
+        scheds = [base]
     else:
         split = lambda x: list(_split_last(x, k, d // k))       # noqa: E731
         join = lambda parts: _ag_join(tuple(parts), n)          # noqa: E731
-    return _Plan("allgather", "ring", tuple(shape), dtype, mesh, axis,
-                 [base] * k, split, join, nbytes, batch)
+        scheds = [base] * k
+    return _Plan("allgather", algorithm, tuple(shape), dtype, mesh, axis,
+                 scheds, split, join, nbytes, batch)
 
 
 def _plan_alltoall(mesh, axis: str, shape, dtype, chunks: int,
@@ -1062,52 +1267,72 @@ class UserCollectives:
 
     # -- the collectives ---------------------------------------------------
     def iallreduce(self, x, mesh, axis: str, *, algorithm: str = "ring",
-                   chunks: int = 1,
-                   round_batch: int | None = None) -> CollectiveRequest:
+                   chunks: int = 1, round_batch: int | None = None,
+                   spec: "CollectiveSpec | None" = None) -> CollectiveRequest:
         """Nonblocking allreduce of ``x`` (leading dim sharded on
         ``axis``), bit-identical to ``psum`` under the same shard_map
         layout.  ``algorithm`` is any ``schedules.ALGORITHMS`` key;
         power-of-two-only algorithms fall back to ring with a warning on
         other axis sizes (eager — nothing raises from inside jit).
         ``round_batch`` fuses that many consecutive rounds into one
-        jitted dispatch per chunk (None/0: auto from payload size)."""
+        jitted dispatch per chunk (None/0: auto from payload size).
+        ``spec`` (a :class:`CollectiveSpec`) overrides all three."""
         self._check_open()
         _check_payload(x, "allreduce")
+        if spec is not None:
+            algorithm, chunks, round_batch = \
+                spec.algorithm, spec.chunks, spec.round_batch
         plan = _plan_allreduce(mesh, axis, tuple(x.shape),
                                getattr(x, "dtype", jnp.float32),
                                algorithm, chunks, round_batch)
         return self._issue_plan(plan, x)
 
-    def ireduce_scatter(self, x, mesh, axis: str, *, chunks: int = 1,
-                        round_batch: int | None = None) -> CollectiveRequest:
-        """Nonblocking ring reduce-scatter (matches tiled
-        ``psum_scatter`` on the last dim).  Requires the last dim
-        divisible by the axis size (validated eagerly)."""
+    def ireduce_scatter(self, x, mesh, axis: str, *,
+                        algorithm: str = "ring", chunks: int = 1,
+                        round_batch: int | None = None,
+                        spec: "CollectiveSpec | None" = None,
+                        ) -> CollectiveRequest:
+        """Nonblocking reduce-scatter (matches tiled ``psum_scatter`` on
+        the last dim).  Requires the last dim divisible by the axis size
+        (validated eagerly).  ``algorithm`` is ``ring`` or
+        ``halving_doubling`` (the halving phase alone); other names fall
+        back to ring with a warning."""
         self._check_open()
         _check_payload(x, "reduce_scatter")
+        if spec is not None:
+            algorithm, chunks, round_batch = \
+                spec.algorithm, spec.chunks, spec.round_batch
         plan = _plan_reduce_scatter(mesh, axis, tuple(x.shape),
                                     getattr(x, "dtype", jnp.float32),
-                                    chunks, round_batch)
+                                    algorithm, chunks, round_batch)
         return self._issue_plan(plan, x)
 
-    def iallgather(self, x, mesh, axis: str, *, chunks: int = 1,
-                   round_batch: int | None = None) -> CollectiveRequest:
-        """Nonblocking ring all-gather (matches tiled ``all_gather`` on
-        the last dim)."""
+    def iallgather(self, x, mesh, axis: str, *, algorithm: str = "ring",
+                   chunks: int = 1, round_batch: int | None = None,
+                   spec: "CollectiveSpec | None" = None) -> CollectiveRequest:
+        """Nonblocking all-gather (matches tiled ``all_gather`` on the
+        last dim).  ``algorithm`` is ``ring`` or ``halving_doubling``
+        (the doubling phase alone)."""
         self._check_open()
         _check_payload(x, "allgather")
+        if spec is not None:
+            algorithm, chunks, round_batch = \
+                spec.algorithm, spec.chunks, spec.round_batch
         plan = _plan_allgather(mesh, axis, tuple(x.shape),
                                getattr(x, "dtype", jnp.float32),
-                               chunks, round_batch)
+                               algorithm, chunks, round_batch)
         return self._issue_plan(plan, x)
 
     def ialltoall(self, x, mesh, axis: str, *, chunks: int = 1,
-                  round_batch: int | None = None) -> CollectiveRequest:
+                  round_batch: int | None = None,
+                  spec: "CollectiveSpec | None" = None) -> CollectiveRequest:
         """Nonblocking Bruck all-to-all over the leading block dim
         (matches ``bruck_alltoall`` / native ``all_to_all``).  The
         global leading dim must be n·n blocks (n per device)."""
         self._check_open()
         _check_payload(x, "alltoall")
+        if spec is not None:
+            chunks, round_batch = spec.chunks, spec.round_batch
         plan = _plan_alltoall(mesh, axis, tuple(x.shape),
                               getattr(x, "dtype", jnp.float32),
                               chunks, round_batch)
@@ -1117,6 +1342,7 @@ class UserCollectives:
     def allreduce_init(self, x, mesh, axis: str, *,
                        algorithm: str = "ring", chunks: int = 1,
                        round_batch: int | None = None,
+                       spec: "CollectiveSpec | None" = None,
                        warmup: bool = True,
                        epoch: "MembershipEpoch | None" = None,
                        ) -> "PersistentCollective":
@@ -1126,9 +1352,15 @@ class UserCollectives:
         pre-compiled schedule; see :class:`PersistentCollective`.  Two
         handles with the same signature share round programs through the
         schedule cache, so a second init is cheap.  ``epoch`` (default:
-        the context's) makes the handle membership-aware."""
+        the context's) makes the handle membership-aware; ``spec`` (a
+        :class:`CollectiveSpec`) overrides algorithm/chunks/round_batch
+        and is the canonical form — the individual kwargs remain for
+        compatibility."""
         self._check_open()
         _check_payload(x, "allreduce")
+        if spec is not None:
+            algorithm, chunks, round_batch = \
+                spec.algorithm, spec.chunks, spec.round_batch
         shape = tuple(x.shape)
         dtype = getattr(x, "dtype", jnp.float32)
         replan = lambda m, a: _plan_allreduce(        # noqa: E731
@@ -1137,43 +1369,56 @@ class UserCollectives:
             self, replan(mesh, axis), warmup=warmup,
             epoch=epoch if epoch is not None else self.epoch, replan=replan)
 
-    def reduce_scatter_init(self, x, mesh, axis: str, *, chunks: int = 1,
+    def reduce_scatter_init(self, x, mesh, axis: str, *,
+                            algorithm: str = "ring", chunks: int = 1,
                             round_batch: int | None = None,
+                            spec: "CollectiveSpec | None" = None,
                             warmup: bool = True,
                             epoch: "MembershipEpoch | None" = None,
                             ) -> "PersistentCollective":
         self._check_open()
         _check_payload(x, "reduce_scatter")
+        if spec is not None:
+            algorithm, chunks, round_batch = \
+                spec.algorithm, spec.chunks, spec.round_batch
         shape = tuple(x.shape)
         dtype = getattr(x, "dtype", jnp.float32)
         replan = lambda m, a: _plan_reduce_scatter(   # noqa: E731
-            m, a, shape, dtype, chunks, round_batch)
+            m, a, shape, dtype, algorithm, chunks, round_batch)
         return PersistentCollective(
             self, replan(mesh, axis), warmup=warmup,
             epoch=epoch if epoch is not None else self.epoch, replan=replan)
 
-    def allgather_init(self, x, mesh, axis: str, *, chunks: int = 1,
+    def allgather_init(self, x, mesh, axis: str, *,
+                       algorithm: str = "ring", chunks: int = 1,
                        round_batch: int | None = None,
+                       spec: "CollectiveSpec | None" = None,
                        warmup: bool = True,
                        epoch: "MembershipEpoch | None" = None,
                        ) -> "PersistentCollective":
         self._check_open()
         _check_payload(x, "allgather")
+        if spec is not None:
+            algorithm, chunks, round_batch = \
+                spec.algorithm, spec.chunks, spec.round_batch
         shape = tuple(x.shape)
         dtype = getattr(x, "dtype", jnp.float32)
         replan = lambda m, a: _plan_allgather(        # noqa: E731
-            m, a, shape, dtype, chunks, round_batch)
+            m, a, shape, dtype, algorithm, chunks, round_batch)
         return PersistentCollective(
             self, replan(mesh, axis), warmup=warmup,
             epoch=epoch if epoch is not None else self.epoch, replan=replan)
 
     def alltoall_init(self, x, mesh, axis: str, *, chunks: int = 1,
                       round_batch: int | None = None,
+                      spec: "CollectiveSpec | None" = None,
                       warmup: bool = True,
                       epoch: "MembershipEpoch | None" = None,
                       ) -> "PersistentCollective":
         self._check_open()
         _check_payload(x, "alltoall")
+        if spec is not None:
+            chunks, round_batch = spec.chunks, spec.round_batch
         shape = tuple(x.shape)
         dtype = getattr(x, "dtype", jnp.float32)
         replan = lambda m, a: _plan_alltoall(         # noqa: E731
@@ -1525,43 +1770,113 @@ def default_collectives(engine: Optional[ProgressEngine] = None,
     return ctx
 
 
-def iallreduce(x, mesh, axis: str, *, engine: Optional[ProgressEngine] = None,
+def _default_ctx(engine, stream):
+    """Context for the module-level factories: the engine's default
+    collectives, optionally pinned to an explicit ``stream`` (mismatches
+    against an existing default context raise — see
+    ``default_collectives``)."""
+    if stream is not None:
+        return default_collectives(engine, stream=stream)
+    return default_collectives(engine)
+
+
+# The canonical handle-factory shape (all four collectives, and the p2p
+# channel factories in collectives/p2p.py, follow it):
+#
+#     <op>_init(like, mesh, axis_name, *, spec=None, epoch=None,
+#               stream=None, engine=None, warmup=True)
+#
+# ``like`` carries the payload signature (array or ShapeDtypeStruct),
+# ``spec`` a CollectiveSpec; the legacy algorithm/chunks/round_batch
+# kwargs remain accepted for one release.
+
+def iallreduce(x, mesh, axis: str, *, spec: CollectiveSpec | None = None,
+               engine: Optional[ProgressEngine] = None,
+               stream: Optional[Stream] = None,
                algorithm: str = "ring", chunks: int = 1,
                round_batch: int | None = None) -> CollectiveRequest:
-    return default_collectives(engine).iallreduce(
+    return _default_ctx(engine, stream).iallreduce(
         x, mesh, axis, algorithm=algorithm, chunks=chunks,
-        round_batch=round_batch)
+        round_batch=round_batch, spec=spec)
 
 
 def ireduce_scatter(x, mesh, axis: str, *,
+                    spec: CollectiveSpec | None = None,
                     engine: Optional[ProgressEngine] = None,
-                    chunks: int = 1,
+                    stream: Optional[Stream] = None,
+                    algorithm: str = "ring", chunks: int = 1,
                     round_batch: int | None = None) -> CollectiveRequest:
-    return default_collectives(engine).ireduce_scatter(
-        x, mesh, axis, chunks=chunks, round_batch=round_batch)
+    return _default_ctx(engine, stream).ireduce_scatter(
+        x, mesh, axis, algorithm=algorithm, chunks=chunks,
+        round_batch=round_batch, spec=spec)
 
 
-def iallgather(x, mesh, axis: str, *,
+def iallgather(x, mesh, axis: str, *, spec: CollectiveSpec | None = None,
                engine: Optional[ProgressEngine] = None,
-               chunks: int = 1,
+               stream: Optional[Stream] = None,
+               algorithm: str = "ring", chunks: int = 1,
                round_batch: int | None = None) -> CollectiveRequest:
-    return default_collectives(engine).iallgather(
-        x, mesh, axis, chunks=chunks, round_batch=round_batch)
+    return _default_ctx(engine, stream).iallgather(
+        x, mesh, axis, algorithm=algorithm, chunks=chunks,
+        round_batch=round_batch, spec=spec)
 
 
-def ialltoall(x, mesh, axis: str, *,
+def ialltoall(x, mesh, axis: str, *, spec: CollectiveSpec | None = None,
               engine: Optional[ProgressEngine] = None,
+              stream: Optional[Stream] = None,
               chunks: int = 1,
               round_batch: int | None = None) -> CollectiveRequest:
-    return default_collectives(engine).ialltoall(
-        x, mesh, axis, chunks=chunks, round_batch=round_batch)
+    return _default_ctx(engine, stream).ialltoall(
+        x, mesh, axis, chunks=chunks, round_batch=round_batch, spec=spec)
 
 
 def allreduce_init(x, mesh, axis: str, *,
+                   spec: CollectiveSpec | None = None,
+                   epoch: "MembershipEpoch | None" = None,
+                   stream: Optional[Stream] = None,
                    engine: Optional[ProgressEngine] = None,
                    algorithm: str = "ring", chunks: int = 1,
                    round_batch: int | None = None,
                    warmup: bool = True) -> PersistentCollective:
-    return default_collectives(engine).allreduce_init(
+    return _default_ctx(engine, stream).allreduce_init(
         x, mesh, axis, algorithm=algorithm, chunks=chunks,
-        round_batch=round_batch, warmup=warmup)
+        round_batch=round_batch, spec=spec, warmup=warmup, epoch=epoch)
+
+
+def reduce_scatter_init(x, mesh, axis: str, *,
+                        spec: CollectiveSpec | None = None,
+                        epoch: "MembershipEpoch | None" = None,
+                        stream: Optional[Stream] = None,
+                        engine: Optional[ProgressEngine] = None,
+                        algorithm: str = "ring", chunks: int = 1,
+                        round_batch: int | None = None,
+                        warmup: bool = True) -> PersistentCollective:
+    return _default_ctx(engine, stream).reduce_scatter_init(
+        x, mesh, axis, algorithm=algorithm, chunks=chunks,
+        round_batch=round_batch, spec=spec, warmup=warmup, epoch=epoch)
+
+
+def allgather_init(x, mesh, axis: str, *,
+                   spec: CollectiveSpec | None = None,
+                   epoch: "MembershipEpoch | None" = None,
+                   stream: Optional[Stream] = None,
+                   engine: Optional[ProgressEngine] = None,
+                   algorithm: str = "ring", chunks: int = 1,
+                   round_batch: int | None = None,
+                   warmup: bool = True) -> PersistentCollective:
+    return _default_ctx(engine, stream).allgather_init(
+        x, mesh, axis, algorithm=algorithm, chunks=chunks,
+        round_batch=round_batch, spec=spec, warmup=warmup, epoch=epoch)
+
+
+def alltoall_init(x, mesh, axis: str, *,
+                  spec: CollectiveSpec | None = None,
+                  epoch: "MembershipEpoch | None" = None,
+                  stream: Optional[Stream] = None,
+                  engine: Optional[ProgressEngine] = None,
+                  chunks: int = 1,
+                  round_batch: int | None = None,
+                  warmup: bool = True) -> PersistentCollective:
+    return _default_ctx(engine, stream).alltoall_init(
+        x, mesh, axis, chunks=chunks,
+        round_batch=round_batch, spec=spec, warmup=warmup, epoch=epoch)

@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import collections
 import threading
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -265,6 +266,35 @@ class P2PChannel:
 # The p2p issue context
 # ---------------------------------------------------------------------------
 
+def _resolve_spec_partition(spec, partition):
+    """Normalize the p2p kwarg pair to (CollectiveSpec, PartitionSpec).
+
+    Historically p2p's ``spec=`` meant the payload PartitionSpec; every
+    other factory now takes a :class:`CollectiveSpec` under that name,
+    so the PartitionSpec moved to ``partition=``.  A PartitionSpec (or
+    tuple) arriving via ``spec=`` still works for one release with a
+    once-per-process DeprecationWarning.  A single ring hop has no
+    algorithm/chunking degrees of freedom, so of a CollectiveSpec only
+    the backend is meaningful — ``native`` is rejected eagerly (these
+    channels *are* the user backend)."""
+    if spec is not None and not isinstance(spec, NB.CollectiveSpec):
+        if "P2P.spec" not in NB._legacy_kwargs_warned:
+            NB._legacy_kwargs_warned.add("P2P.spec")
+            warnings.warn(
+                "p2p spec= now takes a CollectiveSpec like every other "
+                "collective factory; pass the payload PartitionSpec as "
+                "partition= (the old spelling works one more release)",
+                DeprecationWarning, stacklevel=4)
+        if partition is None:
+            partition = spec
+        spec = None
+    if spec is not None and not spec.user:
+        raise ValueError(
+            "p2p channels run on the user backend only; got "
+            f"spec.backend={spec.backend!r}")
+    return spec, partition
+
+
 class P2P(UserCollectives):
     """Issue context for user-space nonblocking point-to-point.
 
@@ -295,15 +325,19 @@ class P2P(UserCollectives):
 
     # -- one-shot matched pairs -------------------------------------------
     def isend(self, x, mesh, axis: str, *, tag: Any = 0,
-              reverse: bool = False, spec=None) -> CollectiveRequest:
+              reverse: bool = False, spec=None,
+              partition=None) -> CollectiveRequest:
         """Post the send half of a matched pair: ``x`` is the stacked
         ``[n, ...]`` payload (rank i's message in row i); each rank's
         slice ships one hop along the ring (``reverse`` flips the
         direction).  Returns a send handle that completes (value None)
         once the transfer retires.  The hop dispatches when the
-        matching ``irecv`` is posted — in either order."""
+        matching ``irecv`` is posted — in either order.  ``partition``
+        is the payload PartitionSpec (see
+        :func:`_resolve_spec_partition`)."""
         self._check_open()
-        key = (mesh, axis, tag, bool(reverse), _spec_key(spec))
+        spec, partition = _resolve_spec_partition(spec, partition)
+        key = (mesh, axis, tag, bool(reverse), _spec_key(partition))
         sreq = self._overlay_request("send")
         self.sends += 1
         with self._match_lock:
@@ -314,18 +348,20 @@ class P2P(UserCollectives):
                     key, collections.deque()).append((x, sreq))
                 self.unexpected += 1
         if rreq is not None:
-            self._match(key, x, sreq, rreq, spec)
+            self._match(key, x, sreq, rreq, partition)
         return sreq
 
     def irecv(self, like, mesh, axis: str, *, tag: Any = 0,
-              reverse: bool = False, spec=None) -> CollectiveRequest:
+              reverse: bool = False, spec=None,
+              partition=None) -> CollectiveRequest:
         """Post the receive half (``like`` fixes shape/dtype — an array
         or ShapeDtypeStruct).  Returns a handle completing with the
         received stacked array (row i+1 = what rank i sent).  Matches
         pending sends FIFO, else parks on the posted-receive queue."""
         self._check_open()
         del like  # shape/dtype ride with the send payload in SPMD
-        key = (mesh, axis, tag, bool(reverse), _spec_key(spec))
+        spec, partition = _resolve_spec_partition(spec, partition)
+        key = (mesh, axis, tag, bool(reverse), _spec_key(partition))
         rreq = self._overlay_request("recv")
         self.recvs += 1
         with self._match_lock:
@@ -336,55 +372,62 @@ class P2P(UserCollectives):
                     key, collections.deque()).append(rreq)
         if pair is not None:
             x, sreq = pair
-            self._match(key, x, sreq, rreq, spec)
+            self._match(key, x, sreq, rreq, partition)
         return rreq
 
     def sendrecv(self, x, mesh, axis: str, *, reverse: bool = False,
-                 spec=None) -> CollectiveRequest:
+                 spec=None, partition=None) -> CollectiveRequest:
         """One-shot fused pair: issue the hop now, return the receive
         handle (the common SPMD case where one driver is both sides)."""
         self._check_open()
+        spec, partition = _resolve_spec_partition(spec, partition)
         plan = _plan_sendrecv(mesh, axis, tuple(x.shape),
                               getattr(x, "dtype", jnp.float32),
-                              reverse=reverse, spec=spec)
+                              reverse=reverse, spec=partition)
         return self._issue_plan(plan, x)
 
     # -- persistent channels ----------------------------------------------
     def channel_init(self, like, mesh, axis: str, *, tag: Any = 0,
-                     reverse: bool = False, spec=None, warmup: bool = True,
+                     reverse: bool = False, spec=None, partition=None,
+                     warmup: bool = True,
                      epoch: "MembershipEpoch | None" = None) -> P2PChannel:
         """Build (or fetch) the persistent channel for this signature.
         One channel per (mesh, axis, tag, direction, shape, dtype):
         ``send_init`` and ``recv_init`` with the same signature return
         views of the same channel — that is the match."""
         self._check_open()
+        spec, partition = _resolve_spec_partition(spec, partition)
         shape = tuple(like.shape)
         dtype = getattr(like, "dtype", jnp.float32)
-        key = (mesh, axis, tag, bool(reverse), _spec_key(spec),
+        key = (mesh, axis, tag, bool(reverse), _spec_key(partition),
                shape, jnp.dtype(dtype))
         chan = self._channels.get(key)
         if chan is None:
             plan = _plan_sendrecv(mesh, axis, shape, dtype,
-                                  reverse=reverse, spec=spec)
+                                  reverse=reverse, spec=partition)
             chan = P2PChannel(self, plan, warmup=warmup, epoch=epoch)
             self._channels[key] = chan
         return chan
 
     def send_init(self, like, mesh, axis: str, *, tag: Any = 0,
-                  reverse: bool = False, spec=None, warmup: bool = True,
+                  reverse: bool = False, spec=None, partition=None,
+                  warmup: bool = True,
                   epoch: "MembershipEpoch | None" = None) -> PersistentSend:
         """MPI ``Send_init``: persistent send half for fixed-shape
         payloads like ``like``.  ``start(payload)`` re-issues the
         pre-compiled hop."""
         return self.channel_init(like, mesh, axis, tag=tag, reverse=reverse,
-                                 spec=spec, warmup=warmup, epoch=epoch).send
+                                 spec=spec, partition=partition,
+                                 warmup=warmup, epoch=epoch).send
 
     def recv_init(self, like, mesh, axis: str, *, tag: Any = 0,
-                  reverse: bool = False, spec=None, warmup: bool = True,
+                  reverse: bool = False, spec=None, partition=None,
+                  warmup: bool = True,
                   epoch: "MembershipEpoch | None" = None) -> PersistentRecv:
         """MPI ``Recv_init``: the matching persistent receive half."""
         return self.channel_init(like, mesh, axis, tag=tag, reverse=reverse,
-                                 spec=spec, warmup=warmup, epoch=epoch).recv
+                                 spec=spec, partition=partition,
+                                 warmup=warmup, epoch=epoch).recv
 
     # -- machinery ---------------------------------------------------------
     def _overlay_request(self, op: str) -> CollectiveRequest:
@@ -462,3 +505,44 @@ def default_p2p(engine=None, *, executor=None, **kw) -> P2P:
         ctx = P2P(eng, executor=executor, **kw)
         eng._default_p2p = ctx
     return ctx
+
+
+# ---------------------------------------------------------------------------
+# Canonical module-level factories (mirror nonblocking's *_init family):
+# ``<op>_init(like, mesh, axis, *, spec=None, epoch=None, stream=None,
+# engine=None, ...)`` on the per-engine default context.
+# ---------------------------------------------------------------------------
+
+def channel_init(like, mesh, axis: str, *, spec=None, tag: Any = 0,
+                 reverse: bool = False, partition=None, warmup: bool = True,
+                 epoch: "MembershipEpoch | None" = None, stream=None,
+                 engine=None) -> P2PChannel:
+    """Persistent matched send/recv channel on the default p2p context.
+    ``spec`` is a :class:`~repro.collectives.nonblocking.CollectiveSpec`
+    (user backend only); the payload PartitionSpec goes in
+    ``partition=``."""
+    ctx = default_p2p(engine, stream=stream) if stream is not None \
+        else default_p2p(engine)
+    return ctx.channel_init(like, mesh, axis, tag=tag, reverse=reverse,
+                            spec=spec, partition=partition, warmup=warmup,
+                            epoch=epoch)
+
+
+def send_init(like, mesh, axis: str, *, spec=None, tag: Any = 0,
+              reverse: bool = False, partition=None, warmup: bool = True,
+              epoch: "MembershipEpoch | None" = None, stream=None,
+              engine=None) -> PersistentSend:
+    """MPI ``Send_init`` on the default p2p context."""
+    return channel_init(like, mesh, axis, spec=spec, tag=tag, reverse=reverse,
+                        partition=partition, warmup=warmup, epoch=epoch,
+                        stream=stream, engine=engine).send
+
+
+def recv_init(like, mesh, axis: str, *, spec=None, tag: Any = 0,
+              reverse: bool = False, partition=None, warmup: bool = True,
+              epoch: "MembershipEpoch | None" = None, stream=None,
+              engine=None) -> PersistentRecv:
+    """MPI ``Recv_init`` on the default p2p context."""
+    return channel_init(like, mesh, axis, spec=spec, tag=tag, reverse=reverse,
+                        partition=partition, warmup=warmup, epoch=epoch,
+                        stream=stream, engine=engine).recv

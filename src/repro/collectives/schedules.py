@@ -206,6 +206,60 @@ def recursive_halving_doubling_allreduce(x: jax.Array, axis: str) -> jax.Array:
     return cur[..., :D]
 
 
+def recursive_halving_reduce_scatter(x: jax.Array, axis: str) -> jax.Array:
+    """Reduce-scatter by recursive halving — the first phase of
+    :func:`recursive_halving_doubling_allreduce` standing alone: log2 P
+    rounds, the payload halves each round.  The halving order consumes
+    rank bits MSB-first, so the block a rank finishes with is exactly its
+    own contiguous rank-r block — the same output placement as
+    ``ring_reduce_scatter`` / tiled ``psum_scatter``."""
+    n = _axis_size(axis)
+    if n & (n - 1):
+        raise ValueError("requires power-of-two size")
+    if n == 1:
+        return x
+    assert x.shape[-1] % n == 0, (x.shape[-1], n)
+    idx = _axis_index(axis)
+    cur = x
+    mask = n >> 1
+    while mask >= 1:
+        width = cur.shape[-1] // 2
+        perm = [(i, i ^ mask) for i in range(n)]
+        lo, hi = cur[..., :width], cur[..., width:]
+        keep_hi = ((idx // mask) % 2) == 1
+        send = jnp.where(keep_hi, lo, hi)
+        recv = jax.lax.ppermute(send, axis, perm)
+        mine = jnp.where(keep_hi, hi, lo)
+        cur = mine + recv
+        mask >>= 1
+    return cur
+
+
+def recursive_doubling_all_gather(x: jax.Array, axis: str) -> jax.Array:
+    """All-gather by recursive doubling — the second phase of
+    :func:`recursive_halving_doubling_allreduce` standing alone.
+    Starting from rank r holding block r, log2 P concat rounds reassemble
+    the full vector in native rank order (matches tiled
+    ``all_gather``)."""
+    n = _axis_size(axis)
+    if n & (n - 1):
+        raise ValueError("requires power-of-two size")
+    if n == 1:
+        return x
+    idx = _axis_index(axis)
+    cur = x
+    mask = 1
+    while mask < n:
+        perm = [(i, i ^ mask) for i in range(n)]
+        recv = jax.lax.ppermute(cur, axis, perm)
+        keep_hi = ((idx // mask) % 2) == 1
+        lo = jnp.where(keep_hi, recv, cur)
+        hi = jnp.where(keep_hi, cur, recv)
+        cur = jnp.concatenate([lo, hi], axis=-1)
+        mask <<= 1
+    return cur
+
+
 # ---------------------------------------------------------------------------
 # Bruck all-to-all (MoE dispatch)
 # ---------------------------------------------------------------------------
@@ -269,6 +323,31 @@ def resolve_algorithm(algorithm: str, axis_size: int, *,
             f"got {axis_size}; falling back to {fallback!r}",
             RuntimeWarning, stacklevel=3)
         return fallback
+    return algorithm
+
+
+# rs/ag only decompose for the algorithms that *contain* a reduce-scatter
+# or all-gather phase: the ring, and recursive halving/doubling (the
+# halving phase IS a reduce-scatter, the doubling phase IS an
+# all-gather).  The others are allreduce-shaped end to end.
+RS_AG_ALGORITHMS = frozenset({"ring", "halving_doubling"})
+
+
+def resolve_rs_ag_algorithm(algorithm: str, axis_size: int, *,
+                            op: str = "reduce_scatter") -> str:
+    """Eager (algorithm, axis size) validation for reduce-scatter /
+    all-gather decompositions: unknown names raise, power-of-two-only
+    algorithms fall back to ring on other sizes, and algorithm names with
+    no rs/ag phase (``bidir``, ``recursive_doubling``) fall back to ring
+    with a warning rather than failing deep inside a round program."""
+    algorithm = resolve_algorithm(algorithm, axis_size)
+    if algorithm not in RS_AG_ALGORITHMS:
+        import warnings
+        warnings.warn(
+            f"{algorithm} has no {op} decomposition (options: "
+            f"{sorted(RS_AG_ALGORITHMS)}); falling back to 'ring'",
+            RuntimeWarning, stacklevel=3)
+        return "ring"
     return algorithm
 
 

@@ -166,3 +166,28 @@ class StepWatchdog:
             self.on_hang()
             return True
         return False
+
+
+def monitor_mesh(engine: ProgressEngine, mesh, axis: str = "data", *,
+                 timeout: float, epoch=None, on_failure=None,
+                 clock=time.monotonic) -> HeartbeatMonitor:
+    """A :class:`HeartbeatMonitor` shaped to a (possibly 2-D) mesh.
+
+    One peer per rank of ``axis``; ``devices_per_peer`` is the product
+    of the *other* mesh dims, so losing one data rank on a
+    (data=2, model=2) mesh invalidates the epoch with the surviving
+    *device* count (what ``elastic.plan_mesh`` consumes), not the
+    surviving peer count.  This is the heartbeat wiring the FSDP
+    trainer uses: its persistent reduce-scatter/all-gather handles
+    registered under the same ``epoch`` fail exactly once on
+    invalidation and rebuild on the survivors' mesh."""
+    shape = dict(mesh.shape)
+    n = shape.get(axis, 1)
+    per = 1
+    for name, size in shape.items():
+        if name != axis:
+            per *= size
+    return HeartbeatMonitor(engine, [f"{axis}{i}" for i in range(n)],
+                            timeout=timeout, on_failure=on_failure,
+                            clock=clock, epoch=epoch,
+                            devices_per_peer=per)

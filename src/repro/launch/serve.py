@@ -12,9 +12,9 @@ collectives on the serve-collective stream:
 
 Continuous batching on a paged KV cache (length-bucketed admission,
 chunked prefill interleaved with decode, preemption under block
-pressure) replaces the fixed-slot cache with ``--cache-mode paged``:
+pressure) is the only cache layout — the fixed-slot path is retired:
 
-    PYTHONPATH=src python -m repro.launch.serve --cache-mode paged \
+    PYTHONPATH=src python -m repro.launch.serve \
         --slots 12 --kv-block-size 16 --kv-blocks 65 --requests 64
 """
 import argparse
@@ -34,11 +34,11 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--cache-mode", default="paged",
                     choices=["slots", "paged"],
-                    help="KV cache layout: a paged block pool with "
-                         "continuous batching (backlog admission, chunked "
-                         "prefill, preemption; the default — strictly "
-                         "better at equal cache bytes), or the monolithic "
-                         "per-slot buffers (--cache-mode slots)")
+                    help="KV cache layout; 'paged' (the only mode) is a "
+                         "paged block pool with continuous batching "
+                         "(backlog admission, chunked prefill, preemption)."
+                         "  'slots' is retired and errors with a migration "
+                         "hint.")
     ap.add_argument("--kv-block-size", type=int, default=16,
                     help="positions per KV block (paged mode)")
     ap.add_argument("--kv-blocks", type=int, default=0,
@@ -54,7 +54,7 @@ def main():
                     help="shard decode over a 'model' mesh axis of this "
                          "size (0 = unsharded)")
     ap.add_argument("--collective-backend", default="native",
-                    choices=["native", "user"],
+                    choices=["native", "user"],   # -> one CollectiveSpec
                     help="per-step logits all-gather: native in-program "
                          "lax.all_gather, or persistent user-space "
                          "allgather on the serve-collective stream")
@@ -88,6 +88,13 @@ def main():
                     help="print progress statistics after serving")
     args = ap.parse_args()
 
+    if args.cache_mode == "slots":
+        raise SystemExit(
+            "--cache-mode slots was retired: the paged pool serves the "
+            "same bytes at block granularity.  Drop the flag, or mimic "
+            "fixed lanes with --kv-block-size B --kv-blocks "
+            "(slots*max_seq//B + 1).")
+
     if args.devices:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices} "
@@ -99,8 +106,13 @@ def main():
     from repro.core import ProgressEngine, ProgressExecutor
     from repro.core import stats as stats_mod
     from repro.models import registry
+    from repro.collectives.nonblocking import CollectiveSpec
     from repro.serve.engine import GenRequest, ServeEngine
     from examples.train_lm import SCALES
+
+    spec = CollectiveSpec(backend=args.collective_backend,
+                          chunks=args.collective_chunks,
+                          round_batch=args.collective_round_batch or None)
 
     cfg = get_config(args.arch)
     overrides = dict(SCALES[args.scale])
@@ -160,11 +172,7 @@ def main():
                       max_seq=args.max_seq, executor=executor,
                       continuation_policy=args.continuation_policy,
                       continuation_max_drain=args.continuation_max_drain,
-                      mesh=mesh, collective_backend=args.collective_backend,
-                      collective_chunks=args.collective_chunks,
-                      collective_round_batch=args.collective_round_batch
-                      or None,
-                      cache_mode=args.cache_mode,
+                      mesh=mesh, collective_spec=spec,
                       kv_block_size=args.kv_block_size,
                       kv_blocks=args.kv_blocks or None,
                       prefill_chunk=args.prefill_chunk,
@@ -207,7 +215,7 @@ def main():
             heartbeat.beat(peer)
     snap = stats_mod.collect(eng, executor)   # before close drops the queue
     lat = srv.latency_snapshot()              # before close, too
-    sched = srv.scheduler_snapshot() if args.cache_mode == "paged" else None
+    sched = srv.scheduler_snapshot()
     srv.close(timeout=60)
     if executor is not None:
         executor.shutdown(drain=True, timeout=60)

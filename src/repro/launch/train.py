@@ -42,6 +42,19 @@ def main():
     ap.add_argument("--collective-round-batch", type=int, default=0,
                     help="rounds fused per jitted dispatch in the user "
                          "backend (0 = auto from bucket size)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="ZeRO-style FSDP over the mesh's data axis: "
+                         "params + optimizer state sharded into flat "
+                         "per-dtype buckets, grads reduce-scattered "
+                         "(half the wire bytes of allreduce), full "
+                         "params prefetched per step via persistent "
+                         "all-gathers chained off compute futures; "
+                         "works with both collective backends (native "
+                         "uses in-program all_gather/psum_scatter) and "
+                         "lifts the user backend's model-dim-1 limit")
+    ap.add_argument("--fsdp-bucket-bytes", type=int, default=1 << 22,
+                    help="flat-bucket size for --fsdp (smaller = more "
+                         "buckets = more prefetch-chain links)")
     ap.add_argument("--pipeline", default="none",
                     choices=["none", "gpipe", "1f1b"],
                     help="pipeline-parallel backend: gpipe = the "
@@ -125,20 +138,27 @@ def main():
                            global_batch=args.global_batch, kind="train")
     ocfg = opt_mod.AdamWConfig(lr=3e-3, warmup_steps=5,
                                total_steps=max(args.steps, 10))
+
+    user_backend = args.collective_backend == "user"
+    if args.fsdp:
+        if args.microbatches > 1 or args.cast_bf16:
+            raise SystemExit("--fsdp does not compose with "
+                             "--microbatches/--cast-bf16 yet")
+        return _run_fsdp(args, cfg, ocfg, mesh)
+    if user_backend:
+        if dict(mesh.shape).get("model", 1) != 1:
+            raise SystemExit("--collective-backend user on a 2-D mesh "
+                             "requires --fsdp (ZeRO sharding over the "
+                             "data axis); without it use model dim 1")
+        if args.microbatches > 1:
+            raise SystemExit("--collective-backend user does not compose "
+                             "with --microbatches yet")
+
     cell = build_cell(cfg, shape_spec, mesh, opt_cfg=ocfg,
                       microbatches=args.microbatches,
                       cast_params_bf16=args.cast_bf16)
     jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
                      out_shardings=cell.out_shardings)
-
-    user_backend = args.collective_backend == "user"
-    if user_backend:
-        if dict(mesh.shape).get("model", 1) != 1:
-            raise SystemExit("--collective-backend user needs a pure "
-                             "data-parallel mesh (model dim 1)")
-        if args.microbatches > 1:
-            raise SystemExit("--collective-backend user does not compose "
-                             "with --microbatches yet")
 
     with compat.set_mesh(mesh):
         params = registry.init_params(cfg, jax.random.PRNGKey(0))
@@ -171,6 +191,12 @@ def main():
         raise SystemExit("--elastic/--chaos-kill/--heartbeat-timeout "
                          "require --collective-backend user (the epoch "
                          "invalidates user-space persistent collectives)")
+
+    from repro.collectives.nonblocking import CollectiveSpec
+    spec = CollectiveSpec(backend=args.collective_backend,
+                          algorithm=args.collective_algorithm,
+                          chunks=args.collective_chunks,
+                          round_batch=args.collective_round_batch or None)
 
     split, reducer, epoch, remesh_fn = None, None, None, None
     if user_backend:
@@ -214,13 +240,10 @@ def main():
             from repro.collectives.nonblocking import MembershipEpoch
             epoch = MembershipEpoch()
 
-        reducer = EngineGradReducer(
-            mesh, "data", engine=eng,
-            algorithm=args.collective_algorithm,
-            chunks=args.collective_chunks, mean=True,
-            round_batch=args.collective_round_batch or None,
-            epoch=epoch)
-        split = UserCollectiveStep(make_grad_fn(mesh), apply_fn, reducer)
+        reducer = EngineGradReducer(mesh, "data", engine=eng, spec=spec,
+                                    mean=True, epoch=epoch)
+        split = UserCollectiveStep(make_grad_fn(mesh), apply_fn, reducer,
+                                   spec=spec)
 
         if elastic_on:
             from jax.sharding import NamedSharding
@@ -240,7 +263,7 @@ def main():
                 opt_state = jax.device_put(
                     opt_state, NamedSharding(new_mesh, P()))
                 return (UserCollectiveStep(make_grad_fn(new_mesh),
-                                           apply_fn, reducer),
+                                           apply_fn, reducer, spec=spec),
                         params, opt_state)
 
         print(f"collective backend: user "
@@ -251,10 +274,7 @@ def main():
     loop_cfg = TrainLoopConfig(
         total_steps=args.steps, checkpoint_every=10,
         checkpoint_dir=os.path.join(args.ckpt_dir, args.arch),
-        log_every=5, collective_backend=args.collective_backend,
-        collective_algorithm=args.collective_algorithm,
-        collective_chunks=args.collective_chunks,
-        collective_round_batch=args.collective_round_batch)
+        log_every=5, collective_spec=spec)
     hooks = [lambda s, m: print(
         f"step {s:4d} loss={m['loss']:.4f} "
         f"{m['step_time_s'] * 1e3:.0f}ms", flush=True)]
@@ -292,6 +312,245 @@ def main():
         print(f"final loss {log[-1]['loss']:.4f}")
     else:
         # resume found a checkpoint at/past --steps: nothing left to run
+        print(f"nothing to do: resumed past step {args.steps - 1} "
+              f"(rm -r {loop_cfg.checkpoint_dir} to restart)")
+    return 0
+
+
+def build_fsdp_programs(cfg, ocfg, mesh, layout, *, axis="data"):
+    """The three jitted FSDP step programs over ``mesh``'s data axis.
+
+    Shared verbatim by the user and native backends — the *only*
+    difference between the two paths is who moves the bytes (persistent
+    engine handles vs the in-program ``all_gather``/``psum_scatter``
+    pair in ``ag_fn``/``rs_fn``), so a loss-trajectory comparison
+    measures exactly the collectives.
+
+    * ``grad_fn(gathered_flats, batch)`` — unflattens the full flat
+      buckets ``[n, W]`` in-program, runs loss+grad, reflattens to
+      stacked grad buckets ``[n, W]``;
+    * ``apply_fn(shards, opt_state, grad_shards, stacked_mets)`` — the
+      sharded AdamW step (each rank updates only its block; grad norm
+      via cross-data psum of shard sum-of-squares);
+    * ``ag_fn(shards)`` / ``rs_fn(flat_grads)`` — the native
+      collectives, as standalone programs mirroring the engine handles.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.models import registry
+    from repro.train import optimizer as opt_mod
+
+    n = layout.n
+    B = layout.num_buckets
+
+    def local_grad(flats, batch):
+        params = layout.unflatten([f[0] for f in flats])
+        (loss, mets), g = jax.value_and_grad(
+            registry.loss_fn, has_aux=True)(params, cfg, batch)
+        gleaves = [l.astype(jnp.float32) for l in jax.tree.leaves(g)]
+        flat_g = [layout.flatten_bucket(gleaves, b)[None] for b in range(B)]
+        mets = dict(mets, loss=loss)
+        return jax.tree.map(lambda v: v[None], mets), flat_g
+
+    grad_fn = jax.jit(compat.shard_map(
+        local_grad, mesh=mesh, in_specs=(P(axis), P(axis)),
+        out_specs=P(axis)))
+
+    state_spec = opt_mod.AdamWState(step=P(), mu=P(axis), nu=P(axis))
+
+    def local_apply(shards, opt_state, gshards, smets):
+        state = opt_mod.AdamWState(opt_state.step,
+                                   [m[0] for m in opt_state.mu],
+                                   [v[0] for v in opt_state.nu])
+        new_sh, new_state, om = opt_mod.apply_shards(
+            ocfg, state, [s[0] for s in shards], [g[0] for g in gshards],
+            axis=axis, grad_scale=1.0 / n)
+        mets = {k: jax.lax.pmean(v[0], axis) for k, v in smets.items()}
+        return ([s[None] for s in new_sh],
+                opt_mod.AdamWState(new_state.step,
+                                   [m[None] for m in new_state.mu],
+                                   [v[None] for v in new_state.nu]),
+                dict(mets, **om))
+
+    apply_fn = jax.jit(compat.shard_map(
+        local_apply, mesh=mesh,
+        in_specs=(P(axis), state_spec, P(axis), P(axis)),
+        out_specs=(P(axis), state_spec, P())))
+
+    def local_ag(shards):
+        return [jax.lax.all_gather(s[0], axis, tiled=True)[None]
+                for s in shards]
+
+    ag_fn = jax.jit(compat.shard_map(
+        local_ag, mesh=mesh, in_specs=(P(axis),), out_specs=P(axis)))
+
+    def local_rs(flat_grads):
+        return [jax.lax.psum_scatter(g[0], axis, scatter_dimension=0,
+                                     tiled=True)[None]
+                for g in flat_grads]
+
+    rs_fn = jax.jit(compat.shard_map(
+        local_rs, mesh=mesh, in_specs=(P(axis),), out_specs=P(axis)))
+
+    return grad_fn, apply_fn, ag_fn, rs_fn
+
+
+def _run_fsdp(args, cfg, ocfg, mesh):
+    """ZeRO-style FSDP rehearsal over the mesh's data axis.
+
+    Params and AdamW moments live as flat per-dtype bucket shards
+    ``[n, W/n]`` (rank ``r`` owns row ``r``); every step all-gathers the
+    full flat buckets for the forward/backward and reduce-scatters the
+    grad buckets so each rank receives only the block it will apply —
+    half the wire bytes of the allreduce path.  ``--collective-backend
+    user`` moves both through persistent engine handles, with the next
+    step's gathers chained as continuations off the optimizer's compute
+    futures; ``native`` runs the same step programs with in-program
+    ``all_gather``/``psum_scatter``.  Other mesh axes (``model``)
+    replicate, so the same step runs unchanged on (4,1) and (2,2).
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.collectives.nonblocking import CollectiveSpec, MembershipEpoch
+    from repro.collectives.overlap import FsdpLayout, FsdpReducer
+    from repro.core import ProgressEngine
+    from repro.data.pipeline import PrefetchPipeline, SyntheticLM
+    from repro.models import registry
+    from repro.train import optimizer as opt_mod
+    from repro.train.train_loop import FsdpStep, Trainer, TrainLoopConfig
+
+    axis = "data"
+    user_backend = args.collective_backend == "user"
+    spec = CollectiveSpec(backend=args.collective_backend,
+                          algorithm=args.collective_algorithm,
+                          chunks=args.collective_chunks,
+                          round_batch=args.collective_round_batch or None)
+    eng = ProgressEngine()
+
+    elastic_on = args.elastic or args.heartbeat_timeout > 0 \
+        or args.chaos_kill > 0
+    if elastic_on and not user_backend:
+        raise SystemExit("--elastic/--chaos-kill/--heartbeat-timeout "
+                         "require --collective-backend user")
+    epoch = MembershipEpoch() if elastic_on else None
+
+    with compat.set_mesh(mesh):
+        params = registry.init_params(cfg, jax.random.PRNGKey(0))
+
+    def shard_state(mesh_, params_tree, mu_tree=None, nu_tree=None,
+                    step=None):
+        n = dict(mesh_.shape)[axis]
+        layout = FsdpLayout(params_tree, n, args.fsdp_bucket_bytes)
+        sharding = NamedSharding(mesh_, P(axis))
+        shards = layout.shard_params(params_tree, mesh_, axis)
+        if mu_tree is None:
+            mu = [jax.device_put(jnp.zeros_like(s), sharding)
+                  for s in shards]
+            nu = [jax.device_put(jnp.zeros_like(s), sharding)
+                  for s in shards]
+            step = jnp.zeros((), jnp.int32)
+        else:
+            mu = layout.shard_params(mu_tree, mesh_, axis)
+            nu = layout.shard_params(nu_tree, mesh_, axis)
+        return layout, shards, opt_mod.AdamWState(step, mu, nu)
+
+    layout, shards, opt_state = shard_state(mesh, params)
+    print(f"fsdp: {layout.num_buckets} bucket(s), shard widths "
+          f"{[w // layout.n for w in layout.widths]} over {axis}="
+          f"{layout.n} ({args.collective_backend} backend)")
+    grad_fn, apply_fn, ag_fn, rs_fn = build_fsdp_programs(
+        cfg, ocfg, mesh, layout, axis=axis)
+
+    reducer, split, step_fn, remesh_fn = None, None, None, None
+    if user_backend:
+        reducer = FsdpReducer(mesh, axis, engine=eng, spec=spec,
+                              bucket_bytes=args.fsdp_bucket_bytes,
+                              epoch=epoch)
+        split = FsdpStep(grad_fn, apply_fn, reducer, spec=spec)
+    else:
+        def step_fn(shards, opt_state, batch):
+            flats = ag_fn(shards)
+            smets, flat_grads = grad_fn(flats, batch)
+            gshards = rs_fn(flat_grads)
+            return apply_fn(shards, opt_state, gshards, smets)
+
+    if user_backend and elastic_on:
+        from repro.distributed import elastic
+
+        model_dim = dict(mesh.shape).get("model", 1)
+
+        def remesh_fn(exc, shards_, opt_state_):
+            nonlocal layout
+            survivors = getattr(exc, "survivors", None) \
+                or len(jax.devices())
+            new_mesh = elastic.remesh(survivors, prefer_model=model_dim)
+            print(f"remesh: {getattr(exc, 'survivors', '?')} survivor(s) "
+                  f"-> mesh {dict(new_mesh.shape)}")
+            # shard widths depend on the data-axis size: gather the old
+            # shards on host, rebuild the layout + programs for the new
+            # mesh, re-shard params AND moments (step counter carries)
+            params_tree = layout.unshard_params(shards_)
+            mu_tree = layout.unshard_params(opt_state_.mu)
+            nu_tree = layout.unshard_params(opt_state_.nu)
+            reducer.remesh(new_mesh, axis)
+            layout, new_shards, new_state = shard_state(
+                new_mesh, params_tree, mu_tree, nu_tree, opt_state_.step)
+            g2, a2, _, _ = build_fsdp_programs(cfg, ocfg, new_mesh,
+                                               layout, axis=axis)
+            return (FsdpStep(g2, a2, reducer, spec=spec),
+                    new_shards, new_state)
+
+    src = SyntheticLM(cfg.vocab_size, args.seq, args.global_batch, seed=5)
+
+    def to_batch(b):
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    pipe = PrefetchPipeline(map(to_batch, iter(src)), eng, depth=3)
+
+    loop_cfg = TrainLoopConfig(
+        total_steps=args.steps, checkpoint_every=max(args.steps, 10),
+        checkpoint_dir=os.path.join(args.ckpt_dir, args.arch + "-fsdp"),
+        log_every=5, collective_spec=spec)
+    hooks = [lambda s, m: print(
+        f"step {s:4d} loss={m['loss']:.6f} "
+        f"{m['step_time_s'] * 1e3:.0f}ms", flush=True)]
+    if args.heartbeat_timeout > 0:
+        from repro.distributed.fault_tolerance import monitor_mesh
+        hb = monitor_mesh(eng, mesh, axis, timeout=args.heartbeat_timeout,
+                          epoch=epoch)
+        hooks.append(lambda s, m: [hb.beat(p) for p in hb.alive])
+    if args.chaos_kill > 0:
+        killed = []
+
+        def chaos_hook(s, m):
+            if s >= args.chaos_kill_step and not killed:
+                killed.append(s)
+                survivors = max(1, len(jax.devices()) - args.chaos_kill)
+                print(f"chaos: killing {args.chaos_kill} device(s) at "
+                      f"step {s} -> {survivors} survivors")
+                epoch.invalidate(survivors=survivors,
+                                 reason=f"--chaos-kill {args.chaos_kill}")
+        hooks.append(chaos_hook)
+
+    trainer = Trainer(step_fn, shards, opt_state, pipe, loop_cfg,
+                      engine=eng, split_step=split, epoch=epoch,
+                      remesh_fn=remesh_fn, hooks=hooks)
+    log = trainer.run()
+    pipe.close()
+    if reducer is not None:
+        print(f"prefetch overlap: {reducer.prefetch_overlap:.3f} "
+              f"({reducer.gathers} chained gathers)")
+        reducer.close()
+    if log:
+        print(f"final loss {log[-1]['loss']:.6f}")
+    else:
         print(f"nothing to do: resumed past step {args.steps - 1} "
               f"(rm -r {loop_cfg.checkpoint_dir} to restart)")
     return 0
@@ -385,15 +644,17 @@ def _run_pipeline(args):
         mets = {k: jnp.mean(v) for k, v in stacked_mets.items()}
         return params, opt_state, dict(mets, **om)
 
+    from repro.collectives.nonblocking import CollectiveSpec
+    pspec = CollectiveSpec(
+        backend="user" if args.pipeline == "1f1b" else "native",
+        algorithm=args.collective_algorithm,
+        chunks=args.collective_chunks,
+        round_batch=args.collective_round_batch or None)
     loop_cfg = TrainLoopConfig(
         total_steps=args.steps, checkpoint_every=10,
         checkpoint_dir=os.path.join(args.ckpt_dir,
                                     f"pipeline-{args.pipeline}"),
-        log_every=5,
-        collective_backend="user" if args.pipeline == "1f1b" else "native",
-        collective_algorithm=args.collective_algorithm,
-        collective_chunks=args.collective_chunks,
-        pipeline=args.pipeline)
+        log_every=5, collective_spec=pspec, pipeline=args.pipeline)
     hooks = [lambda s, m: print(
         f"step {s:4d} loss={m['loss']:.4f} "
         f"{m['step_time_s'] * 1e3:.0f}ms", flush=True)]
@@ -451,12 +712,9 @@ def _run_pipeline(args):
             grads = jax.tree.map(stack_rows, *[o[1] for o in outs])
             return {"loss": losses}, grads
 
-        reducer = EngineGradReducer(
-            mesh, "data", engine=eng,
-            algorithm=args.collective_algorithm,
-            chunks=args.collective_chunks, mean=True,
-            round_batch=args.collective_round_batch or None)
-        split = UserCollectiveStep(grad_fn, apply_fn, reducer)
+        reducer = EngineGradReducer(mesh, "data", engine=eng, spec=pspec,
+                                    mean=True)
+        split = UserCollectiveStep(grad_fn, apply_fn, reducer, spec=pspec)
         trainer = Trainer(None, params, opt_state, pipe, loop_cfg,
                           engine=eng, split_step=split, hooks=hooks)
 

@@ -574,13 +574,12 @@ def _make_moe_blk_vjp(batch_axes: tuple):
     return blk
 
 
-def moe_apply(p, x, cfg):
-    """GShard-style grouped capacity dispatch (einsum formulation).
+def _moe_route(p, x, cfg):
+    """Router + GShard capacity dispatch, shared by every MoE apply path.
 
-    Token groups are a batch-like dim sharded over (pod, data); the expert
-    dim (or, when E is not divisible by the tensor axis, the capacity dim)
-    shards over "model".  SPMD inserts the dispatch all-to-alls.
-    Returns (y, aux_loss).
+    Returns ``(xg, dispatch, combine, aux)`` — the grouped tokens
+    ``[g, t, d]``, the (stop-gradient-ready) dispatch mask and combine
+    weights ``[g, t, E, C]``, and the Switch aux loss.
     """
     mc = cfg.moe
     B, S, D = x.shape
@@ -620,13 +619,137 @@ def moe_apply(p, x, cfg):
     combine = shard_hint(combine, "moe_groups", None, "act_experts", "expert_cap")
     dispatch = (combine > 0).astype(x.dtype)
 
-    y = _moe_expert_block(
-        xg, jax.lax.stop_gradient(dispatch), combine,
-        p["wi_gate"].astype(x.dtype), p["wi_up"].astype(x.dtype),
-        p["wo"].astype(x.dtype))
-
     # load-balance aux loss (Switch-style)
     me = jnp.mean(probs, axis=(0, 1))                      # [E]
     fe = jnp.mean(sel_all, axis=(0, 1)) / K                # [E] fraction routed
     aux = E * jnp.sum(me * fe) * mc.aux_loss_weight
+    return xg, dispatch, combine, aux
+
+
+def moe_apply(p, x, cfg):
+    """GShard-style grouped capacity dispatch (einsum formulation).
+
+    Token groups are a batch-like dim sharded over (pod, data); the expert
+    dim (or, when E is not divisible by the tensor axis, the capacity dim)
+    shards over "model".  SPMD inserts the dispatch all-to-alls; for the
+    explicitly placed expert-parallel variant (user-space Bruck
+    all-to-alls on the progress engine) see
+    :func:`moe_apply_expert_parallel`.  Returns (y, aux_loss).
+    """
+    B, S, D = x.shape
+    xg, dispatch, combine, aux = _moe_route(p, x, cfg)
+
+    y = _moe_expert_block(
+        xg, jax.lax.stop_gradient(dispatch), combine,
+        p["wi_gate"].astype(x.dtype), p["wi_up"].astype(x.dtype),
+        p["wo"].astype(x.dtype))
+    return y.reshape(B, S, D), aux
+
+
+def moe_dispatch_alltoall(xe, mesh, axis: str, *, reverse: bool = False,
+                          coll=None, spec=None, timeout: float = 120.0):
+    """Block-transpose the dispatched tensor between the group-sharded
+    and expert-sharded layouts — the MoE all-to-all, placed explicitly.
+
+    ``xe`` is the global ``[G, E, C, d]`` dispatched tensor.  Forward
+    (``reverse=False``): groups are sharded over ``axis``; the result is
+    the same global array with the EXPERT dim sharded instead (each rank
+    ends up holding every group's slice of its own experts).  Reverse
+    undoes it (the combine-side all-to-all).  Both dims must divide the
+    axis size.
+
+    ``coll=None`` runs a jitted in-program ``lax.all_to_all``;  a
+    :class:`~repro.collectives.nonblocking.UserCollectives` context runs
+    the engine-driven Bruck ``ialltoall`` instead (paper §4.7).  All-to-
+    all is pure data movement, so the two are bit-identical — the MoE
+    twin of the fig-14 user-vs-native claim.
+    """
+    from jax.sharding import PartitionSpec as P
+    n = dict(mesh.shape)[axis]
+    G, E = xe.shape[0], xe.shape[1]
+    if G % n or E % n:
+        raise ValueError(
+            f"moe_dispatch_alltoall: groups ({G}) and experts ({E}) must "
+            f"divide the {axis!r} axis size ({n})")
+    if n == 1:
+        return xe
+    if coll is None:
+        if reverse:
+            fn = compat.shard_map(
+                lambda v: jax.lax.all_to_all(v, axis, 0, 1, tiled=True),
+                mesh=mesh, in_specs=P(None, axis), out_specs=P(axis))
+        else:
+            fn = compat.shard_map(
+                lambda v: jax.lax.all_to_all(v, axis, 1, 0, tiled=True),
+                mesh=mesh, in_specs=P(axis), out_specs=P(None, axis))
+        return jax.jit(fn)(xe)
+    # user backend: ialltoall's payload is n*n stacked blocks (rank s's
+    # rows are its n destination blocks); build block (s, r) = s's groups
+    # x r's experts, transpose, and reassemble.
+    Gl, El = G // n, E // n
+    rest = xe.shape[2:]
+    r_axes = tuple(range(4, 4 + len(rest)))
+    if reverse:
+        # expert-sharded in: rank i holds (source j, its El experts)
+        pay = jnp.transpose(
+            xe.reshape(n, Gl, n, El, *rest),
+            (2, 0, 1, 3) + r_axes).reshape(n * n, Gl, El, *rest)
+    else:
+        pay = jnp.transpose(
+            xe.reshape(n, Gl, n, El, *rest),
+            (0, 2, 1, 3) + r_axes).reshape(n * n, Gl, El, *rest)
+    out = coll.ialltoall(pay, mesh, axis, spec=spec).wait(timeout=timeout)
+    out = out.reshape(n, n, Gl, El, *rest)
+    if reverse:
+        # row (j, i) = groups of j x experts of i -> group-major global
+        return jnp.transpose(out, (0, 2, 1, 3) + r_axes).reshape(
+            G, E, *rest)
+    # row (i, j) = groups of j x experts of i -> group-major global
+    return jnp.transpose(out, (1, 2, 0, 3) + r_axes).reshape(G, E, *rest)
+
+
+@_functools.lru_cache(maxsize=None)
+def _moe_expert_ffn_sharded(mesh, axis: str):
+    """Jitted expert-sharded FFN: every contraction is expert-local, so
+    the only collectives in the expert-parallel path are the two
+    explicit all-to-alls around it."""
+    from jax.sharding import PartitionSpec as P
+
+    def ffn(xed, wg, wu, wo):
+        h = (jax.nn.silu(jnp.einsum("gecd,edf->gecf", xed, wg))
+             * jnp.einsum("gecd,edf->gecf", xed, wu))
+        return jnp.einsum("gecf,efd->gecd", h, wo)
+
+    return jax.jit(compat.shard_map(
+        ffn, mesh=mesh,
+        in_specs=(P(None, axis), P(axis), P(axis), P(axis)),
+        out_specs=P(None, axis)))
+
+
+def moe_apply_expert_parallel(p, x, cfg, mesh, axis: str = "model", *,
+                              coll=None, spec=None, timeout: float = 120.0):
+    """Expert-parallel MoE with EXPLICIT all-to-all placement — the
+    dispatch path for many-tiny-expert configs (granite-moe-3b-a800m:
+    E=40 experts of F=512, where expert-internal TP is a loss).
+
+    Tokens are routed on the group-sharded layout, block-transposed to
+    the expert shards (:func:`moe_dispatch_alltoall`), run through the
+    expert-local FFN, and transposed back for the combine.  With
+    ``coll`` the transposes are engine-driven user-space Bruck
+    all-to-alls that overlap with host work; without, in-program native
+    ones.  Either way the token math is identical einsums to
+    :func:`moe_apply`'s fallback path, so outputs are bit-identical
+    across all three paths.  Returns (y, aux_loss).
+    """
+    B, S, D = x.shape
+    xg, dispatch, combine, aux = _moe_route(p, x, cfg)
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xg)      # [G, E, C, d]
+    xed = moe_dispatch_alltoall(xe, mesh, axis, coll=coll, spec=spec,
+                                timeout=timeout)
+    ye = _moe_expert_ffn_sharded(mesh, axis)(
+        xed, p["wi_gate"].astype(x.dtype), p["wi_up"].astype(x.dtype),
+        p["wo"].astype(x.dtype))
+    ye = moe_dispatch_alltoall(ye, mesh, axis, reverse=True, coll=coll,
+                               spec=spec, timeout=timeout)
+    y = jnp.einsum("gtec,gecd->gtd", combine, ye)
     return y.reshape(B, S, D), aux

@@ -8,8 +8,9 @@ completion-driven — there is no polling loop anywhere in this file:
 
 * ``submit``            — the *arrival event* schedules a one-shot
   admission task on the admit stream (none is scheduled while idle);
-* admission / prefill   — admits arrivals into free KV slots and runs
-  token-by-token prefill, then schedules the first decode step;
+* admission / prefill   — admits arrivals into free paged-KV lanes
+  (blocks + lane claimed atomically) and runs one chunk of batched
+  prefill, then schedules the first decode step;
 * decode                — one fused decode step for ALL active slots
   (continuous batching) is dispatched and its device completion watched
   by a one-shot readiness task (``Array.is_ready``, never blocked on)
@@ -77,9 +78,11 @@ from repro.core import DEFERRED, DONE, NOPROGRESS, ProgressEngine, Request
 from repro.core.continuations import POLICIES, ContinuationQueue
 from repro.core.executor import ProgressExecutor
 from repro.core.stats import SchedulerStats
-from repro.collectives.nonblocking import MembershipError
+from repro.collectives.nonblocking import (CollectiveSpec,
+                                           MembershipError,
+                                           spec_from_legacy)
 from repro.models import registry
-from repro.serve.kvcache import PagedKVCache, SlotCache
+from repro.serve.kvcache import PagedKVCache
 
 
 @dataclasses.dataclass
@@ -230,26 +233,36 @@ class ServeEngine:
                  continuation_policy: str = DEFERRED,
                  continuation_max_drain: int = 64,
                  mesh=None, model_axis: str = "model",
-                 collective_backend: str = "native",
-                 collective_chunks: int = 1,
+                 collective_spec: CollectiveSpec | None = None,
+                 collective_backend: str | None = None,
+                 collective_chunks: int | None = None,
                  collective_round_batch: int | None = None,
-                 cache_mode: str = "slots",
+                 cache_mode: str = "paged",
                  kv_block_size: int = 16,
                  kv_blocks: int | None = None,
                  prefill_chunk: int = 8,
                  epoch=None):
         if continuation_policy not in POLICIES:
             raise ValueError(f"continuation_policy must be one of {POLICIES}")
-        if collective_backend not in ("native", "user"):
-            raise ValueError("collective_backend must be 'native' or 'user'")
-        if collective_backend == "user" and mesh is None:
+        spec = spec_from_legacy(collective_spec, surface="ServeEngine",
+                                backend=collective_backend,
+                                chunks=collective_chunks,
+                                round_batch=collective_round_batch)
+        if spec.user and mesh is None:
             # silently serving the plain native path while the operator
             # believes they exercised user-space collectives is worse
             # than an eager error
-            raise ValueError("collective_backend='user' requires a mesh "
+            raise ValueError("collective backend 'user' requires a mesh "
                              "(model-axis-sharded decode)")
-        if cache_mode not in ("slots", "paged"):
-            raise ValueError("cache_mode must be 'slots' or 'paged'")
+        if cache_mode == "slots":
+            raise ValueError(
+                "cache_mode='slots' was retired: the fixed-slot cache is "
+                "gone (paged is strictly more capable — same bytes, block "
+                "granularity).  Drop the kwarg, or size the pool with "
+                "kv_block_size/kv_blocks to mimic fixed lanes "
+                "(kv_blocks = batch_slots * max_seq // kv_block_size + 1)")
+        if cache_mode != "paged":
+            raise ValueError("cache_mode must be 'paged'")
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got "
                              f"{prefill_chunk}")
@@ -259,23 +272,19 @@ class ServeEngine:
         self.executor = executor
         self.mesh = mesh
         self.model_axis = model_axis
-        self.collective_backend = collective_backend
+        self.collective_spec = spec
+        self.collective_backend = spec.backend   # read-compat mirror
         self._sharded = mesh is not None
-        self.paged = cache_mode == "paged"
-        if self.paged:
-            self.slots = PagedKVCache(cfg, batch_slots, max_seq,
-                                      block_size=kv_block_size,
-                                      num_blocks=kv_blocks, mesh=mesh)
-        else:
-            self.slots = SlotCache(cfg, batch_slots, max_seq, mesh=mesh)
+        self.paged = True                        # retained for callers
+        self.slots = PagedKVCache(cfg, batch_slots, max_seq,
+                                  block_size=kv_block_size,
+                                  num_blocks=kv_blocks, mesh=mesh)
         self.batch_slots = batch_slots
         self.max_seq = max_seq
         self.prefill_chunk = prefill_chunk
         # retained for elastic rebuilds (_rebuild_for_survivors)
         self._kv_block_size = kv_block_size
         self._kv_blocks = kv_blocks
-        self._collective_chunks = collective_chunks
-        self._collective_round_batch = collective_round_batch
         self._arrivals: collections.deque[GenRequest] = collections.deque()
         self._active: dict[int, GenRequest] = {}
         # paged continuous batching: requests waiting for blocks/lanes,
@@ -312,20 +321,14 @@ class ServeEngine:
         self._finished: collections.deque[tuple] = collections.deque(
             maxlen=4096)
         if self._sharded:
-            self._build_sharded_decode(collective_chunks,
-                                       collective_round_batch)
+            self._build_sharded_decode()
         else:
             self.coll = None
             self._ag_handle = None
             self._jit_gather = None
-            if self.paged:
-                self._jit_decode = jax.jit(
-                    lambda p, c, t, q, bt, fd: registry.decode_step_paged(
-                        p, cfg, c, t, q, bt, fd))
-            else:
-                self._jit_decode = jax.jit(
-                    lambda p, c, t, q, fd: registry.decode_step(
-                        p, cfg, c, t, q, fd))
+            self._jit_decode = jax.jit(
+                lambda p, c, t, q, bt, fd: registry.decode_step_paged(
+                    p, cfg, c, t, q, bt, fd))
         self.admit_stream = engine.stream("serve-admit")
         self.decode_stream = engine.stream("serve-decode")
         # decode completions are delivered through this queue; its
@@ -367,8 +370,7 @@ class ServeEngine:
             epoch.subscribe(self._on_epoch_invalidate)
 
     # -- sharded decode construction --------------------------------------
-    def _build_sharded_decode(self, chunks: int,
-                              round_batch: int | None) -> None:
+    def _build_sharded_decode(self) -> None:
         """Compile the model-axis decode pair: ONE shared partial-logits
         program (hidden + per-rank vocab-slice unembed) and the gather —
         in-program ``all_gather`` (native) or a persistent user-space
@@ -386,43 +388,29 @@ class ServeEngine:
                 f"{axis!r} axis size ({n})")
         vloc = V // n
         self._model_shards = n
-        hidden_fn = "decode_hidden_paged" if self.paged else "decode_hidden"
-        if not hasattr(registry.module_for(cfg), hidden_fn):
+        if not hasattr(registry.module_for(cfg), "decode_hidden_paged"):
             raise ValueError(
                 f"sharded serving not supported for family {cfg.family!r}")
 
-        if self.paged:
-            def local_step(params, cache, toks, pos, tables, fed):
-                hid, new_cache = registry.decode_hidden_paged(
-                    params, cfg, cache, toks, pos, tables, fed)
-                r = jax.lax.axis_index(axis)
-                part = registry.unembed_partial(params, cfg, hid,
-                                                r * vloc, vloc)
-                return part[:, 0][None], new_cache
+        def local_step(params, cache, toks, pos, tables, fed):
+            hid, new_cache = registry.decode_hidden_paged(
+                params, cfg, cache, toks, pos, tables, fed)
+            r = jax.lax.axis_index(axis)
+            # [B, 1, vloc] -> [1, B, vloc]: leading dim carries the
+            # rank (the user-collective payload layout)
+            part = registry.unembed_partial(params, cfg, hid,
+                                            r * vloc, vloc)
+            return part[:, 0][None], new_cache
 
-            self._jit_decode = jax.jit(compat.shard_map(
-                local_step, mesh=mesh,
-                in_specs=(P(), P(), P(), P(), P(), P()),
-                out_specs=(P(axis), P())))
-        else:
-            def local_step(params, cache, toks, pos, fed):
-                hid, new_cache = registry.decode_hidden(params, cfg, cache,
-                                                        toks, pos, fed)
-                r = jax.lax.axis_index(axis)
-                part = registry.unembed_partial(params, cfg, hid,
-                                                r * vloc, vloc)
-                # [B, 1, vloc] -> [1, B, vloc]: leading dim carries the
-                # rank (the user-collective payload layout)
-                return part[:, 0][None], new_cache
-
-            self._jit_decode = jax.jit(compat.shard_map(
-                local_step, mesh=mesh, in_specs=(P(), P(), P(), P(), P()),
-                out_specs=(P(axis), P())))
+        self._jit_decode = jax.jit(compat.shard_map(
+            local_step, mesh=mesh,
+            in_specs=(P(), P(), P(), P(), P(), P()),
+            out_specs=(P(axis), P())))
 
         def local_gather(part):                  # local [1, B, vloc]
             return jax.lax.all_gather(part, axis, axis=2, tiled=True)
 
-        if self.collective_backend == "native":
+        if not self.collective_spec.user:
             self._jit_gather = jax.jit(compat.shard_map(
                 local_gather, mesh=mesh, in_specs=P(axis),
                 out_specs=P(axis)))              # global [n, B, V]
@@ -437,8 +425,7 @@ class ServeEngine:
             self._ag_handle = self.coll.allgather_init(
                 jax.ShapeDtypeStruct((n, self.batch_slots, vloc),
                                      jnp.float32),
-                mesh, axis, chunks=chunks, round_batch=round_batch,
-                warmup=True)
+                mesh, axis, spec=self.collective_spec, warmup=True)
 
     # -- client API -------------------------------------------------------
     def submit(self, request: GenRequest) -> Request:
@@ -491,9 +478,8 @@ class ServeEngine:
         return DONE                          # one-shot: nothing left to poll
 
     def _admit(self) -> bool:
-        """Admission + (paged) one prefill chunk; see the mode-specific
-        bodies.  Both stage cache writes outside the lock and publish
-        atomically.
+        """Admission + one prefill chunk (staged cache writes outside
+        the lock, published atomically).
 
         A pending membership change is applied first — nothing may be
         admitted onto the old mesh.  The unlocked reads are benign: the
@@ -503,9 +489,7 @@ class ServeEngine:
             self._apply_membership_change()
             if self._membership_exc is not None:
                 return False         # in-flight work must drain first
-        if self.paged:
-            return self._admit_paged()
-        return self._admit_slots()
+        return self._admit_paged()
 
     def _admit_paged(self) -> bool:
         """Continuous-batching admission: drain arrivals into the
@@ -517,9 +501,9 @@ class ServeEngine:
         blocking them: the caller (admit task / detokenize continuation)
         re-schedules until every replay is rebuilt.
 
-        Runs the chunk on a STAGED cache outside the lock (same
-        discipline as slot-mode prefill: no decode step is in flight and
-        ``_prefill_active`` excludes concurrent admissions)."""
+        Runs the chunk on a STAGED cache outside the lock (no decode
+        step is in flight and ``_prefill_active`` excludes concurrent
+        admissions)."""
         with self._lock:
             if self._decode_inflight is not None or self._prefill_active:
                 return False
@@ -621,92 +605,6 @@ class ServeEngine:
                 completed.append(idx)
         return cache, completed
 
-    def _admit_slots(self) -> bool:
-        """Admit arrivals into free slots.  Slot assignment happens under
-        the lock; the token-by-token prefill stages a LOCAL cache outside
-        it (so ``submit``/detokenize/stats never block behind a prompt
-        loop) and the lock is retaken only to publish cache + active set
-        atomically.
-
-        Safe because prefill runs only when no decode step is in flight
-        (the step's continuation would overwrite ``slots.cache``) and
-        ``_prefill_active`` excludes concurrent admissions — the staged
-        cache is therefore the only writer until it is published."""
-        with self._lock:
-            if self._decode_inflight is not None or self._prefill_active:
-                return False
-            batch: list[tuple[GenRequest, object]] = []
-            now = time.monotonic()
-            while self._arrivals and self.slots.free_slots():
-                req = self._arrivals.popleft()
-                slot = self.slots.assign(req.request_id)
-                req.slot_index = slot.index
-                if req.last_enqueued_at:
-                    req.queued_s += now - req.last_enqueued_at
-                batch.append((req, slot))
-            if not batch:
-                return False
-            self._prefill_active = True
-            cache = self.slots.cache
-        try:
-            for req, slot in batch:
-                cache = self._prefill(req, slot, cache)
-        except BaseException as exc:  # noqa: BLE001
-            # prefill failure: fail the batch (finished_at + ledger so
-            # TTFT/latency accounting stays consistent), free the slots,
-            # and do NOT publish the staged cache
-            self.decode_errors.append(exc)
-            with self._lock:
-                self._prefill_active = False
-                for req, slot in batch:
-                    self.slots.release(slot)
-                    req.finished_at = time.monotonic()
-                    self._record_locked(req, failed=True)
-                    req.done_req.fail(exc)
-            self._schedule_admit()           # remaining arrivals, if any
-            return False
-        with self._lock:
-            self._prefill_active = False
-            self.slots.cache = cache
-            for req, slot in batch:
-                self._active[slot.index] = req
-        return True
-
-    def _prefill(self, req: GenRequest, slot, cache):
-        """Token-by-token prefill into a STAGED cache (returned, not
-        published) — one compiled shape; a chunked prefill path is the
-        serving hillclimb.  Caller holds no lock; see ``_admit``.
-
-        Each call feeds exactly one slot, so the ``fed`` mask is that
-        slot alone: other lanes — including ones actively decoding —
-        keep their SSM state bit-frozen instead of being advanced by the
-        zero-padding (the fixed-slot twin of the paged path's mask).
-        Feeds ``req.replay`` when set (re-admission after a membership
-        change: prompt + generated prefix — greedy decode is per-lane
-        deterministic, so the rebuilt KV continues the exact stream)."""
-        replay = (req.replay if req.replay is not None
-                  else np.asarray(req.prompt, np.int32))
-        # recycled slot: zero per-lane recurrent state (SSM families) so
-        # the previous occupant cannot leak into this request
-        cache = registry.reset_cache_lane(self.cfg, cache, slot.index)
-        fed = np.zeros((self.batch_slots,), bool)
-        fed[slot.index] = True
-        fed = jnp.asarray(fed)
-        for tok in replay[:-1]:
-            tokens = self._token_batch(slot.index, int(tok))
-            pos = self.slots.positions()
-            _, cache = self._jit_decode(self.params, cache, tokens, pos, fed)
-            slot.pos += 1
-        if req.replay is None:
-            req.out_tokens = []
-        req.next_input = int(replay[-1])
-        return cache
-
-    def _token_batch(self, slot_index: int, token: int):
-        toks = np.zeros((self.batch_slots, 1), np.int32)
-        toks[slot_index, 0] = token
-        return jnp.asarray(toks)
-
     # -- fused decode (continuation-chained steps) ---------------------------
     def _schedule_decode(self) -> None:
         with self._lock:
@@ -728,7 +626,7 @@ class ServeEngine:
             # yet — keep the prefill chain alive (the admit task runs the
             # next chunk; _admit_scheduled bounds this to one outstanding
             # task)
-            reschedule = (self.paged and not busy and not blocked
+            reschedule = (not busy and not blocked
                           and not self._active and bool(self._prefilling))
         if launched:
             self._attach_step(step, agreq, cache)
@@ -756,26 +654,17 @@ class ServeEngine:
         step = Request(tag="decode-step")
         self._current_step = step
         try:
-            if self.paged:
-                self._ensure_capacity_locked()
+            self._ensure_capacity_locked()
             toks = np.zeros((self.batch_slots, 1), np.int32)
             for idx, req in self._active.items():
                 toks[idx, 0] = req.next_input
             pos = self.slots.positions()
-            if self.paged:
-                fed = np.zeros((self.batch_slots,), bool)
-                for idx in self._active:
-                    fed[idx] = True
-                out, cache = self._jit_decode(
-                    self.params, self.slots.cache, jnp.asarray(toks), pos,
-                    self.slots.block_tables(), jnp.asarray(fed))
-            else:
-                fed = np.zeros((self.batch_slots,), bool)
-                for idx in self._active:
-                    fed[idx] = True
-                out, cache = self._jit_decode(
-                    self.params, self.slots.cache, jnp.asarray(toks), pos,
-                    jnp.asarray(fed))
+            fed = np.zeros((self.batch_slots,), bool)
+            for idx in self._active:
+                fed[idx] = True
+            out, cache = self._jit_decode(
+                self.params, self.slots.cache, jnp.asarray(toks), pos,
+                self.slots.block_tables(), jnp.asarray(fed))
             if self._jit_gather is not None:     # native-sharded gather
                 out = self._jit_gather(out)
             agreq = None
@@ -983,7 +872,7 @@ class ServeEngine:
         for idx, req in list(self._active.items()):
             self._active.pop(idx)
             lane = self.slots.slots[idx]
-            if self.paged and lane.pos > 0:
+            if lane.pos > 0:
                 try:
                     req.kv_ckpt = self.slots.checkpoint_lane(idx)
                 except Exception as ckpt_exc:   # fall back to full replay
@@ -1003,14 +892,8 @@ class ServeEngine:
             req.prefill_pos = 0
             req.slot_index = -1
             req.last_enqueued_at = now
-        if self.paged:
-            for req in moved:
-                self._backlog.push(req)
-        else:
-            # front of the arrivals queue, oldest first: residents resume
-            # before fresh arrivals are admitted
-            for req in sorted(moved, key=lambda r: r.seq, reverse=True):
-                self._arrivals.appendleft(req)
+        for req in moved:
+            self._backlog.push(req)
         return len(moved)
 
     def _apply_membership_change(self) -> None:
@@ -1080,37 +963,27 @@ class ServeEngine:
                 # left to gather
                 self.mesh = None
                 self._sharded = False
-        if self.paged:
-            self.slots = PagedKVCache(self.cfg, self.batch_slots,
-                                      self.max_seq,
-                                      block_size=self._kv_block_size,
-                                      num_blocks=self._kv_blocks,
-                                      mesh=self.mesh)
-        else:
-            self.slots = SlotCache(self.cfg, self.batch_slots, self.max_seq,
-                                   mesh=self.mesh)
+        self.slots = PagedKVCache(self.cfg, self.batch_slots,
+                                  self.max_seq,
+                                  block_size=self._kv_block_size,
+                                  num_blocks=self._kv_blocks,
+                                  mesh=self.mesh)
         if self.mesh is not None:
             self.params = jax.device_put(
                 self.params, jax.sharding.NamedSharding(self.mesh, P()))
         else:
             self.params = jax.device_put(self.params, jax.devices()[0])
         if self._sharded:
-            self._build_sharded_decode(self._collective_chunks,
-                                       self._collective_round_batch)
+            self._build_sharded_decode()
             if self.coll is not None:
                 self._bridge_streams = [self.admit_stream,
                                         self.decode_stream, self.coll.stream]
         else:
             cfg = self.cfg
             self._jit_gather = None
-            if self.paged:
-                self._jit_decode = jax.jit(
-                    lambda p, c, t, q, bt, fd: registry.decode_step_paged(
-                        p, cfg, c, t, q, bt, fd))
-            else:
-                self._jit_decode = jax.jit(
-                    lambda p, c, t, q, fd: registry.decode_step(
-                        p, cfg, c, t, q, fd))
+            self._jit_decode = jax.jit(
+                lambda p, c, t, q, bt, fd: registry.decode_step_paged(
+                    p, cfg, c, t, q, bt, fd))
 
     # -- latency accounting ------------------------------------------------
     def _record_locked(self, req: GenRequest, failed: bool) -> None:

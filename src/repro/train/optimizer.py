@@ -69,6 +69,63 @@ def global_norm(tree):
     return jnp.sqrt(sq)
 
 
+def init_shards(shards) -> AdamWState:
+    """Optimizer state over FSDP flat shard buckets: mu/nu are lists
+    shaped like the shard stacks (ZeRO — each rank holds moments only
+    for the block it owns)."""
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=[jnp.zeros_like(s) for s in shards],
+        nu=[jnp.zeros_like(s) for s in shards],
+    )
+
+
+def apply_shards(cfg: AdamWConfig, state: AdamWState, shards, grad_shards,
+                 *, axis: str | None = None, grad_scale: float = 1.0):
+    """One AdamW step over flat shard buckets (the ZeRO step: each rank
+    updates only the parameter block it owns).
+
+    ``shards``/``grad_shards`` are lists of same-shaped local shard
+    arrays (under ``shard_map`` each rank sees its own ``[1, W/n]``
+    row).  AdamW is elementwise, so flat-bucket math equals per-leaf
+    math given the same clip scale and schedule; the one cross-rank
+    quantity is the global grad norm, assembled from local
+    sum-of-squares with a ``psum`` over ``axis`` (pass None when the
+    stacks are resident unsharded).  ``grad_scale`` folds the
+    data-parallel mean into the step (reduce-scatter delivers sums).
+    Zero-padded bucket tails stay zero: grad 0 keeps mu/nu 0 and weight
+    decay multiplies a zero param.
+
+    Returns ``(new_shards, new_state, metrics)``.
+    """
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32) * grad_scale))
+             for g in grad_shards)
+    if axis is not None:
+        sq = jax.lax.psum(sq, axis)
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * grad_scale * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(shards, grad_shards, state.mu, state.nu)]
+    new_shards = [o[0] for o in out]
+    new_state = AdamWState(step, [o[1] for o in out], [o[2] for o in out])
+    return new_shards, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
 def apply(cfg: AdamWConfig, state: AdamWState, params, grads):
     """One AdamW step. Returns (new_params, new_state, metrics)."""
     gnorm = global_norm(grads)

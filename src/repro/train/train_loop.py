@@ -24,7 +24,8 @@ import numpy as np
 
 from repro.core import ProgressEngine, ProgressExecutor, global_engine, \
     jax_future
-from repro.collectives.nonblocking import MembershipError
+from repro.collectives.nonblocking import CollectiveSpec, MembershipError, \
+    spec_from_legacy
 from repro.core.request import Request
 from repro.distributed.fault_tolerance import StepWatchdog, StragglerDetector
 from repro.train import optimizer as opt_mod
@@ -42,23 +43,57 @@ class TrainLoopConfig:
     # >0: that many background progress workers drive prefetch/checkpoint/
     # watchdog tasks (§4.4); 0: the overlap window self-progresses as before
     progress_workers: int = 0
-    # gradient-reduction backend: "native" keeps the reduction inside the
-    # jitted step (GSPMD); "user" runs it as nonblocking user-space
-    # collectives on the progress engine (requires a split step — see
-    # ``UserCollectiveStep``) so reduction overlaps host-driven progress
-    collective_backend: str = "native"
-    collective_algorithm: str = "ring"
-    collective_chunks: int = 4
-    # rounds fused per jitted dispatch in the user backend's schedules;
-    # 0 = auto from bucket size (small buckets collapse to one dispatch,
-    # large keep per-round pipelining).  The reducer caches one
-    # persistent schedule per grad bucket either way.
-    collective_round_batch: int = 0
+    # gradient-reduction configuration: ONE CollectiveSpec covers
+    # backend ("native" keeps the reduction inside the jitted step,
+    # "user" runs nonblocking user-space collectives on the progress
+    # engine — requires a split step, see ``UserCollectiveStep``/
+    # ``FsdpStep``), algorithm, chunk count, and round batching.  The
+    # collective_* fields below are the deprecated spelling: still
+    # accepted for one release (a DeprecationWarning fires once), still
+    # readable afterwards (mirrored from the resolved spec).
+    collective_spec: "CollectiveSpec | None" = None
+    collective_backend: "str | None" = None
+    collective_algorithm: "str | None" = None
+    collective_chunks: "int | None" = None
+    collective_round_batch: "int | None" = None
     # pipeline-parallel schedule this loop runs under ("none", "gpipe",
-    # "1f1b") — a record field like collective_backend: the launcher
-    # carries the machinery (PipelineSchedule per data row), the config
-    # is what logs/stats report
+    # "1f1b") — a record field like collective_spec.backend: the
+    # launcher carries the machinery (PipelineSchedule per data row),
+    # the config is what logs/stats report
     pipeline: str = "none"
+
+    _DEFAULT_SPEC = CollectiveSpec(backend="native", algorithm="ring",
+                                   chunks=4, round_batch=0)
+
+    def __post_init__(self):
+        spec = self.collective_spec
+        legacy = (("backend", self.collective_backend),
+                  ("algorithm", self.collective_algorithm),
+                  ("chunks", self.collective_chunks),
+                  ("round_batch", self.collective_round_batch))
+        if spec is not None:
+            # mirrored legacy fields (from a previous resolve, or a
+            # dataclasses.replace round-trip) must agree with the spec;
+            # a *conflicting* explicit legacy kwarg is a config bug
+            for name, val in legacy:
+                if val is not None and val != getattr(spec, name):
+                    raise ValueError(
+                        f"TrainLoopConfig: collective_spec.{name}="
+                        f"{getattr(spec, name)!r} conflicts with legacy "
+                        f"collective_{name}={val!r}; pass one, not both")
+        else:
+            spec = spec_from_legacy(
+                None, surface="TrainLoopConfig",
+                backend=self.collective_backend,
+                algorithm=self.collective_algorithm,
+                chunks=self.collective_chunks,
+                round_batch=self.collective_round_batch,
+                default=self._DEFAULT_SPEC)
+        self.collective_spec = spec
+        self.collective_backend = spec.backend
+        self.collective_algorithm = spec.algorithm
+        self.collective_chunks = spec.chunks
+        self.collective_round_batch = spec.round_batch
 
 
 @dataclasses.dataclass
@@ -71,10 +106,55 @@ class UserCollectiveStep:
     ``EngineGradReducer``) allreduces the grads on the collective
     stream while the engine also progresses prefetch/checkpoint tasks;
     ``apply_fn(params, opt_state, grads, stacked_metrics) -> (params,
-    opt_state, metrics)`` finishes the step."""
+    opt_state, metrics)`` finishes the step.  ``spec`` (a
+    :class:`~repro.collectives.nonblocking.CollectiveSpec`) records the
+    reduction configuration the reducer was built with — the same
+    config object every other surface takes."""
     grad_fn: Callable
     apply_fn: Callable
     reducer: Any
+    spec: "CollectiveSpec | None" = None
+
+    def __post_init__(self):
+        if self.spec is not None and not isinstance(self.spec,
+                                                    CollectiveSpec):
+            raise TypeError(
+                f"spec must be a CollectiveSpec, got "
+                f"{type(self.spec).__name__} (legacy kwargs belong on "
+                f"TrainLoopConfig)")
+
+
+@dataclasses.dataclass
+class FsdpStep:
+    """Split train step for ZeRO-style FSDP on the user backend.
+
+    Parameters live as *flat shard stacks* (``FsdpLayout.shard_params``
+    — one ``[n, W/n]`` array per bucket, rank ``r`` owning row ``r``):
+
+    * ``grad_fn(gathered_flats, batch) -> (stacked_metrics,
+      flat_grads)`` — takes the all-gathered full flat buckets
+      ``[n, W]``, unflattens *inside* the jitted program, and returns
+      per-device metrics plus stacked flat grad buckets ``[n, W]``;
+    * ``reducer`` (an :class:`~repro.collectives.overlap.FsdpReducer`)
+      reduce-scatters the grad buckets — each rank receives only its
+      own block — and prefetches the next step's params via
+      continuation-chained persistent all-gathers;
+    * ``apply_fn(shards, opt_state, grad_shards, stacked_metrics) ->
+      (shards, opt_state, metrics)`` — the sharded optimizer step.
+
+    ``spec`` as in :class:`UserCollectiveStep`."""
+    grad_fn: Callable
+    apply_fn: Callable
+    reducer: Any
+    spec: "CollectiveSpec | None" = None
+
+    def __post_init__(self):
+        if self.spec is not None and not isinstance(self.spec,
+                                                    CollectiveSpec):
+            raise TypeError(
+                f"spec must be a CollectiveSpec, got "
+                f"{type(self.spec).__name__} (legacy kwargs belong on "
+                f"TrainLoopConfig)")
 
 
 class Trainer:
@@ -99,11 +179,16 @@ class Trainer:
         # carries the machinery — they must agree or the caller gets the
         # wrong backend silently
         if split_step is not None and cfg.collective_backend != "user":
-            cfg = dataclasses.replace(cfg, collective_backend="user")
+            cfg = dataclasses.replace(
+                cfg,
+                collective_spec=dataclasses.replace(cfg.collective_spec,
+                                                    backend="user"),
+                collective_backend="user")
         elif split_step is None and cfg.collective_backend == "user":
             raise ValueError(
                 "collective_backend='user' requires a split_step "
-                "(UserCollectiveStep with grad_fn/apply_fn/reducer)")
+                "(UserCollectiveStep or FsdpStep with "
+                "grad_fn/apply_fn/reducer)")
         self.step_fn = step_fn
         self.split_step = split_step
         self.params = params
@@ -122,6 +207,7 @@ class Trainer:
         self.recoveries = 0
         self.metrics_log: list[dict] = []
         self._pending_ckpt: Request | None = None
+        self._pending_gather = None     # FsdpStep: chained param prefetch
         self._hung = False
 
     # ------------------------------------------------------------------
@@ -134,6 +220,37 @@ class Trainer:
         reduction = self.split_step.reducer.iallreduce_tree(grads)
         return stacked_metrics, \
             reduction.wait(timeout=self.cfg.watchdog_limit_s)
+
+    def _split_step_once(self, batch):
+        """One split-backend step; sets params/opt_state, returns metrics.
+        Raises MembershipError retryably (params not yet updated)."""
+        limit = self.cfg.watchdog_limit_s
+        if isinstance(self.split_step, FsdpStep):
+            ss = self.split_step
+            if self._pending_gather is None:
+                # cold start (or post-remesh): no prefetch in flight —
+                # issue the continuation-chained gather and wait it here
+                self._pending_gather = ss.reducer.igather(self.params)
+            flats = self._pending_gather.wait(timeout=limit)
+            self._pending_gather = None
+            stacked_metrics, flat_grads = ss.grad_fn(flats, batch)
+            grad_shards = ss.reducer.ireduce_scatter(flat_grads) \
+                .wait(timeout=limit)
+            self.params, self.opt_state, metrics = ss.apply_fn(
+                self.params, self.opt_state, grad_shards, stacked_metrics)
+            # prefetch the next step's full params NOW: each bucket's
+            # persistent all-gather start is chained off that bucket's
+            # compute future, so gather rounds progress on the collective
+            # stream behind the optimizer tail, the metrics wait, host
+            # logging and the next batch fetch (§4.6 continuations)
+            self._pending_gather = ss.reducer.igather(
+                self.params, after=[ss.reducer.future(s)
+                                    for s in self.params])
+            return metrics
+        stacked_metrics, grads = self._reduced_grads(batch)
+        self.params, self.opt_state, metrics = self.split_step.apply_fn(
+            self.params, self.opt_state, grads, stacked_metrics)
+        return metrics
 
     def maybe_resume(self):
         if not self.cfg.resume:
@@ -178,7 +295,7 @@ class Trainer:
                 # engine overlap the reduction with prefetch/checkpoint
                 # progress (and the tail of backward, still in flight)
                 try:
-                    stacked_metrics, grads = self._reduced_grads(batch)
+                    metrics = self._split_step_once(batch)
                 except MembershipError as exc:
                     if self.remesh_fn is None:
                         raise
@@ -186,16 +303,16 @@ class Trainer:
                     # collective): rebuild the split step on survivors
                     # and retry THIS step's batch.  Params were not yet
                     # updated, so the retried step computes exactly what
-                    # a from-checkpoint restart at this step would.
+                    # a from-checkpoint restart at this step would.  An
+                    # in-flight FSDP prefetch died with the old epoch —
+                    # drop it; the retry re-gathers on the new mesh.
+                    self._pending_gather = None
                     self.split_step, self.params, self.opt_state = \
                         self.remesh_fn(exc, self.params, self.opt_state)
                     self.recoveries += 1
                     self._hung = False
                     self.watchdog.arm()
-                    stacked_metrics, grads = self._reduced_grads(batch)
-                self.params, self.opt_state, metrics = \
-                    self.split_step.apply_fn(self.params, self.opt_state,
-                                             grads, stacked_metrics)
+                    metrics = self._split_step_once(batch)
             else:
                 # nonblocking dispatch — jit returns before device finishes
                 self.params, self.opt_state, metrics = self.step_fn(

@@ -1,0 +1,263 @@
+"""The unified CollectiveSpec config surface.
+
+One frozen record — ``CollectiveSpec(backend, algorithm, chunks,
+round_batch)`` — is accepted by every configuration surface
+(``ServeEngine``, ``TrainLoopConfig``, ``UserCollectiveStep`` /
+``FsdpStep``, the module-level handle factories, the p2p family), with:
+
+* eager validation at construction (bad values never reach tracing);
+* a one-release deprecation shim: the legacy ``collective_*`` kwargs
+  keep working but emit exactly ONE ``DeprecationWarning`` per surface
+  per process, and mixing spec + legacy raises;
+* a canonical import surface at ``repro.collectives``.
+"""
+import warnings
+
+import pytest
+
+from repro.collectives import nonblocking as NB
+from repro.collectives.nonblocking import CollectiveSpec, spec_from_legacy
+
+
+@pytest.fixture(autouse=True)
+def _reset_warn_once():
+    """Each test sees the warn-once latch fresh (it is per-process)."""
+    saved = set(NB._legacy_kwargs_warned)
+    NB._legacy_kwargs_warned.clear()
+    yield
+    NB._legacy_kwargs_warned.clear()
+    NB._legacy_kwargs_warned.update(saved)
+
+
+# ---------------------------------------------------------------------------
+# The record itself
+# ---------------------------------------------------------------------------
+
+class TestCollectiveSpec:
+    def test_defaults(self):
+        spec = CollectiveSpec()
+        assert (spec.backend, spec.algorithm, spec.chunks,
+                spec.round_batch) == ("native", "ring", 1, None)
+        assert not spec.user
+        assert CollectiveSpec(backend="user").user
+
+    def test_eager_validation(self):
+        with pytest.raises(ValueError, match="backend"):
+            CollectiveSpec(backend="bogus")
+        with pytest.raises(ValueError, match="algorithm"):
+            CollectiveSpec(algorithm="bogus")
+        with pytest.raises(ValueError, match="chunks"):
+            CollectiveSpec(chunks=0)
+        with pytest.raises(ValueError, match="round_batch"):
+            CollectiveSpec(round_batch=-1)
+
+    def test_frozen_and_hashable(self):
+        spec = CollectiveSpec()
+        with pytest.raises(Exception):
+            spec.backend = "user"
+        assert len({CollectiveSpec(), CollectiveSpec(),
+                    CollectiveSpec(chunks=2)}) == 2
+
+    def test_resolve_pow2_fallback(self):
+        spec = CollectiveSpec(algorithm="halving_doubling")
+        assert spec.resolve(4) is spec
+        with pytest.warns(RuntimeWarning, match="power-of-two"):
+            assert spec.resolve(3).algorithm == "ring"
+
+
+# ---------------------------------------------------------------------------
+# The deprecation shim
+# ---------------------------------------------------------------------------
+
+class TestSpecFromLegacy:
+    def test_spec_passthrough(self):
+        spec = CollectiveSpec(backend="user", chunks=3)
+        assert spec_from_legacy(spec, surface="T") is spec
+
+    def test_legacy_kwargs_warn_once_per_surface(self):
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            got = spec_from_legacy(None, surface="T", backend="user",
+                                   chunks=2)
+        assert got == CollectiveSpec(backend="user", chunks=2)
+        # second use of the SAME surface: silent
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            spec_from_legacy(None, surface="T", backend="native")
+        # a DIFFERENT surface still warns
+        with pytest.warns(DeprecationWarning):
+            spec_from_legacy(None, surface="U", chunks=4)
+
+    def test_no_legacy_no_warning(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            assert spec_from_legacy(None, surface="T") == CollectiveSpec()
+
+    def test_mixing_spec_and_legacy_raises(self):
+        with pytest.raises(ValueError, match="not both"):
+            spec_from_legacy(CollectiveSpec(), surface="T", chunks=2)
+
+    def test_default_base(self):
+        base = CollectiveSpec(chunks=4, round_batch=0)
+        assert spec_from_legacy(None, surface="T", default=base) is base
+        with pytest.warns(DeprecationWarning):
+            got = spec_from_legacy(None, surface="T", backend="user",
+                                   default=base)
+        # legacy kwargs override the default base fieldwise
+        assert got == CollectiveSpec(backend="user", chunks=4,
+                                     round_batch=0)
+
+
+# ---------------------------------------------------------------------------
+# The four config surfaces
+# ---------------------------------------------------------------------------
+
+class TestSurfaces:
+    def test_train_loop_config_accepts_spec(self):
+        from repro.train.train_loop import TrainLoopConfig
+        spec = CollectiveSpec(backend="user", chunks=2)
+        cfg = TrainLoopConfig(total_steps=1, collective_spec=spec)
+        assert cfg.collective_spec is spec
+        # the mirrored legacy fields resolve FROM the spec
+        assert cfg.collective_backend == "user"
+        assert cfg.collective_chunks == 2
+
+    def test_train_loop_config_legacy_warns_once(self):
+        from repro.train.train_loop import TrainLoopConfig
+        with pytest.warns(DeprecationWarning):
+            cfg = TrainLoopConfig(total_steps=1,
+                                  collective_backend="user")
+        assert cfg.collective_spec.user
+        # chunks/round_batch keep the loop's tuned defaults
+        assert cfg.collective_spec.chunks == 4
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            TrainLoopConfig(total_steps=1, collective_backend="native")
+
+    def test_train_loop_config_conflict_raises(self):
+        from repro.train.train_loop import TrainLoopConfig
+        with pytest.raises(ValueError, match="conflicts"):
+            TrainLoopConfig(total_steps=1,
+                            collective_spec=CollectiveSpec(backend="user"),
+                            collective_backend="native")
+
+    def test_train_loop_config_replace_roundtrip(self):
+        import dataclasses
+
+        from repro.train.train_loop import TrainLoopConfig
+        cfg = TrainLoopConfig(total_steps=2,
+                              collective_spec=CollectiveSpec(chunks=2))
+        # replace() re-runs __post_init__ with the mirrored legacy
+        # fields populated — they agree with the spec, so no raise
+        cfg2 = dataclasses.replace(cfg, total_steps=5)
+        assert cfg2.collective_spec == cfg.collective_spec
+
+    def test_step_records_reject_non_spec(self):
+        from repro.train.train_loop import FsdpStep, UserCollectiveStep
+        with pytest.raises(TypeError, match="CollectiveSpec"):
+            UserCollectiveStep(lambda: 0, lambda: 0, None, spec="user")
+        with pytest.raises(TypeError, match="CollectiveSpec"):
+            FsdpStep(lambda: 0, lambda: 0, None, spec="user")
+
+    def test_serve_engine_legacy_warns_and_spec_conflict(self):
+        import jax
+
+        from repro.configs import get_config
+        from repro.core import ProgressEngine
+        from repro.models import registry
+        from repro.serve.engine import ServeEngine
+        from conftest import reduce_cfg
+        cfg = reduce_cfg(get_config("qwen2-0.5b"))
+        params = registry.init_params(cfg, jax.random.PRNGKey(0))
+        with pytest.warns(DeprecationWarning):
+            srv = ServeEngine(cfg, params, ProgressEngine(),
+                              batch_slots=2, max_seq=32,
+                              collective_chunks=2)
+        assert srv.collective_spec.chunks == 2
+        srv.close(timeout=60)
+        with pytest.raises(ValueError, match="not both"):
+            ServeEngine(cfg, params, ProgressEngine(), batch_slots=2,
+                        max_seq=32, collective_spec=CollectiveSpec(),
+                        collective_backend="native")
+
+    def test_serve_engine_slots_mode_retired(self):
+        import jax
+
+        from repro.configs import get_config
+        from repro.core import ProgressEngine
+        from repro.models import registry
+        from repro.serve.engine import ServeEngine
+        from conftest import reduce_cfg
+        cfg = reduce_cfg(get_config("qwen2-0.5b"))
+        params = registry.init_params(cfg, jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="retired"):
+            ServeEngine(cfg, params, ProgressEngine(), batch_slots=2,
+                        max_seq=32, cache_mode="slots")
+
+
+# ---------------------------------------------------------------------------
+# p2p: spec=/partition= split
+# ---------------------------------------------------------------------------
+
+class TestP2PSpecShim:
+    def test_partition_via_spec_warns_and_works(self):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.collectives.p2p import _resolve_spec_partition
+        with pytest.warns(DeprecationWarning, match="partition"):
+            spec, part = _resolve_spec_partition(P("x"), None)
+        assert spec is None and part == P("x")
+        # warn-once: second call is silent
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            _resolve_spec_partition(P("y"), None)
+
+    def test_native_collective_spec_rejected(self):
+        from repro.collectives.p2p import _resolve_spec_partition
+        with pytest.raises(ValueError, match="user backend"):
+            _resolve_spec_partition(CollectiveSpec(backend="native"), None)
+
+    def test_user_spec_accepted(self):
+        from repro.collectives.p2p import _resolve_spec_partition
+        spec = CollectiveSpec(backend="user")
+        got, part = _resolve_spec_partition(spec, None)
+        assert got is spec and part is None
+
+
+# ---------------------------------------------------------------------------
+# The canonical import surface
+# ---------------------------------------------------------------------------
+
+def test_collectives_import_surface():
+    import repro.collectives as C
+    for name in C.__all__:
+        assert getattr(C, name) is not None, name
+    # the one-shot + persistent families all present, one naming shape
+    for op in ("iallreduce", "ireduce_scatter", "iallgather", "ialltoall"):
+        assert callable(getattr(C, op))
+    for fac in ("allreduce_init", "reduce_scatter_init", "allgather_init",
+                "alltoall_init", "channel_init", "send_init", "recv_init"):
+        assert callable(getattr(C, fac))
+    # spec/overlap machinery re-exported
+    assert C.CollectiveSpec is CollectiveSpec
+    assert C.S is __import__("repro.collectives.schedules",
+                             fromlist=["x"])
+
+
+def test_factories_accept_spec_kwarg():
+    import inspect
+
+    import repro.collectives as C
+    for fac in (C.iallreduce, C.ireduce_scatter, C.iallgather,
+                C.ialltoall, C.allreduce_init, C.reduce_scatter_init,
+                C.allgather_init, C.alltoall_init, C.channel_init,
+                C.send_init, C.recv_init):
+        params = inspect.signature(fac).parameters
+        assert "spec" in params, fac.__name__
+        assert params["spec"].kind is inspect.Parameter.KEYWORD_ONLY, \
+            fac.__name__
+    for fac in (C.allreduce_init, C.reduce_scatter_init,
+                C.allgather_init, C.alltoall_init, C.channel_init,
+                C.send_init, C.recv_init):
+        params = inspect.signature(fac).parameters
+        for kw in ("epoch", "stream", "engine"):
+            assert kw in params, (fac.__name__, kw)

@@ -5,14 +5,15 @@ Correctness story, in three tiers:
 * model level — ``decode_step_paged`` is BIT-identical to the monolithic
   ``decode_step`` for every family (the paged gather view reduces over
   the same positions once the causal mask zeroes the rest);
-* engine level — the paged ``ServeEngine`` (chunked prefill interleaved
-  with decode, admission from a length-bucketed backlog, preemption
-  under block pressure) produces token streams identical to the
-  fixed-slot engine, because greedy decode is per-lane deterministic and
-  replay rebuilds exactly the prompt + generated prefix;
+* engine level — the ``ServeEngine`` (chunked prefill interleaved with
+  decode, admission from a length-bucketed backlog, preemption under
+  block pressure) produces token streams invariant to the pool shape: a
+  deliberately tight pool matches a roomy preemption-free one, because
+  greedy decode is per-lane deterministic and replay rebuilds exactly
+  the prompt + generated prefix;
 * trace level (slow) — a Poisson arrival trace with hundreds of mixed
   length requests through a deliberately tight block pool: every request
-  completes, streams match the fixed-slot reference, preemptions stay
+  completes, streams match the roomy-pool reference, preemptions stay
   bounded, and the backlog drains exactly when blocks free.
 """
 import time
@@ -76,7 +77,7 @@ def _serve(cfg, params, prompts, max_new, *, batch_slots=4, max_seq=32,
 
 @pytest.mark.parametrize("arch", ["qwen2-0.5b", "mamba2-1.3b",
                                   "zamba2-1.2b"])
-def test_paged_decode_matches_slot_decode(arch):
+def test_paged_decode_matches_monolithic_decode(arch):
     cfg = reduce_cfg(get_config(arch), dtype="float32")
     params = registry.init_params(cfg, jax.random.PRNGKey(0))
     B, S, bs = 3, 16, 4
@@ -123,16 +124,19 @@ def test_fed_mask_freezes_ssm_state():
 
 
 # ---------------------------------------------------------------------------
-# Engine level: paged continuous batching == fixed-slot streams
+# Engine level: token streams are invariant to the pool shape
 # ---------------------------------------------------------------------------
 
 class TestPagedEngineEquivalence:
-    def test_streams_match_fixed_slots(self, tiny):
+    def test_streams_match_roomy_pool(self, tiny):
+        """Default (roomy, preemption-free) pool vs small blocks: the
+        same streams, because block granularity is invisible to greedy
+        decode."""
         cfg, params = tiny
         prompts = _mixed_prompts(10, cfg.vocab_size)
         ref, _, _, _ = _serve(cfg, params, prompts, 5)
         got, lat, sched, _ = _serve(cfg, params, prompts, 5,
-                                    cache_mode="paged", kv_block_size=8)
+                                    kv_block_size=8)
         assert got == ref
         assert lat.completed == 10 and lat.failed == 0
         assert sched.admitted >= 10 and sched.prefill_calls > 0
@@ -145,7 +149,7 @@ class TestPagedEngineEquivalence:
         prompts = _mixed_prompts(12, cfg.vocab_size)
         ref, _, _, _ = _serve(cfg, params, prompts, 12)
         got, lat, sched, reqs = _serve(
-            cfg, params, prompts, 12, cache_mode="paged",
+            cfg, params, prompts, 12,
             kv_block_size=4, kv_blocks=11, prefill_chunk=4)
         assert got == ref
         assert lat.completed == 12 and lat.failed == 0
@@ -156,17 +160,15 @@ class TestPagedEngineEquivalence:
         assert sched.preemptions < 12 * 12
         assert all(r.preemptions < 12 for r in reqs)
 
-    def test_paged_admits_more_than_slots_at_equal_bytes(self, tiny):
-        """The tentpole claim in miniature: same cache bytes, strictly
-        higher sustained concurrency (block granularity means short
-        requests stop paying max_seq)."""
+    def test_wide_lanes_beat_lane_cap_at_equal_bytes(self, tiny):
+        """The continuous-batching claim in miniature: on a pool worth
+        2 lanes x 32 positions (16 blocks of 4), opening 8 lanes
+        sustains more than 2 residents — block granularity means short
+        requests stop paying max_seq."""
         cfg, params = tiny
         prompts = _mixed_prompts(16, cfg.vocab_size, lo=2, hi=8)
-        # slots: 2 lanes x 32 positions.  paged: same 64 positions as
-        # 16 blocks of 4, but 8 lanes.
-        _, _, _, _ = _serve(cfg, params, prompts, 4, batch_slots=2)
         got, lat, sched, _ = _serve(
-            cfg, params, prompts, 4, batch_slots=8, cache_mode="paged",
+            cfg, params, prompts, 4, batch_slots=8,
             kv_block_size=4, kv_blocks=17)
         assert lat.completed == 16 and lat.failed == 0
         assert sched.peak_resident > 2
@@ -175,7 +177,7 @@ class TestPagedEngineEquivalence:
         cfg, params = tiny
         prompts = _mixed_prompts(8, cfg.vocab_size)
         _, lat, _, _ = _serve(cfg, params, prompts, 4, batch_slots=2,
-                              cache_mode="paged", kv_block_size=8)
+                              kv_block_size=8)
         # 8 requests through 2 lanes: later arrivals waited measurably
         assert lat.queued_ms_mean is not None
         assert lat.queued_ms_p99 >= lat.queued_ms_p50 >= 0.0
@@ -189,7 +191,7 @@ class TestBacklogAndBlocks:
         cfg, params = tiny
         eng = ProgressEngine()
         srv = ServeEngine(cfg, params, eng, batch_slots=2, max_seq=32,
-                          cache_mode="paged", kv_block_size=4,
+                          kv_block_size=4,
                           kv_blocks=9)           # 8 usable = one max_seq
         # resident consumes 6 of 8 blocks (prompt 21 -> ceil(21/4) = 6)
         big = GenRequest("big", np.arange(1, 22, dtype=np.int32),
@@ -221,7 +223,7 @@ class TestBacklogAndBlocks:
         cfg, params = tiny
         prompts = _mixed_prompts(10, cfg.vocab_size, lo=6, hi=12, seed=3)
         _, lat, sched, reqs = _serve(
-            cfg, params, prompts, 10, batch_slots=4, cache_mode="paged",
+            cfg, params, prompts, 10, batch_slots=4,
             kv_block_size=4, kv_blocks=11, prefill_chunk=4)
         assert lat.completed == 10
         assert sched.preemptions > 0
@@ -265,7 +267,7 @@ class TestPagedChaos:
         cfg, params = tiny
         eng = ProgressEngine()
         srv = ServeEngine(cfg, params, eng, batch_slots=4, max_seq=32,
-                          cache_mode="paged", kv_block_size=4, **kw)
+                          kv_block_size=4, **kw)
         return srv, eng
 
     def test_prefill_chunk_failure_frees_blocks(self, tiny):
@@ -376,8 +378,8 @@ class TestPagedChaos:
 def test_arrival_trace_stress(tiny):
     """Hundreds of mixed-length requests through a tight paged pool:
     every request completes, token streams are bit-identical to the
-    fixed-slot engine on the same trace, preemptions happen and stay
-    bounded, and nothing leaks."""
+    roomy preemption-free pool on the same trace, preemptions happen
+    and stay bounded, and nothing leaks."""
     cfg, params = tiny
     N = 500
     rng = np.random.RandomState(42)
@@ -390,7 +392,7 @@ def test_arrival_trace_stress(tiny):
     assert ref_lat.completed == N
     got, lat, sched, reqs = _serve(
         cfg, params, prompts, 4, batch_slots=8, max_seq=32,
-        cache_mode="paged", kv_block_size=4, kv_blocks=25,
+        kv_block_size=4, kv_blocks=25,
         prefill_chunk=4, submit_gap=list(gaps))
     assert got == ref
     assert lat.completed == N and lat.failed == 0
@@ -405,7 +407,7 @@ def test_arrival_trace_stress(tiny):
 @pytest.mark.parametrize("n_devices", [1, 2, 4])
 def test_arrival_trace_sharded(n_devices):
     """The paged scheduler under model-axis-sharded decode: same trace,
-    streams identical to the fixed-slot sharded engine."""
+    tight pool streams identical to the roomy sharded engine."""
     out = run_with_devices(f"""
         import jax, numpy as np
         from repro import compat
@@ -438,9 +440,9 @@ def test_arrival_trace_sharded(n_devices):
             return [list(r.out_tokens) for r in reqs], lat
 
         ref, _ = serve()
-        got, lat = serve(cache_mode='paged', kv_block_size=4, kv_blocks=17,
+        got, lat = serve(kv_block_size=4, kv_blocks=17,
                          prefill_chunk=4)
-        assert got == ref, 'paged sharded diverged from slot sharded'
+        assert got == ref, 'tight sharded pool diverged from roomy'
         assert lat.completed == 40 and lat.failed == 0
         print('PAGED_SHARDED_TRACE_OK')
     """, n_devices=n_devices)
@@ -452,13 +454,14 @@ def test_trace_ssm_concurrency_consistent():
     """SSM/hybrid families: concurrent continuous batching produces the
     same streams as serial (one-resident-at-a-time) service — the fed
     mask and lane reset isolate recurrent state across interleavings.
-    (The fixed-slot engine is not the reference here: its prefill leaks
-    garbage tokens into other lanes' SSM states by construction.)"""
+    (This is why the retired fixed-slot engine could not serve as a
+    reference: its prefill leaked garbage tokens into other lanes'
+    SSM states by construction.)"""
     for arch in ("mamba2-1.3b", "zamba2-1.2b"):
         cfg = reduce_cfg(get_config(arch), dtype="float32")
         params = registry.init_params(cfg, jax.random.PRNGKey(0))
         prompts = _mixed_prompts(6, cfg.vocab_size, seed=5)
-        kw = dict(cache_mode="paged", kv_block_size=8)
+        kw = dict(kv_block_size=8)
         serial = []
         eng = ProgressEngine()
         srv = ServeEngine(cfg, params, eng, batch_slots=4, max_seq=32, **kw)
@@ -490,11 +493,11 @@ class TestTrendServeCbRows:
         cur = tmp_path / "cur.json"
         prev.write_text(json.dumps(self._summary(
             [("serve_cb_ttft_paged", 1000.0),
-             ("serve_cb_p99_slots", 5000.0),
+             ("serve_cb_p99_lane4", 5000.0),
              ("cb_gain_concurrency", 3.0)])))
         cur.write_text(json.dumps(self._summary(
             [("serve_cb_ttft_paged", 2500.0),      # regressed
-             ("serve_cb_p99_slots", 5100.0),       # ok
+             ("serve_cb_p99_lane4", 5100.0),       # ok
              ("cb_gain_concurrency", 1.0)])))      # ratio: untracked
         prev_rows = trend.load_rows(str(prev), trend.DEFAULT_PREFIXES)
         cur_rows = trend.load_rows(str(cur), trend.DEFAULT_PREFIXES)
@@ -503,4 +506,4 @@ class TestTrendServeCbRows:
         by_name = {e["name"]: e
                    for e in trend.compare(prev_rows, cur_rows, 0.2)}
         assert by_name["serve_cb_ttft_paged"]["status"] == "regressed"
-        assert by_name["serve_cb_p99_slots"]["status"] == "ok"
+        assert by_name["serve_cb_p99_lane4"]["status"] == "ok"

@@ -690,3 +690,100 @@ def test_train_chaos_trajectory_matches_restart_bitforbit():
         print("TRAIN_BITIDENT_OK")
     """, n_devices=4, timeout=600)
     assert "TRAIN_BITIDENT_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# 2-D mesh FSDP membership: in-flight starts fail once, remesh replans
+# ---------------------------------------------------------------------------
+
+@pytest.mark.multidevice
+def test_fsdp_invalidate_mid_reduce_scatter_2d_mesh():
+    """On a (2,2) data x model mesh, invalidating the epoch while a
+    persistent FSDP reduce-scatter is in flight fails that start exactly
+    once with a retryable MembershipError; ``remesh`` onto the surviving
+    (2,1) mesh replans the handles (fresh schedules for the new mesh,
+    same data axis) and the reducer computes exact sums again."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.collectives import nonblocking as NB
+        from repro.collectives.overlap import FsdpReducer
+        from repro.core import ProgressEngine
+
+        eng = ProgressEngine()
+        epoch = NB.MembershipEpoch(n_devices=4)
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 2),
+                    ("data", "model"))
+        spec = NB.CollectiveSpec(backend="user", chunks=2)
+        red = FsdpReducer(mesh, "data", engine=eng, spec=spec,
+                          epoch=epoch)
+
+        g = jnp.arange(2 * 8, dtype=jnp.int32).reshape(2, 8)
+        r = red.ireduce_scatter([g])
+        assert not r.is_complete
+        epoch.invalidate(survivors=2, reason="chaos")
+        failed_after = red.coll.failed
+        assert failed_after >= 1
+        try:
+            r.wait(timeout=30)
+            raise AssertionError("expected MembershipError")
+        except NB.MembershipError as e:
+            assert e.survivors == 2 and e.version == 1
+        # exactly once: a second invalidation does not double-fail
+        epoch.invalidate(survivors=2)
+        assert red.coll.failed == failed_after
+
+        # survivors' mesh drops the model axis; the data axis (and so
+        # the shard widths) survives, handles replan lazily
+        mesh2 = Mesh(np.array(jax.devices()[:2]).reshape(2, 1),
+                     ("data", "model"))
+        red.remesh(mesh2)
+        assert red.remeshes == 1 and red.axis_size == 2
+        out = red.ireduce_scatter([g]).wait(timeout=60)
+        ref = np.asarray(g[0] + g[1]).reshape(2, 4)
+        assert np.array_equal(np.asarray(out[0]), ref), out
+        sh = jnp.arange(2 * 4, dtype=jnp.int32).reshape(2, 4)
+        full = red.gather([sh], timeout=60)
+        assert np.array_equal(np.asarray(full[0]),
+                              np.asarray(sh).reshape(1, 8).repeat(2, 0))
+        red.close()
+        print("FSDP_RS_EPOCH_OK")
+    """, n_devices=4)
+    assert "FSDP_RS_EPOCH_OK" in out
+
+
+@pytest.mark.multidevice
+def test_fsdp_invalidate_mid_prefetch_gather_2d_mesh():
+    """The other in-flight shape: a continuation-chained prefetch
+    all-gather killed mid-start on a (2,2) mesh fails exactly once and
+    surfaces the MembershipError from FsdpGather.wait."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.collectives import nonblocking as NB
+        from repro.collectives.overlap import FsdpReducer
+        from repro.core import ProgressEngine
+
+        eng = ProgressEngine()
+        epoch = NB.MembershipEpoch(n_devices=4)
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 2),
+                    ("data", "model"))
+        red = FsdpReducer(mesh, "data", engine=eng,
+                          spec=NB.CollectiveSpec(backend="user"),
+                          epoch=epoch)
+        sh = jnp.arange(2 * 4, dtype=jnp.int32).reshape(2, 4)
+        gather = red.igather([sh])
+        epoch.invalidate(survivors=2, reason="chaos")
+        failed_after = red.coll.failed
+        assert failed_after >= 1
+        try:
+            gather.wait(timeout=30)
+            raise AssertionError("expected MembershipError")
+        except NB.MembershipError as e:
+            assert e.survivors == 2
+        epoch.invalidate(survivors=2)
+        assert red.coll.failed == failed_after     # no double-fail
+        red.close()
+        print("FSDP_AG_EPOCH_OK")
+    """, n_devices=4)
+    assert "FSDP_AG_EPOCH_OK" in out

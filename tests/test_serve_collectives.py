@@ -136,7 +136,7 @@ def test_sharded_serve_rejects_bad_configs(rng):
     with pytest.raises(ValueError, match="axis"):
         ServeEngine(cfg, params, ProgressEngine(), batch_slots=2,
                     max_seq=32, mesh=mesh, model_axis="nope")
-    with pytest.raises(ValueError, match="collective_backend"):
+    with pytest.raises(ValueError, match="backend"):
         ServeEngine(cfg, params, ProgressEngine(), batch_slots=2,
                     max_seq=32, collective_backend="bogus")
 
