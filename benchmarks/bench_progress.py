@@ -674,6 +674,70 @@ def fsdp_training():
     return rows
 
 
+_DEBUG_OVERHEAD_SNIPPET = """
+import os, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+
+from repro import compat
+from repro.collectives import nonblocking as NB
+from repro.core import ProgressEngine, debug
+
+
+def step_time(reps=50):
+    # fresh stack per measurement: make_lock picks plain Lock vs
+    # OrderedLock at construction, so the debug run must build its own
+    mesh = compat.make_mesh((4,), ("x",))
+    eng = ProgressEngine()
+    coll = NB.UserCollectives(eng)
+    x = jnp.ones((4, 4096), jnp.float32)
+    h = coll.allreduce_init(x, mesh, "x")
+    for _ in range(5):
+        h.start(x).wait(timeout=120)            # warm: compiled + cached
+    t0 = time.monotonic()
+    for _ in range(reps):
+        h.start(x).wait(timeout=120)
+    us = (time.monotonic() - t0) / reps * 1e6
+    h.close()
+    coll.close()
+    return us
+
+
+off = step_time()
+prev = debug.set_debug(True)
+on = step_time()
+debug.set_debug(prev)
+tax = (on - off) / off * 100.0
+print(f"debug_overhead_off,{off:.2f},warmed persistent allreduce step")
+print(f"debug_overhead_on,{on:.2f},REPRO_DEBUG tax {tax:+.1f}% (target <5)")
+"""
+
+
+def debug_overhead():
+    """REPRO_DEBUG=1 tax on a warmed persistent-allreduce step
+    (debug_overhead_* rows, 4 host devices in a child): same step timed
+    with the checkers dormant and armed — the lifecycle hooks and
+    ordered locks must stay under the ~5%% budget that makes running
+    tier-1 under REPRO_DEBUG=1 in CI viable."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    env.pop("REPRO_DEBUG", None)      # the child toggles it itself
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(_DEBUG_OVERHEAD_SNIPPET)],
+            capture_output=True, text=True, timeout=1200, env=env)
+        stdout, rc, err = proc.stdout, proc.returncode, proc.stderr or ""
+    except subprocess.TimeoutExpired as e:
+        stdout, rc, err = e.stdout or "", -1, "timeout after 1200s"
+    rows = [l for l in stdout.splitlines() if l.startswith("debug_overhead")]
+    if rc != 0:
+        rows.append(f"debug_overhead,nan,FAILED(rc={rc}): {err[-200:]}")
+    return rows
+
+
 _PIPELINE_SNIPPET = """
 import os, time
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -888,4 +952,5 @@ def run():
     rows += pipeline_parallelism()
     rows += fsdp_training()
     rows += recovery()
+    rows += debug_overhead()
     return rows

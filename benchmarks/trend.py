@@ -46,9 +46,13 @@ import sys
 # user-backend persistent handles) plus the prefetch-overlap fraction
 # of the continuation-chained gathers; overlap is a fraction where
 # HIGHER is better, so a drop renders as 'improved' — read the note.
+# debug_overhead rows time a warmed persistent-allreduce step with
+# the REPRO_DEBUG checkers dormant (off) and armed (on); gating both
+# keeps the debug tax itself from silently growing past the <5%
+# budget that makes REPRO_DEBUG=1 CI runs viable.
 DEFAULT_PREFIXES = ("fig7", "fig13", "fig14_native", "fig14_user",
                     "serve_decode", "serve_cb", "recovery", "pipeline",
-                    "fsdp")
+                    "fsdp", "debug_overhead")
 DEFAULT_THRESHOLD = 0.20
 
 

@@ -643,6 +643,84 @@ def pipeline_1f1b():
     sched.close()
 
 
+def progress_safety_rules():
+    """Progress-safety rules (PR 10): the static analyzer
+    (``repro.analysis.progress_lint``) and the ``REPRO_DEBUG=1`` runtime
+    checkers (``repro.core.debug``) enforce four rule families.  One
+    deliberate violation per rule, each caught by the tooling:
+
+        PL001  blocking call reachable from a continuation body
+        PL002  persistent-handle lifecycle (the MPI *_init/start machine)
+        PL003  lock-order inversion across function bodies
+        PL004  donated buffer reused after the donating jit call
+    """
+    import textwrap
+
+    from repro.analysis import progress_lint
+    from repro.core.debug import (HandleTracker, LifecycleError,
+                                  LockOrderError, LockOrderGraph,
+                                  OrderedLock)
+
+    def demo(rule, src):
+        fs = progress_lint.lint_source(textwrap.dedent(src))
+        assert [f.rule for f in fs] == [rule], fs
+        print(f"  {rule} caught: {fs[0].message}")
+
+    # PL001 — a continuation that blocks stalls the progress thread
+    demo("PL001", """
+        def setup(q, req):
+            q.attach(req, lambda r: r.wait())
+    """)
+    # PL002 — double-start on a persistent handle (MPI forbids it)
+    demo("PL002", """
+        def f(coll, mesh, x):
+            h = coll.allreduce_init(x, mesh, "i")
+            h.start(x)
+            h.start(x)
+    """)
+    # PL003 — two call paths nest the same locks in opposite orders
+    demo("PL003", """
+        class E:
+            def a(self, q):
+                with self._lock:
+                    with q._qlock: pass
+            def b(self, q):
+                with q._qlock:
+                    with self._lock: pass
+    """)
+    # PL004 — a jit-donated buffer is dead after the call
+    demo("PL004", """
+        import jax
+        def step(carry):
+            f = jax.jit(lambda c: c + 1, donate_argnums=(0,))
+            out = f(carry)
+            return carry + out
+    """)
+
+    # runtime halves: the same rules where only execution shows the order.
+    # Lock order — the BA attempt raises on sight, no deadlock needed:
+    g = LockOrderGraph()
+    a, b = OrderedLock("A", g), OrderedLock("B", g)
+    with a:
+        with b:
+            pass
+    try:
+        with b:
+            a.acquire()
+    except LockOrderError as e:
+        print(f"  runtime lock-order: {str(e).split('.')[0]}")
+    # Handle lifecycle — the tracker enforces the same declared machine
+    # the lint loads (single source of truth in repro.core.debug):
+    t = HandleTracker()
+    h = type("H", (), {})()
+    t.track(h, "DemoHandle")
+    t.event(h, "close")
+    try:
+        t.event(h, "start")
+    except LifecycleError as e:
+        print(f"  runtime lifecycle: {e}")
+
+
 if __name__ == "__main__":
     eng = ProgressEngine()
     listing_1_1_collated_subsystems(eng)
@@ -659,4 +737,5 @@ if __name__ == "__main__":
     fault_tolerance()
     pipeline_1f1b()
     fsdp_sharded_training()
+    progress_safety_rules()
     print("tour OK")

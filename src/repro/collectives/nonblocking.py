@@ -84,6 +84,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.collectives import schedules as S
+from repro.core import debug
 from repro.core.continuations import DEFERRED, INLINE, ContinuationQueue
 from repro.core.engine import DONE, ProgressEngine, Stream, global_engine
 from repro.core.futures import jax_future
@@ -614,7 +615,7 @@ class MembershipEpoch:
     it would deadlock an executor worker against itself)."""
 
     def __init__(self, n_devices: int | None = None):
-        self._lock = threading.Lock()
+        self._lock = debug.make_lock("MembershipEpoch._lock")
         self.version = 0
         self.n_devices = (n_devices if n_devices is not None
                           else len(jax.devices()))
@@ -1489,7 +1490,15 @@ class UserCollectives:
             t0 = time.monotonic()
             ex = self.executor
             while self.stream.pending or self.queue.ready:
-                if ex is not None and ex.running and ex.owns(self.stream):
+                # parking is only correct when SOMEONE ELSE progresses the
+                # stream: a close() running on the very worker that owns it
+                # (a membership-rebuild continuation, say) would sleep
+                # until the timeout waiting for itself — progress inline
+                # instead (streams are serial contexts, progress is safe
+                # from any thread)
+                if ex is not None and ex.running and ex.owns(self.stream) \
+                        and threading.get_ident() \
+                        not in ex.worker_thread_idents():
                     time.sleep(50e-6)
                 else:
                     self.engine.progress(self.stream)
@@ -1578,6 +1587,7 @@ class PersistentCollective:
         self._epoch_version = epoch.version if epoch is not None else 0
         if epoch is not None:
             epoch.register(self)
+        debug.track_handle(self, "PersistentCollective")
         if warmup:
             self.start(jnp.zeros(plan.shape, plan.dtype)).wait(timeout=600)
             self.starts = 0          # the warm-up doesn't count
@@ -1644,6 +1654,14 @@ class PersistentCollective:
                               self.plan.join, defer=defer)
         self.active = req
         self.starts += 1
+        # REPRO_DEBUG lifecycle mirror: runs after the guards above, so a
+        # legal start always lands; complete_probe settles a retired
+        # previous start, racing_invalidate tolerates the benign
+        # version-check/invalidation window (the epoch still fails this
+        # request through req._fail_lock)
+        debug.handle_event(self, "start", kind="PersistentCollective",
+                           complete_probe=lambda: True,
+                           racing_invalidate=True)
         return req
 
     def cancel(self) -> None:
@@ -1663,6 +1681,7 @@ class PersistentCollective:
         completes the request first wins; the loser observes
         ``is_complete`` and backs off).  Cheap by design: callable from
         a subsystem poll."""
+        debug.handle_event(self, "invalidate", kind="PersistentCollective")
         req = self.active
         if req is None:
             return
@@ -1693,6 +1712,8 @@ class PersistentCollective:
             raise RuntimeError(
                 f"persistent {self.plan.op}: rebuild with a live start "
                 f"in flight; cancel it (or let the epoch fail it) first")
+        debug.handle_event(self, "rebuild", kind="PersistentCollective",
+                           complete_probe=lambda: True)
         plan = self._replan(mesh, axis if axis is not None
                             else self.plan.axis)
         self.plan = plan
@@ -1712,6 +1733,7 @@ class PersistentCollective:
         """Release the handle: further starts raise.  The underlying
         round programs stay in the shared schedule cache (other handles
         with the same signature keep using them)."""
+        debug.handle_event(self, "close", kind="PersistentCollective")
         self._closed = True
         self.active = None
 

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.collectives import schedules as S
+from repro.core import debug
 
 
 # ---------------------------------------------------------------------------
@@ -629,6 +630,7 @@ class FsdpReducer:
             NB.UserCollectives(engine, executor=executor, name="fsdp",
                                epoch=epoch)
         self._persistent: dict = {}
+        debug.track_handle(self, "FsdpReducer")
         # prefetch-overlap accounting (totals across completed gathers)
         self.gathers = 0
         self.gather_blocked_s = 0.0
@@ -670,6 +672,10 @@ class FsdpReducer:
     def ireduce_scatter(self, flat_grads) -> FsdpReduction:
         """Issue one persistent reduce-scatter per flat grad bucket
         ``[n, W]``; returns immediately."""
+        # close() clears the handle cache but nothing else marks the
+        # reducer unusable — without the debug tracker a closed reducer
+        # silently rebuilds fresh handles on a possibly-closed context
+        debug.handle_check_open(self, "ireduce_scatter", kind="FsdpReducer")
         requests = []
         for bi, g in enumerate(flat_grads):
             handle = self._handle("rs", bi, g)
@@ -683,6 +689,7 @@ class FsdpReducer:
     def igather(self, shards, after=None) -> FsdpGather:
         """Chained param prefetch over the shard stacks ``[n, W/n]``;
         see :class:`FsdpGather` for the two chain shapes."""
+        debug.handle_check_open(self, "igather", kind="FsdpReducer")
         return FsdpGather(self, shards, after=after)
 
     def future(self, arrays):
@@ -705,6 +712,8 @@ class FsdpReducer:
         re-shards params/optimizer state for the new axis size (shard
         widths change) — ``FsdpLayout`` + ``shard_params`` on the
         gathered tree."""
+        debug.handle_event(self, "rebuild", kind="FsdpReducer",
+                           complete_probe=lambda: True)
         for handle in self._persistent.values():
             handle.close()
         self._persistent.clear()
@@ -717,6 +726,7 @@ class FsdpReducer:
         return self
 
     def close(self) -> None:
+        debug.handle_event(self, "close", kind="FsdpReducer")
         for handle in self._persistent.values():
             handle.close()
         self._persistent.clear()

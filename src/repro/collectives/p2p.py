@@ -53,6 +53,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.collectives import nonblocking as NB
 from repro.collectives import schedules as S
+from repro.core import debug
 from repro.collectives.nonblocking import (CollectiveRequest, MembershipEpoch,
                                            PersistentCollective,
                                            UserCollectives, _Plan,
@@ -209,6 +210,7 @@ class P2PChannel:
         # before their hop — the two MPI matching queues, channel-local
         self._unclaimed: collections.deque = collections.deque()
         self._waiting: collections.deque = collections.deque()
+        debug.track_handle(self, "P2PChannel")
 
     @property
     def stale(self) -> bool:
@@ -229,6 +231,10 @@ class P2PChannel:
         return sreq
 
     def _start_recv(self) -> CollectiveRequest:
+        # the recv half never touches the persistent handle, so (unlike
+        # send) nothing guards it in production: a recv posted on a
+        # closed channel would park forever — the debug tracker raises
+        debug.handle_check_open(self, "recv.start", kind="P2PChannel")
         rreq = self.ctx._overlay_request("recv")
         self.recv_starts += 1
         with self._lock:
@@ -248,12 +254,15 @@ class P2PChannel:
         :meth:`PersistentCollective.rebuild`); unmatched halves from the
         dead epoch are dropped."""
         self.persistent.rebuild(mesh, axis, warmup=warmup)
+        debug.handle_event(self, "rebuild", kind="P2PChannel",
+                           complete_probe=lambda: True)
         with self._lock:
             self._unclaimed.clear()
             self._waiting.clear()
         return self
 
     def close(self) -> None:
+        debug.handle_event(self, "close", kind="P2PChannel")
         self.persistent.close()
 
     def __repr__(self):

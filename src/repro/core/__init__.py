@@ -29,6 +29,18 @@ from repro.core.continuations import (
     ContinuationQueue,
 )
 from repro.core import stats
+from repro.core import debug
+from repro.core.debug import (
+    HANDLES,
+    LOCK_GRAPH,
+    HandleTracker,
+    LifecycleError,
+    LockOrderError,
+    LockOrderGraph,
+    OrderedLock,
+    debug_enabled,
+    set_debug,
+)
 
 __all__ = [
     "DONE", "NOPROGRESS", "PENDING",
@@ -42,4 +54,7 @@ __all__ = [
     "INLINE", "DEFERRED", "Continuation", "ContinuationQueue",
     "chain", "io_future", "jax_future",
     "stats",
+    "debug", "debug_enabled", "set_debug",
+    "OrderedLock", "LockOrderError", "LockOrderGraph", "LOCK_GRAPH",
+    "HandleTracker", "LifecycleError", "HANDLES",
 ]

@@ -36,6 +36,7 @@ import collections
 import threading
 from typing import Any, Callable, Iterable, Optional
 
+from repro.core import debug
 from repro.core.engine import DONE, NOPROGRESS, ProgressEngine, Stream
 from repro.core.request import CompletionCounter, PollRequest, Request
 
@@ -83,9 +84,14 @@ class ContinuationQueue:
         self.stream = stream
         self.policy = policy
         self.name = name
-        self._lock = threading.Lock()
+        self._lock = debug.make_lock("ContinuationQueue._lock")
         self._pending: list[Continuation] = []
         self._ready: collections.deque[Continuation] = collections.deque()
+        # thread idents currently inside drain(): a continuation body
+        # calling drain() on its own queue would recurse through
+        # _execute forever (or deadlock on backpressure) — detect and
+        # raise instead
+        self._draining: set[int] = set()
         self._registered = False
         self._closed = False
         self.enqueued = 0
@@ -244,15 +250,34 @@ class ContinuationQueue:
         """Execute up to ``max_items`` ready continuations (all if None)
         on the calling thread.  Bounded drains are the backpressure knob:
         a latency-sensitive owner drains a few per iteration instead of
-        being flooded by a completion burst."""
+        being flooded by a completion burst.
+
+        Re-entrancy is an error: a continuation body calling ``drain()``
+        on its own queue raises RuntimeError (recorded in
+        ``callback_errors`` by the enclosing ``_execute``) instead of
+        recursing unboundedly — chain follow-up work with ``then``/
+        ``attach`` and let the *outer* drain run it."""
+        me = threading.get_ident()
+        with self._lock:
+            if me in self._draining:
+                raise RuntimeError(
+                    f"re-entrant drain on continuation queue "
+                    f"{self.name!r}: a continuation body called drain() "
+                    f"on the queue executing it — attach follow-up work "
+                    f"instead of draining inline")
+            self._draining.add(me)
         n = 0
-        while max_items is None or n < max_items:
+        try:
+            while max_items is None or n < max_items:
+                with self._lock:
+                    if not self._ready:
+                        break
+                    cont = self._ready.popleft()
+                self._execute(cont)
+                n += 1
+        finally:
             with self._lock:
-                if not self._ready:
-                    break
-                cont = self._ready.popleft()
-            self._execute(cont)
-            n += 1
+                self._draining.discard(me)
         return n
 
     def _execute(self, cont: Continuation) -> None:

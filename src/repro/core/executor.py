@@ -32,6 +32,7 @@ import threading
 import time
 from typing import Optional
 
+from repro.core import debug
 from repro.core.engine import ProgressEngine, Stream
 from repro.core.stats import WorkerStats
 
@@ -87,7 +88,7 @@ class ProgressExecutor:
         self.drain_continuations = drain_continuations
         self.continuation_max_drain = continuation_max_drain
         self._workers = [_Worker(i) for i in range(num_workers)]
-        self._assign_lock = threading.Lock()
+        self._assign_lock = debug.make_lock("ProgressExecutor._assign_lock")
         self._stop = threading.Event()
         self._running = False
         self.errors: list[tuple[str, BaseException]] = []

@@ -75,6 +75,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import DEFERRED, DONE, NOPROGRESS, ProgressEngine, Request
+from repro.core import debug
 from repro.core.continuations import POLICIES, ContinuationQueue
 from repro.core.executor import ProgressExecutor
 from repro.core.stats import SchedulerStats
@@ -299,7 +300,7 @@ class ServeEngine:
         # slot state are shared.  Prefill itself runs OUTSIDE the lock
         # (staged cache, published atomically) so submit() and the
         # detokenize path never block behind a token-by-token prompt loop.
-        self._lock = threading.Lock()
+        self._lock = debug.make_lock("ServeEngine._lock")
         self._decode_inflight = None
         self._current_step = None      # the step whose continuation owns state
         self._admit_scheduled = False
